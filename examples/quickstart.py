@@ -1,0 +1,44 @@
+"""Quickstart: ByzantineSGD on a strongly convex problem, 60 seconds.
+
+Reproduces the paper's core picture: with a quarter of the workers
+adversarial, naive mini-batch SGD is destroyed; ByzantineSGD removes the
+attackers within a few iterations and converges as if they were never
+there.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.solver import SolverConfig, run_sgd
+from repro.data.problems import make_quadratic_problem
+
+
+def main():
+    prob = make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0)
+    key = jax.random.PRNGKey(0)
+
+    print(f"problem: d=16 quadratic, sigma=1, L=8, V=1, D={prob.D:.2f}")
+    print(f"workers: m=16, alpha=0.25 (4 Byzantine, sign-flip attack)\n")
+    print(f"{'aggregator':20s} {'f(x̄)−f(x*)':>12s} {'alive':>6s} {'good dropped':>13s}")
+
+    for agg in ["mean", "krum", "coordinate_median", "byzantine_sgd"]:
+        cfg = SolverConfig(m=16, T=2000, eta=0.05, alpha=0.25,
+                           aggregator=agg, attack="sign_flip")
+        res = run_sgd(prob, cfg, key)
+        gap = float(prob.f(res.x_avg) - prob.f(prob.x_star))
+        print(f"{agg:20s} {gap:12.6f} {int(res.n_alive[-1]):4d}/16 "
+              f"{str(bool(res.ever_filtered_good)):>13s}")
+
+    print("\nByzantineSGD's per-worker martingale statistics (A_i, B_i) also")
+    print("catch attackers that per-iteration rules cannot — try")
+    print("  attack='hidden_shift'  (inside-the-noise colluders, Section 1.3)")
+    cfg = SolverConfig(m=16, T=2000, eta=0.05, alpha=0.25,
+                       aggregator="byzantine_sgd", attack="hidden_shift")
+    res = run_sgd(prob, cfg, key)
+    gap = float(prob.f(res.x_avg) - prob.f(prob.x_star))
+    print(f"hidden_shift → gap {gap:.6f}, alive {int(res.n_alive[-1])}/16 "
+          f"(damage bounded per Lemma 3.6)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving demo: batched prefill + greedy decode across architecture
+families (GQA ring cache, MLA latent cache, Mamba2 O(1) state, Jamba
+hybrid) — the CPU-scale twin of the decode-shape dry-runs.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch.serve import run_serving
+
+
+def main():
+    for arch in ["internlm2-1.8b", "deepseek-v2-lite-16b", "mamba2-130m",
+                 "jamba-v0.1-52b"]:
+        run_serving(arch, batch=2, prompt_len=48, gen_tokens=12, cache_len=128)
+
+
+if __name__ == "__main__":
+    main()

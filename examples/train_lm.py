@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~100M-parameter language model for a few
+hundred steps with Byzantine-robust data-parallel aggregation.
+
+Uses the internlm2 family at d_model=512 / 24 layers (~100M params with the
+92k vocab), 8 workers of which 2 are sign-flipping Byzantine. On a TPU pod
+the identical code path runs the full config across the (data, model) mesh
+(see repro.launch.dryrun for the production lowering).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--attack", default="sign_flip")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/byz_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: d_model=512, 24 layers, vocab 92544
+    state, hist = run_training(
+        "internlm2-1.8b", reduced=True, d_model=args.d_model,
+        workers=args.workers, per_worker_batch=2, seq_len=args.seq_len,
+        steps=args.steps, alpha=args.alpha, attack=args.attack,
+        aggregator="byzantine_sgd", guard_mode="exact", lr=3e-3,
+        ckpt_dir=args.ckpt_dir, log_every=10,
+    )
+    first, last = hist[0], hist[-1]
+    print(f"\nloss: {first['loss_good_workers']:.4f} → {last['loss_good_workers']:.4f}")
+    print(f"byzantine workers alive at end: {int(last['byz_alive'])}")
+    print(f"honest workers ever filtered: {max(int(h['good_filtered']) for h in hist)}")
+    print(f"checkpoint written to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

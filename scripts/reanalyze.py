@@ -1,0 +1,91 @@
+"""Re-derive roofline terms from saved .hlo.gz files (no recompilation).
+
+Lets parser improvements (repro.roofline.hlo_cost) propagate to the whole
+table instantly, and prints op-level attribution for chosen records.
+
+    PYTHONPATH=src python scripts/reanalyze.py                    # refresh all JSONs
+    PYTHONPATH=src python scripts/reanalyze.py --attribute TAG    # top contributors
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.analysis import model_flops
+from repro.roofline.hlo_cost import cost_from_hlo_text
+from repro.roofline.hw import TPU_V5E
+
+
+def reanalyze_one(json_path: str, verbose: bool = False):
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    try:
+        with gzip.open(hlo_path, "rt") as f:
+            text = f.read()
+    except FileNotFoundError:
+        return None
+    rec = json.load(open(json_path))
+    cost = cost_from_hlo_text(text)
+    hw = TPU_V5E
+    t_c = cost.flops / hw.peak_flops_bf16
+    t_m = cost.bytes_accessed / hw.hbm_bw
+    t_n = cost.collective_bytes / (hw.ici_bw_per_link * hw.ici_links)
+    bott = max([("compute", t_c), ("memory", t_m), ("collective", t_n)],
+               key=lambda kv: kv[1])[0]
+    shape = INPUT_SHAPES[rec["shape"]]
+    mf = model_flops(get_config(rec["arch"]), shape)
+    rec["cost"] = {
+        "hlo_flops_per_device": cost.flops,
+        "hlo_bytes_per_device": cost.bytes_accessed,
+    }
+    rec["collectives"] = {
+        "total_bytes_per_device": cost.collective_bytes,
+        "by_kind": cost.collective_by_kind,
+        "by_op": cost.collective_by_op,
+    }
+    rec["roofline"] = {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+        "bottleneck": bott, "model_flops": mf,
+        "useful_ratio": mf / max(rec["n_chips"] * cost.flops, 1.0),
+    }
+    rec["bytes_by_op"] = cost.bytes_by_op
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    if verbose:
+        print(f"{rec['arch']} {rec['shape']} {'mp' if rec['multi_pod'] else 'sp'} "
+              f"opts={rec.get('opts')} → c={t_c*1e3:.2f}ms m={t_m*1e3:.2f}ms "
+              f"n={t_n*1e3:.2f}ms [{bott}]")
+    return rec
+
+
+def attribute(tag: str):
+    for path in sorted(glob.glob(f"experiments/dryrun/*{tag}*.json")):
+        rec = reanalyze_one(path, verbose=True)
+        if rec is None:
+            continue
+        print("  -- collectives by op (GB/dev/step) --")
+        for k, v in list(rec["collectives"].get("by_op", {}).items())[:10]:
+            print(f"    {v/1e9:9.2f}  {k[:100]}")
+        print("  -- HBM bytes by op (GB/dev/step) --")
+        for k, v in list(rec.get("bytes_by_op", {}).items())[:10]:
+            print(f"    {v/1e9:9.2f}  {k[:100]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--attribute", default=None, help="substring of record tag")
+    args = ap.parse_args()
+    if args.attribute:
+        attribute(args.attribute)
+        return
+    n = 0
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        if reanalyze_one(path, verbose=True) is not None:
+            n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro.checkpoint — npz-based pytree checkpointing."""
+from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

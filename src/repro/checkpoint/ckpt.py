@@ -1,0 +1,83 @@
+"""Minimal, dependency-free pytree checkpointing.
+
+Leaves are stored in one ``.npz`` per step keyed by the flattened tree path
+(``a/b/0/c``), plus a tiny JSON manifest with the step and key order, so a
+checkpoint restores into an identical pytree structure (the template tree
+provides structure + dtypes; shapes are validated on restore).
+
+This intentionally targets the single-host CPU harness — a real multi-pod
+deployment would swap in a tensor-store backend behind the same interface,
+which is why the interface is (tree, step, dir) and nothing else.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    items = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(v) for i, (k, v) in enumerate(items)}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    np.savez(path + ".tmp.npz", **arrays)
+    os.replace(path + ".tmp.npz", path)
+    manifest = {"step": step, "keys": [k for k, _ in items]}
+    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any, step: int | None = None) -> tuple[Any, int]:
+    """Restore into the structure (and dtypes) of ``template``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+
+    tmpl_items = _flatten_with_paths(template)
+    tmpl_keys = [k for k, _ in tmpl_items]
+    if tmpl_keys != manifest["keys"]:
+        raise ValueError(
+            "checkpoint structure mismatch:\n"
+            f"  missing: {set(manifest['keys']) - set(tmpl_keys)}\n"
+            f"  extra:   {set(tmpl_keys) - set(manifest['keys'])}"
+        )
+    leaves = []
+    for i, (k, t) in enumerate(tmpl_items):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(t)):
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {np.shape(t)}")
+        leaves.append(jax.numpy.asarray(arr, dtype=t.dtype))
+    _, treedef = jax.tree_util.tree_flatten(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

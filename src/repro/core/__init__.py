@@ -1,0 +1,57 @@
+"""repro.core — the paper's contribution (Alistarh, Allen-Zhu, Li, NeurIPS'18).
+
+Faithful, composable JAX implementation of ByzantineSGD (Algorithm 1), the
+Section-4 strongly-convex epoch solver, the Section-5 lower-bound hard
+instances, the baseline robust aggregators the paper compares against, and
+the Byzantine attack zoo used to exercise them.
+"""
+from repro.core.byzantine_sgd import (
+    GuardConfig,
+    GuardState,
+    ByzantineGuard,
+    counting_median_index,
+    pairwise_sq_dists_from_gram,
+)
+from repro.core.aggregators import (
+    AGGREGATORS,
+    aggregate_mean,
+    aggregate_coordinate_median,
+    aggregate_trimmed_mean,
+    aggregate_krum,
+    aggregate_geometric_median,
+    aggregate_medoid,
+    get_aggregator,
+)
+from repro.core.attacks import ATTACKS, apply_attack, get_attack
+from repro.core.solver import ByzantineSGDSolver, SolverConfig, run_sgd
+from repro.core.epoch_solver import EpochSolverConfig, solve_strongly_convex
+from repro.core.lower_bound import (
+    distinguishing_experiment_linear,
+    distinguishing_experiment_strongly_convex,
+)
+
+__all__ = [
+    "GuardConfig",
+    "GuardState",
+    "ByzantineGuard",
+    "counting_median_index",
+    "pairwise_sq_dists_from_gram",
+    "AGGREGATORS",
+    "ATTACKS",
+    "aggregate_mean",
+    "aggregate_coordinate_median",
+    "aggregate_trimmed_mean",
+    "aggregate_krum",
+    "aggregate_geometric_median",
+    "aggregate_medoid",
+    "get_aggregator",
+    "apply_attack",
+    "get_attack",
+    "ByzantineSGDSolver",
+    "SolverConfig",
+    "run_sgd",
+    "EpochSolverConfig",
+    "solve_strongly_convex",
+    "distinguishing_experiment_linear",
+    "distinguishing_experiment_strongly_convex",
+]

@@ -1,0 +1,125 @@
+"""Baseline gradient-aggregation rules the paper compares against (Table 1,
+Section 1.4), plus plain mean.
+
+All rules share the signature ``agg(grads: (m, d)) -> (d,)`` (stateless) so
+they can be swapped into both the convex solver and the distributed trainer.
+ByzantineSGD itself is *stateful* (cross-iteration martingales) and lives in
+:mod:`repro.core.byzantine_sgd`; :func:`get_aggregator` wraps it behind the
+same interface via a closure over its state.
+
+References:
+  * coordinate-wise median / trimmed mean — Yin et al., "Byzantine-robust
+    distributed learning: towards optimal statistical rates" (Median-GD in
+    Table 1 of our paper).
+  * Krum — Blanchard et al., NeurIPS'17 [ref 8].
+  * geometric median (of means) — Chen, Su, Xu [ref 11]; Weiszfeld iteration.
+  * medoid — minimum-total-distance point, the cheap geometric-median proxy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.byzantine_sgd import pairwise_sq_dists_from_gram
+
+
+def aggregate_mean(grads: jax.Array) -> jax.Array:
+    """Plain mini-batch mean — the α = 0 baseline; not Byzantine-robust."""
+    return jnp.mean(grads, axis=0)
+
+
+def aggregate_coordinate_median(grads: jax.Array) -> jax.Array:
+    """Coordinate-wise median (Yin et al.'s Median-GD aggregation)."""
+    return jnp.median(grads, axis=0)
+
+
+def aggregate_trimmed_mean(grads: jax.Array, trim_fraction: float = 0.1) -> jax.Array:
+    """Coordinate-wise β-trimmed mean: drop the β·m largest and smallest
+    entries per coordinate, average the rest (Yin et al., trimmed-mean-GD)."""
+    m = grads.shape[0]
+    b = int(trim_fraction * m)
+    if 2 * b >= m:
+        raise ValueError(f"trim_fraction {trim_fraction} trims everything for m={m}")
+    s = jnp.sort(grads, axis=0)
+    if b == 0:
+        return jnp.mean(s, axis=0)
+    return jnp.mean(s[b : m - b], axis=0)
+
+
+def _pairwise_sq_dists(grads: jax.Array) -> jax.Array:
+    g32 = grads.astype(jnp.float32)
+    return pairwise_sq_dists_from_gram(g32 @ g32.T)
+
+
+def aggregate_krum(grads: jax.Array, n_byzantine: int, multi_k: int = 1) -> jax.Array:
+    """(Multi-)Krum [Blanchard et al. 2017].
+
+    Score(i) = sum of squared distances to i's m − f − 2 nearest neighbours
+    (f = n_byzantine); select the multi_k lowest-scoring gradients and
+    average them.  Local complexity O(m²(d + log m)) — the cost the paper
+    criticizes in Section 1.4; our benchmark table measures it.
+    """
+    m = grads.shape[0]
+    n_neighbors = max(m - n_byzantine - 2, 1)
+    d2 = _pairwise_sq_dists(grads)
+    d2 = d2.at[jnp.arange(m), jnp.arange(m)].set(jnp.inf)  # exclude self
+    nearest = jnp.sort(d2, axis=1)[:, :n_neighbors]
+    scores = jnp.sum(nearest, axis=1)
+    if multi_k == 1:
+        return grads[jnp.argmin(scores)]
+    _, idx = jax.lax.top_k(-scores, multi_k)
+    return jnp.mean(grads[idx], axis=0)
+
+
+def aggregate_medoid(grads: jax.Array) -> jax.Array:
+    """The gradient minimizing total distance to all others."""
+    d2 = _pairwise_sq_dists(grads)
+    scores = jnp.sum(jnp.sqrt(d2), axis=1)
+    return grads[jnp.argmin(scores)]
+
+
+def aggregate_geometric_median(
+    grads: jax.Array, n_iters: int = 8, eps: float = 1e-8
+) -> jax.Array:
+    """Geometric median via Weiszfeld iterations, warm-started at the medoid
+    (guarantees we start within the convex hull and avoids the classic
+    Weiszfeld singularity at data points via eps-smoothing)."""
+    g32 = grads.astype(jnp.float32)
+    y0 = aggregate_medoid(g32)
+
+    def body(y, _):
+        dist = jnp.sqrt(jnp.sum((g32 - y[None, :]) ** 2, axis=1) + eps)
+        w = 1.0 / dist
+        y_new = (w @ g32) / jnp.sum(w)
+        return y_new, None
+
+    y, _ = jax.lax.scan(body, y0, None, length=n_iters)
+    return y.astype(grads.dtype)
+
+
+AGGREGATORS: dict[str, Callable] = {
+    "mean": aggregate_mean,
+    "coordinate_median": aggregate_coordinate_median,
+    "trimmed_mean": aggregate_trimmed_mean,
+    "krum": aggregate_krum,
+    "multi_krum": functools.partial(aggregate_krum, multi_k=4),
+    "medoid": aggregate_medoid,
+    "geometric_median": aggregate_geometric_median,
+}
+
+
+def get_aggregator(name: str, **kwargs) -> Callable[[jax.Array], jax.Array]:
+    """Resolve a stateless aggregator by name with bound hyper-parameters.
+
+    ``krum``/``multi_krum`` require ``n_byzantine``; ``trimmed_mean`` takes
+    ``trim_fraction``. ``byzantine_sgd`` is stateful — construct a
+    :class:`repro.core.byzantine_sgd.ByzantineGuard` instead (the solver in
+    :mod:`repro.core.solver` handles both kinds).
+    """
+    if name not in AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}")
+    fn = AGGREGATORS[name]
+    return functools.partial(fn, **kwargs) if kwargs else fn

@@ -1,0 +1,120 @@
+"""Byzantine attack zoo.
+
+Remark 2.3 of the paper allows Byzantine workers to return *arbitrary*
+vectors, to collude, and to observe everything sent so far (they may depend
+on all gradients of all machines up to the current iteration).  We implement
+the standard adversary classes from the Byzantine-SGD literature plus two
+paper-specific ones:
+
+* ``hidden_shift`` — the Section-1.3 "hide inside the thresholds" adversary:
+  a coordinated small bias of magnitude ≈ c·V that *passes* the A/B/∇
+  checks; Lemmas 3.6/3.7 prove its damage is bounded — our tests verify the
+  empirical loss inflation matches the O(αDV/√T) prediction.
+* ``lower_bound`` — the Section-5 indistinguishability adversary: Byzantine
+  workers faithfully simulate good workers of the *mirror* objective.
+
+All attacks share the signature::
+
+    attack(key, grads, byz_mask, ctx) -> grads'
+
+where ``grads`` is (m, d) with rows of *good* gradients everywhere (the
+simulator first computes honest gradients for every worker, then the attack
+overwrites the Byzantine rows), ``byz_mask`` is (m,) bool, and ``ctx`` is a
+dict of adversary knowledge: ``true_grad`` (d,), ``V``, ``step`` and
+optionally ``mirror_grad``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _overwrite(grads: jax.Array, byz_mask: jax.Array, rows: jax.Array) -> jax.Array:
+    return jnp.where(byz_mask[:, None], rows, grads)
+
+
+def attack_none(key, grads, byz_mask, ctx):
+    """Byzantine workers behave honestly (sanity baseline)."""
+    return grads
+
+
+def attack_sign_flip(key, grads, byz_mask, ctx, scale: float = 3.0):
+    """Classic reversed-gradient attack: send −scale · (own gradient)."""
+    return _overwrite(grads, byz_mask, -scale * grads)
+
+
+def attack_random_gaussian(key, grads, byz_mask, ctx, scale: float = 100.0):
+    """Large iid Gaussian noise — crashes naive mean, trivially filtered."""
+    noise = scale * jax.random.normal(key, grads.shape, grads.dtype)
+    return _overwrite(grads, byz_mask, noise)
+
+
+def attack_constant_drift(key, grads, byz_mask, ctx, scale: float = 10.0):
+    """All Byzantine workers send the same constant vector (colluding pull
+    toward a fixed wrong direction)."""
+    d = grads.shape[1]
+    direction = jnp.ones((d,), grads.dtype) / jnp.sqrt(d)
+    return _overwrite(grads, byz_mask, scale * ctx["V"] * direction[None, :])
+
+
+def attack_alie(key, grads, byz_mask, ctx, z: float = 1.0):
+    """'A little is enough' (Baruch et al.): colluding workers send
+    mean − z·std (coordinate-wise), staying within plausible deviation."""
+    good = ~byz_mask
+    w = good.astype(grads.dtype)[:, None]
+    n_good = jnp.maximum(jnp.sum(w), 1.0)
+    mu = jnp.sum(grads * w, axis=0) / n_good
+    var = jnp.sum(w * (grads - mu[None, :]) ** 2, axis=0) / n_good
+    row = mu - z * jnp.sqrt(var + 1e-12)
+    return _overwrite(grads, byz_mask, row[None, :].repeat(grads.shape[0], 0))
+
+
+def attack_inner_product(key, grads, byz_mask, ctx, scale: float = 1.0):
+    """Omniscient negative-inner-product attack: push exactly against the
+    true gradient, scaled to the top of the allowed deviation V."""
+    g = ctx["true_grad"]
+    gn = g / jnp.maximum(jnp.linalg.norm(g), 1e-12)
+    row = g - (1.0 + scale) * ctx["V"] * gn
+    return _overwrite(grads, byz_mask, row[None, :].repeat(grads.shape[0], 0))
+
+
+def attack_hidden_shift(key, grads, byz_mask, ctx, c: float = 0.9):
+    """The paper's 'hide inside the thresholds' adversary (Section 1.3):
+    report (true gradient + c·V·u) for a fixed colluding unit direction u.
+    Each row is a *valid-looking* stochastic gradient (deviation c·V ≤ V),
+    its A/B martingales grow like an honest worker's, so the filter
+    (correctly) cannot remove it; Lemma 3.6 bounds the damage instead."""
+    d = grads.shape[1]
+    u = jnp.ones((d,), grads.dtype) / jnp.sqrt(d)
+    row = ctx["true_grad"] + c * ctx["V"] * u
+    return _overwrite(grads, byz_mask, row[None, :].repeat(grads.shape[0], 0))
+
+
+def attack_mirror(key, grads, byz_mask, ctx):
+    """Section-5 lower-bound adversary: Byzantine workers behave as honest
+    workers of the mirror objective (requires ctx['mirror_grads'])."""
+    return _overwrite(grads, byz_mask, ctx["mirror_grads"])
+
+
+ATTACKS: dict[str, Callable] = {
+    "none": attack_none,
+    "sign_flip": attack_sign_flip,
+    "random_gaussian": attack_random_gaussian,
+    "constant_drift": attack_constant_drift,
+    "alie": attack_alie,
+    "inner_product": attack_inner_product,
+    "hidden_shift": attack_hidden_shift,
+    "mirror": attack_mirror,
+}
+
+
+def get_attack(name: str) -> Callable:
+    if name not in ATTACKS:
+        raise KeyError(f"unknown attack {name!r}; have {sorted(ATTACKS)}")
+    return ATTACKS[name]
+
+
+def apply_attack(name: str, key, grads, byz_mask, ctx, **kwargs):
+    return get_attack(name)(key, grads, byz_mask, ctx, **kwargs)

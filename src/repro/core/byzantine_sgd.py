@@ -1,0 +1,239 @@
+"""ByzantineSGD — Algorithm 1 of Alistarh, Allen-Zhu & Li (NeurIPS 2018).
+
+The algorithm keeps, per worker i ∈ [m]:
+
+* ``A_i = Σ_{t≤k} ⟨∇_{t,i}, x_t − x_1⟩``  (scalar martingale),
+* ``B_i = Σ_{t≤k} ∇_{t,i}``               (vector martingale),
+
+and per iteration filters workers against three robust centers:
+
+* the scalar median ``A_med`` of ``{A_i}``          (|A_i − A_med| ≤ 𝔗_A),
+* a counting vector-median ``B_med``                (‖B_i − B_med‖ ≤ 𝔗_B),
+* a counting vector-median ``∇_med`` of the fresh
+  gradients                                          (‖∇_i − ∇_med‖ ≤ 4V),
+
+where ``𝔗_A = 4DV√(kC)``, ``𝔗_B = 4V√(kC)``, ``C = log(16mT/δ)``
+(Section 3.1/3.2 — the Lemma 3.6 *anytime* form; the fixed-T form from the
+Algorithm 1 header is available via ``threshold_mode='fixed'``).  The update
+direction is the filtered mean ``ξ_k = (1/m) Σ_{i∈good_k} ∇_{k,i}``.
+
+TPU adaptation (see DESIGN.md §3): every distance computation is expressed
+through Gram matrices so that the *distributed* realization never has to
+materialize an ``(m, d)`` gradient matrix on one device — ``‖v_i − v_j‖² =
+G_ii + G_jj − 2 G_ij``.  The dense single-host form below is the reference
+implementation (and the oracle for the Pallas kernels); the mesh form in
+``repro.distributed`` reuses ``filter_update`` verbatim on psum'd Grams.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# configuration / state
+# ---------------------------------------------------------------------------
+
+class GuardConfig(NamedTuple):
+    """Static parameters of the filter.
+
+    Attributes:
+      m: number of workers.
+      T: planned number of iterations (enters C = log(16mT/δ) and the
+         fixed-threshold mode).
+      V: the paper's 𝒱 — a.s. bound on ‖∇f_s(x) − ∇f(x)‖ (Assumption 2.2).
+      D: diameter bound ‖x_1 − x*‖ ≤ D.
+      delta: failure probability.
+      threshold_mode: 'anytime' → 𝔗(k) ∝ √(kC) (Lemma 3.6 form, default);
+                      'fixed'   → 𝔗 ∝ √(TC)   (Algorithm 1 header form).
+      mean_over_alive: False (paper: divide ξ by m) or True (divide by
+                      |good_k|; a practical variant — unbiased when filters
+                      fire, used by the LM training examples).
+      grad_radius_mult: the "4V" of the per-iteration gradient check.
+      median_radius_mult: the "2V" counting radius for ∇_med.
+    """
+
+    m: int
+    T: int
+    V: float
+    D: float
+    delta: float = 1e-3
+    threshold_mode: str = "anytime"
+    mean_over_alive: bool = False
+    grad_radius_mult: float = 4.0
+    median_radius_mult: float = 2.0
+
+    @property
+    def C(self) -> float:
+        return math.log(16.0 * self.m * max(self.T, 1) / self.delta)
+
+    def thresholds(self, k: jax.Array):
+        """(𝔗_A, 𝔗_B) at iteration k (1-based)."""
+        if self.threshold_mode == "fixed":
+            t = jnp.asarray(float(self.T), jnp.float32)
+        else:
+            t = jnp.maximum(k.astype(jnp.float32), 1.0)
+        root = jnp.sqrt(t * self.C)
+        return 4.0 * self.D * self.V * root, 4.0 * self.V * root
+
+
+class GuardState(NamedTuple):
+    """Per-worker filter state (a pytree; all leaves have leading dim m)."""
+
+    A: jax.Array        # (m,)  scalar martingales
+    B: jax.Array        # (m, d) gradient-sum martingales (dense form)
+    alive: jax.Array    # (m,) bool — good_{k-1}
+    k: jax.Array        # () int32 — iterations done
+
+
+# ---------------------------------------------------------------------------
+# geometry helpers (pure; reused by the distributed layer + kernels)
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_dists_from_gram(gram: jax.Array) -> jax.Array:
+    """‖v_i − v_j‖² from the Gram matrix G_ij = ⟨v_i, v_j⟩."""
+    diag = jnp.diagonal(gram)
+    d2 = diag[:, None] + diag[None, :] - 2.0 * gram
+    return jnp.maximum(d2, 0.0)  # clamp numerical negatives
+
+
+def counting_median_index(sq_dists: jax.Array, radius: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """The paper's counting vector-median, from pairwise squared distances.
+
+    Returns ``(index, found)`` where ``index`` selects any point with more
+    than m/2 points within ``radius`` (the paper proves every good worker
+    qualifies w.h.p.).  Deterministic tie-break: among valid points, the one
+    with the smallest total distance (a medoid refinement); if *no* point is
+    valid — possible off the high-probability event or under extreme attacks
+    — we fall back to the global medoid, which is the standard robust choice
+    and keeps the algorithm total.
+    """
+    m = sq_dists.shape[0]
+    within = sq_dists <= radius * radius
+    counts = jnp.sum(within, axis=1)
+    valid = counts * 2 > m
+    score = jnp.sum(jnp.sqrt(sq_dists), axis=1)  # total distance (medoid score)
+    inf = jnp.float32(jnp.inf)
+    masked_score = jnp.where(valid, score, inf)
+    found = jnp.any(valid)
+    idx = jnp.where(found, jnp.argmin(masked_score), jnp.argmin(score))
+    return idx, found
+
+
+def scalar_median(x: jax.Array) -> jax.Array:
+    return jnp.median(x)
+
+
+# ---------------------------------------------------------------------------
+# the filter itself (Algorithm 1 lines 7–10), Gram form
+# ---------------------------------------------------------------------------
+
+def filter_update(
+    A: jax.Array,          # (m,)   A_i^{(k)}
+    gram_B: jax.Array,     # (m, m) ⟨B_i, B_j⟩
+    gram_g: jax.Array,     # (m, m) ⟨∇_{k,i}, ∇_{k,j}⟩
+    alive: jax.Array,      # (m,)   good_{k-1}
+    k: jax.Array,          # ()     iteration (1-based)
+    cfg: GuardConfig,
+) -> tuple[jax.Array, dict]:
+    """One application of the Algorithm-1 filter; returns (good_k, diag).
+
+    Medians are taken over all m workers — Algorithm 1 computes A_med /
+    B_med / ∇_med over [m], not over good_{k-1}; only the *intersection*
+    uses good_{k-1}.
+    """
+    t_a, t_b = cfg.thresholds(k)
+
+    # line 7: scalar median of A
+    a_med = scalar_median(A)
+    ok_a = jnp.abs(A - a_med) <= t_a
+
+    # line 8: counting median of B at radius 𝔗_B
+    d2_b = pairwise_sq_dists_from_gram(gram_B)
+    idx_b, found_b = counting_median_index(d2_b, t_b)
+    ok_b = jnp.sqrt(d2_b[idx_b]) <= t_b
+
+    # line 9: counting median of fresh gradients at radius 2V, filter at 4V
+    d2_g = pairwise_sq_dists_from_gram(gram_g)
+    idx_g, found_g = counting_median_index(d2_g, cfg.median_radius_mult * cfg.V)
+    ok_g = jnp.sqrt(d2_g[idx_g]) <= cfg.grad_radius_mult * cfg.V
+
+    # line 10: good_k = good_{k-1} ∩ {A ok} ∩ {B ok} ∩ {∇ ok}
+    good_k = alive & ok_a & ok_b & ok_g
+    diag = {
+        "n_alive": jnp.sum(good_k),
+        "a_med": a_med,
+        "b_med_index": idx_b,
+        "b_med_found": found_b,
+        "grad_med_index": idx_g,
+        "grad_med_found": found_g,
+        "threshold_A": t_a,
+        "threshold_B": t_b,
+        "n_fail_A": jnp.sum(~ok_a),
+        "n_fail_B": jnp.sum(~ok_b),
+        "n_fail_grad": jnp.sum(~ok_g),
+    }
+    return good_k, diag
+
+
+# ---------------------------------------------------------------------------
+# dense reference guard over stacked (m, d) gradients
+# ---------------------------------------------------------------------------
+
+class ByzantineGuard:
+    """Single-host reference form of ByzantineSGD's filter + aggregation.
+
+    Usage::
+
+        guard = ByzantineGuard(cfg)
+        state = guard.init(d)
+        state, xi, diag = guard.step(state, grads, x_k, x_1)   # jit-able
+
+    ``grads`` is the stacked (m, d) matrix of per-worker gradients at x_k.
+    ``xi`` is the paper's ξ_k = (1/m) Σ_{i∈good_k} ∇_{k,i}.
+    """
+
+    def __init__(self, cfg: GuardConfig):
+        self.cfg = cfg
+
+    def init(self, d: int) -> GuardState:
+        m = self.cfg.m
+        return GuardState(
+            A=jnp.zeros((m,), jnp.float32),
+            B=jnp.zeros((m, d), jnp.float32),
+            alive=jnp.ones((m,), bool),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    def step(
+        self,
+        state: GuardState,
+        grads: jax.Array,   # (m, d)
+        x_k: jax.Array,     # (d,)
+        x_1: jax.Array,     # (d,)
+    ) -> tuple[GuardState, jax.Array, dict]:
+        cfg = self.cfg
+        m = cfg.m
+        grads = grads.astype(jnp.float32)
+        k = state.k + 1
+
+        # line 5: accumulate the two martingales
+        A = state.A + grads @ (x_k - x_1).astype(jnp.float32)
+        B = state.B + grads
+
+        # Gram matrices (the only O(m² d) work — the Pallas kernel target)
+        gram_b = B @ B.T
+        gram_g = grads @ grads.T
+
+        good_k, diag = filter_update(A, gram_b, gram_g, state.alive, k, cfg)
+
+        denom = jnp.where(
+            cfg.mean_over_alive, jnp.maximum(jnp.sum(good_k), 1), m
+        ).astype(jnp.float32)
+        xi = (good_k.astype(jnp.float32) @ grads) / denom
+
+        new_state = GuardState(A=A, B=B, alive=good_k, k=k)
+        return new_state, xi, diag

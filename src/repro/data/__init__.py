@@ -1,0 +1,22 @@
+"""repro.data — data pipeline substrate.
+
+* :mod:`repro.data.problems` — stochastic convex objectives in the paper's
+  Section-2.1 model (Assumption 2.2 bounded-deviation estimators).
+* :mod:`repro.data.synthetic` — deterministic synthetic token streams for
+  LM training with per-worker independent shards and Byzantine corruption
+  hooks (label-flip data poisoning).
+"""
+from repro.data.problems import (
+    make_quadratic_problem,
+    make_least_squares_problem,
+    make_logistic_problem,
+)
+from repro.data.synthetic import SyntheticTokens, make_worker_batch
+
+__all__ = [
+    "make_quadratic_problem",
+    "make_least_squares_problem",
+    "make_logistic_problem",
+    "SyntheticTokens",
+    "make_worker_batch",
+]

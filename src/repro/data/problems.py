@@ -1,0 +1,144 @@
+"""Stochastic convex objectives satisfying the paper's Assumption 2.2.
+
+Every factory returns a :class:`repro.core.solver.Problem` whose
+``stoch_grad`` obeys E[g] = ∇f(x) and ‖g − ∇f(x)‖ ≤ V **almost surely**
+(we draw noise on the sphere or truncate), with known L, σ, x*, so tests
+can check convergence rates against Theorem 3.8/3.9/4.2 exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import Problem
+
+
+def _sphere_noise(key: jax.Array, d: int, V: float) -> jax.Array:
+    """Uniform on the sphere of radius r ≤ V (r ~ V·u^{1/d} keeps E ≈ ball);
+    mean-zero and ‖·‖ ≤ V a.s. — the strongest form of Assumption 2.2."""
+    nk, rk = jax.random.split(key)
+    n = jax.random.normal(nk, (d,))
+    n = n / jnp.maximum(jnp.linalg.norm(n), 1e-12)
+    r = V * jax.random.uniform(rk) ** (1.0 / d)
+    return r * n
+
+
+def make_quadratic_problem(
+    d: int = 16, sigma: float = 1.0, L: float = 10.0, V: float = 1.0,
+    D: float | None = None, seed: int = 0,
+) -> Problem:
+    """f(x) = ½ (x−x*)ᵀ H (x−x*) with spec(H) ⊂ [σ, L]; stochastic gradient
+    = ∇f(x) + sphere noise.  σ-strongly convex, L-smooth."""
+    rng = np.random.default_rng(seed)
+    # random orthogonal basis, eigenvalues log-spaced in [sigma, L]
+    Q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+    eigs = np.geomspace(sigma, L, d)
+    H = jnp.asarray((Q * eigs) @ Q.T, jnp.float32)
+    x_star = jnp.asarray(rng.normal(size=(d,)) / np.sqrt(d), jnp.float32)
+    x1 = jnp.zeros((d,), jnp.float32)
+    if D is None:
+        D = float(2.0 * np.linalg.norm(np.asarray(x_star)))
+
+    def f(x):
+        r = x - x_star
+        return 0.5 * r @ H @ r
+
+    def grad(x):
+        return H @ (x - x_star)
+
+    def stoch_grad(key, x):
+        return grad(x) + _sphere_noise(key, d, V)
+
+    return Problem(d=d, f=f, grad=grad, stoch_grad=stoch_grad, x1=x1,
+                   x_star=x_star, D=D, V=V, L=L, sigma=sigma)
+
+
+def make_least_squares_problem(
+    d: int = 16, n_data: int = 512, noise: float = 0.1, V: float | None = None,
+    seed: int = 0,
+) -> Problem:
+    """f(x) = (1/2n) Σ (aᵢᵀx − bᵢ)²; f_s picks one row (the paper's
+    one-sample-per-iteration model).  V is computed from the data so the
+    a.s. bound genuinely holds."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_data, d)) / np.sqrt(d)
+    x_true = rng.normal(size=(d,))
+    b = A @ x_true + noise * rng.normal(size=(n_data,))
+    A_j, b_j = jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32)
+
+    H = (A.T @ A) / n_data
+    eigs = np.linalg.eigvalsh(H)
+    x_star_np = np.linalg.lstsq(A, b, rcond=None)[0]
+    x_star = jnp.asarray(x_star_np, jnp.float32)
+    x1 = jnp.zeros((d,), jnp.float32)
+    D = float(2.0 * np.linalg.norm(x_star_np) + 1.0)
+
+    def f(x):
+        r = A_j @ x - b_j
+        return 0.5 * jnp.mean(r * r)
+
+    def grad(x):
+        return A_j.T @ (A_j @ x - b_j) / n_data
+
+    def stoch_grad(key, x):
+        i = jax.random.randint(key, (), 0, n_data)
+        a = A_j[i]
+        return a * (a @ x - b_j[i])
+
+    if V is None:
+        # sup_x∈ball ‖∇f_s − ∇f‖ over rows, evaluated numerically on the ball boundary
+        xs = x_star_np[None, :] + D * rng.normal(size=(64, d)) / np.sqrt(d)
+        devs = []
+        for x in xs:
+            g = A @ x - b
+            per_row = A * g[:, None]
+            devs.append(np.abs(per_row - (A.T @ g / n_data)[None, :]).sum(-1).max())
+        V = float(np.max(devs))
+
+    return Problem(d=d, f=f, grad=grad, stoch_grad=stoch_grad, x1=x1,
+                   x_star=x_star, D=D, V=V, L=float(eigs[-1]), sigma=float(max(eigs[0], 0.0)))
+
+
+def make_logistic_problem(
+    d: int = 16, n_data: int = 512, reg: float = 1e-2, seed: int = 0,
+) -> Problem:
+    """ℓ2-regularized logistic regression; f_s samples one example.
+    σ = reg, L ≤ ‖a‖²/4 + reg, V ≤ 2·max‖aᵢ‖ (logistic grad bounded by ‖a‖)."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_data, d)) / np.sqrt(d)
+    x_true = rng.normal(size=(d,))
+    p = 1.0 / (1.0 + np.exp(-A @ x_true))
+    y = (rng.uniform(size=n_data) < p).astype(np.float32) * 2.0 - 1.0
+    A_j = jnp.asarray(A, jnp.float32)
+    y_j = jnp.asarray(y, jnp.float32)
+
+    def f(x):
+        margins = y_j * (A_j @ x)
+        return jnp.mean(jnp.logaddexp(0.0, -margins)) + 0.5 * reg * x @ x
+
+    def grad(x):
+        margins = y_j * (A_j @ x)
+        s = -jax.nn.sigmoid(-margins) * y_j
+        return A_j.T @ s / n_data + reg * x
+
+    def stoch_grad(key, x):
+        i = jax.random.randint(key, (), 0, n_data)
+        a, yy = A_j[i], y_j[i]
+        s = -jax.nn.sigmoid(-yy * (a @ x)) * yy
+        return a * s + reg * x
+
+    # minimize numerically for x*
+    x = jnp.zeros((d,), jnp.float32)
+    g = jax.jit(jax.grad(f))
+    row_norms = np.linalg.norm(A, axis=1)
+    L = float(np.max(row_norms) ** 2 / 4.0 + reg)
+    for _ in range(2000):
+        x = x - (1.0 / L) * g(x)
+    x_star = x
+    D = float(2.0 * np.linalg.norm(np.asarray(x_star)) + 1.0)
+    V = float(2.0 * np.max(row_norms))
+
+    return Problem(d=d, f=f, grad=grad, stoch_grad=stoch_grad,
+                   x1=jnp.zeros((d,), jnp.float32), x_star=x_star,
+                   D=D, V=V, L=L, sigma=reg)

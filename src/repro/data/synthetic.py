@@ -1,0 +1,71 @@
+"""Deterministic synthetic token pipeline for LM training.
+
+Design goals:
+  * per-worker *disjoint* streams (the paper's sampling model: each machine
+    draws its own iid samples) — worker w, step k sees a batch derived from
+    fold_in(seed, w, k), so runs are exactly reproducible and independent
+    of how many hosts participate;
+  * a learnable signal (orderly n-gram-ish structure), so a few hundred
+    steps of a ~100M model measurably reduce loss in the e2e example;
+  * a Byzantine *data poisoning* hook (label corruption) — attacks can act
+    at the data level, not only the gradient level.
+
+Tokens are generated on-device with jax.random (no host I/O), shaped
+``(n_workers, per_worker_batch, seq_len)`` so the leading axis shards over
+the mesh's data axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SyntheticTokens(NamedTuple):
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+    # Markov-ish structure: token_{t+1} = (a * token_t + b + noise) % vocab
+    a: int = 31
+    b: int = 7
+    noise_levels: int = 8
+
+    def sample(self, worker: jax.Array, step: jax.Array, batch: int) -> jax.Array:
+        """Batch of token sequences (batch, seq_len+1) — inputs + next-token
+        labels come from slicing. Deterministic in (seed, worker, step)."""
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, worker)
+        key = jax.random.fold_in(key, step)
+        k0, kn = jax.random.split(key)
+        x0 = jax.random.randint(k0, (batch,), 0, self.vocab_size)
+        noise = jax.random.randint(kn, (batch, self.seq_len + 1), 0, self.noise_levels)
+
+        def body(tok, n):
+            nxt = (self.a * tok + self.b + n) % self.vocab_size
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(body, x0, noise.T)
+        return seq.T  # (batch, seq_len+1)
+
+
+def make_worker_batch(
+    stream: SyntheticTokens,
+    n_workers: int,
+    per_worker_batch: int,
+    step: jax.Array,
+    poison_mask: jax.Array | None = None,
+) -> dict:
+    """Global batch with a leading worker axis.
+
+    Returns {'tokens': (W, b, S), 'labels': (W, b, S)}.  If ``poison_mask``
+    (W,) is given, poisoned workers get labels shifted by a constant offset
+    — a label-flip data attack (gradients of those workers are then honest
+    gradients *of corrupted data*, a realistic Byzantine behaviour)."""
+    workers = jnp.arange(n_workers)
+    seqs = jax.vmap(lambda w: stream.sample(w, step, per_worker_batch))(workers)
+    tokens, labels = seqs[..., :-1], seqs[..., 1:]
+    if poison_mask is not None:
+        flipped = (labels + stream.vocab_size // 2) % stream.vocab_size
+        labels = jnp.where(poison_mask[:, None, None], flipped, labels)
+    return {"tokens": tokens, "labels": labels}

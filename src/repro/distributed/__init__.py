@@ -1,0 +1,19 @@
+"""repro.distributed — mesh/sharding substrate + the paper's technique as a
+data-parallel gradient-aggregation feature (see byzantine_dp.py)."""
+from repro.distributed.sharding import (
+    LOGICAL_RULES_SINGLE_POD,
+    LOGICAL_RULES_MULTI_POD,
+    logical_to_spec,
+    shard_act,
+    use_logical_rules,
+    param_pspecs,
+)
+
+__all__ = [
+    "LOGICAL_RULES_SINGLE_POD",
+    "LOGICAL_RULES_MULTI_POD",
+    "logical_to_spec",
+    "shard_act",
+    "use_logical_rules",
+    "param_pspecs",
+]

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (t5x/MaxText style).
+
+Model code annotates tensors with *logical* axis names ("heads", "mlp",
+"experts", "vocab", "act_seq", …). A rules table maps logical names to mesh
+axes; :func:`shard_act` applies ``with_sharding_constraint`` when a mesh is
+active and is a no-op otherwise (so the same model code runs in unit tests
+on one CPU device and under the 512-device dry-run).
+
+Divisibility-aware: a logical axis is sharded only if the tensor dimension
+is divisible by the mesh-axis size — otherwise it silently replicates.
+This is what lets one rules table serve GQA models with kv_heads ∈
+{2, 8, 16, 32} on a model axis of 16.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis → mesh axis (or None = replicate).
+# Worker/data axes: the worker dimension of global batches shards over
+# ("pod", "data"); per-worker batch/seq/embed stay unsharded across data.
+LOGICAL_RULES_SINGLE_POD: dict[str, Any] = {
+    "worker": ("data",),
+    "batch": "data",          # used by non-byzantine paths / serving
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "embed": None,
+    "embed_table": None,      # never FSDP'd: scatter-add gradient (see model.py)
+    "act_seq": "model",       # sequence parallelism for the residual stream
+    "act_embed": None,
+    "cache_seq": "model",     # decode KV caches shard over seq when batch is small
+    "conv": None,
+    "state": None,
+}
+
+LOGICAL_RULES_MULTI_POD: dict[str, Any] = dict(
+    LOGICAL_RULES_SINGLE_POD,
+    worker=("pod", "data"),
+    batch=("pod", "data"),
+)
+
+
+class _RulesCtx(threading.local):
+    def __init__(self):
+        self.rules: Optional[dict] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _RulesCtx()
+
+
+@contextlib.contextmanager
+def use_logical_rules(rules: dict, mesh: Optional[Mesh] = None):
+    """Activate a logical→mesh rules table (and optionally a mesh) for model
+    tracing. ``shard_act``/``logical_to_spec`` read from this context."""
+    prev_rules, prev_mesh = _CTX.rules, _CTX.mesh
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev_rules, prev_mesh
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_to_spec(
+    logical_axes: tuple, shape: tuple | None = None,
+    rules: dict | None = None, mesh: Mesh | None = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec under the active
+    rules; drops shardings that don't divide the dimension (when ``shape``
+    is provided and a mesh is active)."""
+    rules = rules if rules is not None else _CTX.rules
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if rules is None:
+        return P(*([None] * len(logical_axes)))
+    out = []
+    used: set[str] = set()
+    for i, name in enumerate(logical_axes):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is not None and mesh is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, mesh_axes) != 0:
+                mesh_axes = None
+        # a mesh axis may appear at most once in a PartitionSpec: earlier
+        # (higher-priority) logical dims win, later ones replicate
+        if mesh_axes is not None:
+            axes_tuple = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            if any(a in used for a in axes_tuple):
+                mesh_axes = None
+            else:
+                used.update(axes_tuple)
+        out.append(mesh_axes)
+    return P(*out)
+
+
+def shard_act(x: jax.Array, *logical_axes) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without rules/mesh)."""
+    if _CTX.rules is None or _CTX.mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = logical_to_spec(tuple(logical_axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def param_pspecs(defs, rules: dict, mesh: Mesh):
+    """Tree of PartitionSpec for a tree of ParamDef (see models.common)."""
+    from repro.models.common import ParamDef  # local import to avoid cycle
+
+    def one(d: ParamDef):
+        return logical_to_spec(d.axes, d.shape, rules, mesh)
+
+    return jax.tree_util.tree_map(
+        one, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def named_sharding_tree(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,213 @@
+"""Sharding-spec builders for whole train/serve states and input batches.
+
+These produce (ShapeDtypeStruct tree, NamedSharding tree) pairs for AOT
+lowering — the dry-run never allocates a byte.  Logical→mesh rules come
+from :mod:`repro.distributed.sharding`; leaf kinds of caches / guard state
+are resolved by field name + rank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.byzantine_dp import DPGuardConfig
+from repro.distributed.sharding import logical_to_spec, use_logical_rules, param_pspecs
+from repro.models.model import LanguageModel
+
+PyTree = Any
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+def _logical(axes, shape, rules, mesh) -> P:
+    return logical_to_spec(tuple(axes), tuple(shape), rules, mesh)
+
+
+# ---------------------------------------------------------------------------
+# cache specs (decode/serve)
+# ---------------------------------------------------------------------------
+
+_CACHE_FIELD_AXES = {
+    # field name → logical axes (leading 'None' = stacked layer axis)
+    "k": (None, "batch", "cache_seq", "kv_heads", None),
+    "v": (None, "batch", "cache_seq", "kv_heads", None),
+    "ckv": (None, "batch", "cache_seq", None),
+    "k_rope": (None, "batch", "cache_seq", None),
+    "k_scale": (None, "batch", "cache_seq", "kv_heads"),
+    "v_scale": (None, "batch", "cache_seq", "kv_heads"),
+    "state": (None, "batch", "heads", None, None),
+    "conv_x": (None, "batch", None, "mlp"),
+    "conv_B": (None, "batch", None, None),
+    "conv_C": (None, "batch", None, None),
+    "pos": (),
+}
+
+
+def cache_specs(cache_abstract: PyTree, rules: dict, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree for an (abstract) decode cache."""
+
+    def spec_for(path, leaf) -> P:
+        name = None
+        for pp in reversed(path):
+            key = getattr(pp, "name", getattr(pp, "key", None))
+            if isinstance(key, str):
+                name = key
+                break
+        if name in _CACHE_FIELD_AXES and len(_CACHE_FIELD_AXES[name]) == leaf.ndim:
+            return _logical(_CACHE_FIELD_AXES[name], leaf.shape, rules, mesh)
+        # memory_kv tuples: (layers, B, Sm, H, hd)
+        if leaf.ndim == 5:
+            return _logical((None, "batch", None, "kv_heads", None), leaf.shape, rules, mesh)
+        if leaf.ndim == 0:
+            return P()
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# train-state specs
+# ---------------------------------------------------------------------------
+
+def make_train_specs(
+    model: LanguageModel,
+    dp_cfg: DPGuardConfig,
+    optimizer_kind: str,
+    shape: InputShape,
+    rules: dict,
+    mesh: Mesh,
+):
+    """(state_sds, batch_sds, byz_sds, rng_sds) ShapeDtypeStruct trees with
+    shardings for AOT-lowering ``train_step``."""
+    cfg = model.cfg
+    pdt = jnp.dtype(cfg.param_dtype)
+    W = dp_cfg.n_workers
+    assert shape.global_batch % W == 0, (shape.global_batch, W)
+    b = shape.global_batch // W
+
+    with use_logical_rules(rules, mesh):
+        pspecs = param_pspecs(model.defs, rules, mesh)
+    params_sds = jax.tree_util.tree_map(
+        lambda d, s: _sds(d.shape, pdt, mesh, s),
+        model.defs, pspecs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"),
+    )
+
+    # optimizer state
+    if optimizer_kind == "adamw":
+        f32 = lambda t: jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32, sharding=x.sharding), t
+        )
+        opt_sds = {"m": f32(params_sds), "v": f32(params_sds)}
+    elif optimizer_kind == "momentum":
+        opt_sds = {"m": jax.tree_util.tree_map(lambda x: x, params_sds)}
+    else:
+        opt_sds = {}
+
+    worker_spec = _logical(("worker",), (W,), rules, mesh)
+    if dp_cfg.mode == "sketch":
+        b_sds = _sds((W, dp_cfg.sketch_dim), jnp.float32, mesh,
+                     _logical(("worker", None), (W, dp_cfg.sketch_dim), rules, mesh))
+    else:
+        def exact_leaf(d, s):
+            spec = _logical(("worker",) + tuple(d.axes), (W, *d.shape), rules, mesh)
+            return _sds((W, *d.shape), jnp.float32, mesh, spec)
+        b_sds = jax.tree_util.tree_map(
+            exact_leaf, model.defs, pspecs,
+            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"),
+        )
+
+    guard_sds = dict(
+        A=_sds((W,), jnp.float32, mesh, worker_spec),
+        B=b_sds,
+        alive=_sds((W,), jnp.bool_, mesh, worker_spec),
+        k=_sds((), jnp.int32, mesh, P()),
+        v_est=_sds((), jnp.float32, mesh, P()),
+    )
+    from repro.distributed.byzantine_dp import DPGuardState
+    from repro.distributed.trainer import TrainState
+
+    state_sds = TrainState(
+        params=params_sds,
+        opt_state=opt_sds,
+        guard=DPGuardState(**guard_sds),
+        anchor=params_sds,
+        step=_sds((), jnp.int32, mesh, P()),
+    )
+
+    batch_spec = _logical(("worker", None, None), (W, b, shape.seq_len), rules, mesh)
+    batch_sds = {
+        "tokens": _sds((W, b, shape.seq_len), jnp.int32, mesh, batch_spec),
+        "labels": _sds((W, b, shape.seq_len), jnp.int32, mesh, batch_spec),
+    }
+    if cfg.frontend != "none":
+        fshape = (W, b, cfg.frontend_seq if not cfg.enc_dec else cfg.enc_seq_len, cfg.frontend_dim)
+        batch_sds["frontend"] = _sds(
+            fshape, jnp.dtype(cfg.activation_dtype), mesh,
+            _logical(("worker", None, None, None), fshape, rules, mesh),
+        )
+    byz_sds = _sds((W,), jnp.bool_, mesh, worker_spec)
+    rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=_ns(mesh, P()))
+    return state_sds, batch_sds, byz_sds, rng_sds
+
+
+# ---------------------------------------------------------------------------
+# serve specs
+# ---------------------------------------------------------------------------
+
+def make_serve_specs(
+    model: LanguageModel, shape: InputShape, rules: dict, mesh: Mesh,
+    cache_len: int | None = None,
+):
+    """(params_sds, cache_sds, token_sds) for AOT-lowering ``serve_step``."""
+    cfg = model.cfg
+    pdt = jnp.dtype(cfg.param_dtype)
+    adt = jnp.dtype(cfg.activation_dtype)
+    B = shape.global_batch
+    L = cache_len if cache_len is not None else shape.seq_len
+
+    with use_logical_rules(rules, mesh):
+        pspecs = param_pspecs(model.defs, rules, mesh)
+    params_sds = jax.tree_util.tree_map(
+        lambda d, s: _sds(d.shape, pdt, mesh, s),
+        model.defs, pspecs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"),
+    )
+
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, L, adt))
+    cspecs = cache_specs(cache_abs, rules, mesh)
+    cache_sds = jax.tree_util.tree_map(
+        lambda a, s: _sds(a.shape, a.dtype, mesh, s), cache_abs, cspecs
+    )
+    token_sds = _sds((B, 1), jnp.int32, mesh, _logical(("batch", None), (B, 1), rules, mesh))
+    return params_sds, cache_sds, token_sds
+
+
+def make_prefill_specs(model: LanguageModel, shape: InputShape, rules: dict, mesh: Mesh):
+    """(params_sds, batch_sds) for AOT-lowering ``prefill``."""
+    cfg = model.cfg
+    adt = jnp.dtype(cfg.activation_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    params_sds, _, _ = make_serve_specs(model, shape, rules, mesh, cache_len=8)
+    batch_sds = {
+        "tokens": _sds((B, S), jnp.int32, mesh, _logical(("batch", None), (B, S), rules, mesh)),
+    }
+    if cfg.frontend != "none":
+        F = cfg.frontend_seq if not cfg.enc_dec else cfg.enc_seq_len
+        fshape = (B, F, cfg.frontend_dim)
+        batch_sds["frontend"] = _sds(
+            fshape, adt, mesh, _logical(("batch", None, None), fshape, rules, mesh)
+        )
+    return params_sds, batch_sds

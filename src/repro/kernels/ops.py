@@ -1,0 +1,54 @@
+"""Public jit'd wrappers for the aggregation kernels.
+
+On TPU these dispatch to the compiled Pallas kernels; on CPU (this harness)
+they run the identical kernel bodies in ``interpret=True`` mode, so every
+test exercises the real kernel code path.  ``use_kernels=False`` falls back
+to the jnp oracles — the switch the distributed guard uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.countsketch import countsketch_pallas
+from repro.kernels.pairdist import gram_pallas
+from repro.kernels.robust_reduce import (
+    coordinate_median_pallas,
+    filtered_mean_pallas,
+    trimmed_mean_pallas,
+)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(x: jax.Array, d_block: int = 2048) -> jax.Array:
+    """(m, d) → (m, m) worker Gram matrix (see pairdist.py)."""
+    return gram_pallas(x, d_block=d_block, interpret=_interpret())
+
+
+def coordinate_median(x: jax.Array, d_block: int = 4096) -> jax.Array:
+    return coordinate_median_pallas(x, d_block=d_block, interpret=_interpret())
+
+
+def trimmed_mean(x: jax.Array, n_trim: int, d_block: int = 4096) -> jax.Array:
+    return trimmed_mean_pallas(x, n_trim, d_block=d_block, interpret=_interpret())
+
+
+def filtered_mean(x: jax.Array, mask: jax.Array, denom: float, d_block: int = 4096) -> jax.Array:
+    return filtered_mean_pallas(x, mask, denom, d_block=d_block, interpret=_interpret())
+
+
+def countsketch(x: jax.Array, k: int, salt: int = 0, d_block: int = 8192) -> jax.Array:
+    return countsketch_pallas(x, k, salt=salt, d_block=d_block, interpret=_interpret())
+
+
+ORACLES = {
+    "gram": ref.gram_ref,
+    "coordinate_median": ref.coordinate_median_ref,
+    "trimmed_mean": ref.trimmed_mean_ref,
+    "filtered_mean": ref.filtered_mean_ref,
+    "countsketch": ref.countsketch_ref,
+}

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the master-side aggregation kernels.
+
+These define the exact semantics the Pallas kernels must reproduce
+(tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    """(m, d) → (m, m) Gram matrix G_ij = ⟨x_i, x_j⟩ in f32."""
+    x32 = x.astype(jnp.float32)
+    return x32 @ x32.T
+
+
+def coordinate_median_ref(x: jax.Array) -> jax.Array:
+    """(m, d) → (d,) coordinate-wise median (Yin et al. Median-GD rule).
+    Even m averages the two central order statistics (jnp.median)."""
+    return jnp.median(x.astype(jnp.float32), axis=0)
+
+
+def trimmed_mean_ref(x: jax.Array, n_trim: int) -> jax.Array:
+    """(m, d) → (d,): drop the n_trim largest and smallest per coordinate."""
+    m = x.shape[0]
+    assert 2 * n_trim < m
+    s = jnp.sort(x.astype(jnp.float32), axis=0)
+    return jnp.mean(s[n_trim : m - n_trim], axis=0)
+
+
+def filtered_mean_ref(x: jax.Array, mask: jax.Array, denom: float) -> jax.Array:
+    """(m, d), (m,) bool → (d,): Σ_{i∈mask} x_i / denom — the paper's ξ_k."""
+    w = mask.astype(jnp.float32) / denom
+    return w @ x.astype(jnp.float32)
+
+
+def sketch_sign(n: int, salt: int) -> jax.Array:
+    """±1 per flat coordinate — the hash shared with repro.distributed."""
+    idx = jax.lax.iota(jnp.uint32, n)
+    h = (idx + jnp.uint32((salt * 0x9E3779B9 + 1) & 0xFFFFFFFF)) * jnp.uint32(2654435761)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    return 1.0 - 2.0 * (h & 1).astype(jnp.float32)
+
+
+def countsketch_ref(x: jax.Array, k: int, salt: int = 0) -> jax.Array:
+    """(m, d) → (m, k) strided-fold CountSketch (bucket = i mod k, hashed
+    signs) — the sketch used by the distributed guard."""
+    m, d = x.shape
+    sign = sketch_sign(d, salt)
+    signed = x.astype(jnp.float32) * sign[None, :]
+    pad = (-d) % k
+    if pad:
+        signed = jnp.pad(signed, ((0, 0), (0, pad)))
+    return jnp.sum(signed.reshape(m, -1, k), axis=1)

@@ -1,0 +1,1 @@
+"""repro.launch — production mesh, AOT dry-run, training/serving drivers."""

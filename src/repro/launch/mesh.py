@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and smoke tests must keep seeing 1 device.
+
+Topology (TPU v5e):
+  * single pod:  (data=16, model=16)       — 256 chips
+  * multi-pod:   (pod=2, data=16, model=16) — 512 chips, the 'pod' axis
+    crosses the DCN/ICI boundary; the paper's worker axis is (pod, data).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def worker_axes(multi_pod: bool = False) -> tuple[str, ...]:
+    """Mesh axes that form the paper's 'm workers' dimension."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def n_workers(mesh) -> int:
+    names = mesh.axis_names
+    w = 1
+    for a in ("pod", "data"):
+        if a in names:
+            w *= mesh.shape[a]
+    return w

@@ -1,0 +1,15 @@
+"""repro.models — the architecture zoo (pure JAX, config-driven).
+
+All six assigned families: dense decoder (GQA / sliding-window), MLA
+(DeepSeek), MoE (GShard-free scatter dispatch + shared experts), SSM
+(Mamba2/SSD chunked scan), hybrid interleave (Jamba), encoder–decoder
+(Seamless backbone), and VLM/audio embedding frontstubs.
+
+Entry points:
+  * :func:`repro.models.model.build_model` — returns a :class:`LanguageModel`
+    bundle: param defs, init, ``loss_fn`` (train), ``prefill`` and
+    ``decode_step`` (serve), all scanned over stacked per-group params.
+"""
+from repro.models.model import LanguageModel, build_model
+
+__all__ = ["LanguageModel", "build_model"]

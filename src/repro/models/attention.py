@@ -1,0 +1,429 @@
+"""Attention mixers: GQA, sliding-window, and MLA (DeepSeek-style latent KV).
+
+Design notes (TPU adaptation):
+  * Train/prefill attention is *chunked over KV blocks* with an online
+    softmax (flash-attention recurrence in pure JAX): the (S, S) score
+    matrix never materializes, peak temp is (Sq, chunk). This is what lets
+    ``prefill_32k`` fit; on real TPU the same structure maps 1:1 onto a
+    Pallas flash kernel.
+  * Decode keeps a preallocated KV cache (ring buffer for sliding window)
+    and computes a single-query attention; MLA decode uses the
+    absorbed-projection form so the cache is only (S, kv_lora + rope_dim).
+  * Heads shard over the 'model' mesh axis via logical-axis annotations;
+    when a KV-head count does not divide the axis (e.g. starcoder2's kv=2 on
+    model=16) the divisibility-aware rules replicate instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from repro.models.common import ParamDef, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, h, hd, r = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    lk = cfg.kv_lora_rank
+    defs = {
+        "w_dkv": ParamDef((d, lk + r), ("embed", None)),      # latent + rope key
+        "w_uk": ParamDef((lk, h, hd), (None, "heads", None)),
+        "w_uv": ParamDef((lk, h, hd), (None, "heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.q_lora_rank:
+        defs["w_dq"] = ParamDef((d, cfg.q_lora_rank), ("embed", None))
+        defs["w_uq"] = ParamDef((cfg.q_lora_rank, h, hd + r), (None, "heads", None))
+    else:
+        defs["wq"] = ParamDef((d, h, hd + r), ("embed", "heads", None))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — train / prefill
+# ---------------------------------------------------------------------------
+
+def _chunk_pad(x: jax.Array, chunk: int, axis: int):
+    s = x.shape[axis]
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, pad)
+        x = jnp.pad(x, pads)
+    new_shape = x.shape[:axis] + (n_chunks, chunk) + x.shape[axis + 1 :]
+    return x.reshape(new_shape), n_chunks
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, H, hd)   — RoPE already applied
+    k: jax.Array,            # (B, Sk, KV, hd)  — RoPE already applied
+    v: jax.Array,            # (B, Sk, KV, hd)
+    q_positions: jax.Array,  # (Sq,)
+    k_positions: jax.Array,  # (Sk,)
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV in blocks of ``chunk``.
+
+    q/k may have a different head dim than v (MLA concatenates a RoPE part
+    onto q/k only) — the output takes v's head dim.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    dv = v.shape[-1]
+    R = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    qg = q.reshape(B, Sq, KV, R, hd)
+    kc, n_chunks = _chunk_pad(k, chunk, axis=1)            # (B, C, ck, KV, hd)
+    vc, _ = _chunk_pad(v, chunk, axis=1)
+    pc, _ = _chunk_pad(k_positions.astype(jnp.int32), chunk, axis=0)   # (C, ck)
+    valid_c, _ = _chunk_pad(jnp.ones_like(k_positions, jnp.bool_), chunk, axis=0)
+
+    # scan carries: running max m, running sum l, running out acc (f32)
+    m0 = jnp.full((B, KV, R, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, R, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, R, Sq, dv), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, p_blk, ok_blk = xs                   # (B, ck, KV, hd), ..., (ck,)
+        s = jnp.einsum(
+            "bqkrh,bckh->bkrqc", qg.astype(jnp.float32), k_blk.astype(jnp.float32)
+        ) * scale                                           # (B, KV, R, Sq, ck)
+        mask = ok_blk[None, :]
+        if causal:
+            mask = mask & (q_positions[:, None] >= p_blk[None, :])
+        if window is not None:
+            mask = mask & (q_positions[:, None] - p_blk[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        # guard the all-masked case (exp(-inf - -inf)) → 0 contribution
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkrqc,bckh->bkrqh", p, v_blk.astype(jnp.float32))
+        acc_new = corr[..., None] * acc + pv
+        return (m_new, l_new, acc_new), None
+
+    xs = (
+        jnp.moveaxis(kc, 1, 0),   # (C, B, ck, KV, hd)
+        jnp.moveaxis(vc, 1, 0),
+        pc,                        # (C, ck)
+        valid_c,
+    )
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1)                           # (B, Sq, KV, R, dv)
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA mixer (train / prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+    window: Optional[int] = None, return_kv: bool = False,
+):
+    """x: (B, S, D) → (B, S, D) [, (k, v) for prefill-cache capture]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = shard_act(q, "batch", None, "heads", None)
+    k = shard_act(k, "batch", None, "kv_heads", None)
+    v = shard_act(v, "batch", None, "kv_heads", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(
+        q, k, v, positions, positions, causal=True,
+        window=window,
+        chunk=cfg.attn_chunk,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def encoder_attn_apply(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Bidirectional self-attention (encoder side of enc-dec)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, positions, positions, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_attn_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, memory_k: jax.Array, memory_v: jax.Array,
+) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V
+    (memory_k/v: (B, Sm, KV, hd), already projected)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    Sm = memory_k.shape[1]
+    pos_q = jnp.zeros((x.shape[1],), jnp.int32)
+    pos_k = jnp.zeros((Sm,), jnp.int32)
+    o = chunked_attention(q, memory_k, memory_v, pos_q, pos_k, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def project_memory(p: dict, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Encoder output → cross-attention K/V (done once per request)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV caches + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Preallocated decode cache. ``length`` = cache capacity (sliding
+    window size or max seq); ``pos`` = tokens generated so far (scalar)."""
+
+    k: jax.Array     # (B, L, KV, hd) — RoPE-applied keys
+    v: jax.Array     # (B, L, KV, hd)
+    pos: jax.Array   # () int32
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache (§Perf serving lever): halves the per-token HBM read
+    (decode is cache-bandwidth-bound).  Per-(batch, slot, head) absmax
+    scales; dequantization fuses into the attention einsums."""
+
+    k: jax.Array        # (B, L, KV, hd) int8
+    v: jax.Array        # (B, L, KV, hd) int8
+    k_scale: jax.Array  # (B, L, KV) f16
+    v_scale: jax.Array  # (B, L, KV) f16
+    pos: jax.Array      # () int32
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (..., hd) → (int8 values, (...) f16 absmax scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / safe[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> KVCache:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return QuantKVCache(
+            k=jnp.zeros((batch, length, kv, hd), jnp.int8),
+            v=jnp.zeros((batch, length, kv, hd), jnp.int8),
+            k_scale=jnp.zeros((batch, length, kv), jnp.float16),
+            v_scale=jnp.zeros((batch, length, kv), jnp.float16),
+            pos=jnp.zeros((), jnp.int32),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, length, kv, hd), dtype),
+        v=jnp.zeros((batch, length, kv, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_from_prefill(k: jax.Array, v: jax.Array, length: int, pos: jax.Array,
+                       quantize: bool = False):
+    """Pack prefill K/V (B, S, KV, hd) into a decode cache of capacity
+    ``length`` with ring-buffer alignment (slot = position % length)."""
+    S = k.shape[1]
+    if S <= length:
+        pad = [(0, 0), (0, length - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    else:
+        off = S % length
+        k = jnp.roll(k[:, -length:], off, axis=1)
+        v = jnp.roll(v[:, -length:], off, axis=1)
+    if quantize:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        return QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs, pos=pos)
+    return KVCache(k=k, v=v, pos=pos)
+
+
+def gqa_decode_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache,
+    window: Optional[int] = None,
+):
+    """One-token decode. x: (B, 1, D). Ring-buffer write when windowed.
+    Handles both bf16 (KVCache) and int8 (QuantKVCache) caches."""
+    B = x.shape[0]
+    L = cache.k.shape[1]
+    pos = cache.pos
+    quant = isinstance(cache, QuantKVCache)
+    # ring-buffer write: for a full-length cache (L ≥ max seq) pos % L == pos,
+    # so the same indexing covers both the windowed and the full case.
+    slot = pos % L
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    positions = pos[None].astype(jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    if quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        k_cache = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+        ks_cache = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
+        vs_cache = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+    k_cache = shard_act(k_cache, "batch", "cache_seq", "kv_heads", None)
+    v_cache = shard_act(v_cache, "batch", "cache_seq", "kv_heads", None)
+
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    H = cfg.n_heads
+    R = H // KV
+    qg = q.reshape(B, KV, R, hd)
+    s = jnp.einsum("bkrh,blkh->bkrl", qg.astype(jnp.float32), k_cache.astype(jnp.float32))
+    if quant:
+        s = s * ks_cache.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    s = s / jnp.sqrt(jnp.float32(hd))
+    # slots < min(pos+1, L) hold real tokens (ring wraps; full cache fills L)
+    valid = jnp.arange(L) < jnp.minimum(pos + 1, L)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    if quant:
+        w = w * vs_cache.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    o = jnp.einsum("bkrl,blkh->bkrh", w, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, H, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if quant:
+        return out, QuantKVCache(k=k_cache, v=v_cache, k_scale=ks_cache,
+                                 v_scale=vs_cache, pos=pos + 1)
+    return out, KVCache(k=k_cache, v=v_cache, pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+        return jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    return jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+
+
+def mla_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+    return_kv: bool = False,
+):
+    """Train/prefill MLA: expand the latent into per-head K/V, then run the
+    standard chunked attention (KV == H after expansion)."""
+    hd, r, lk = cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    q = _mla_q(p, cfg, x)                                   # (B,S,H,hd+r)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])          # (B,S,lk+r)
+    c, k_rope = ckv[..., :lk], ckv[..., lk:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"])      # (B,S,H,hd)
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"])           # (B,S,H,hd)
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (r,))], axis=-1)
+    o = chunked_attention(qf, kf, v, positions, positions, causal=True, chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if return_kv:
+        return out, (c, k_rope[:, :, 0, :])
+    return out
+
+
+def mla_cache_from_prefill(c: jax.Array, k_rope: jax.Array, length: int, pos: jax.Array) -> MLACache:
+    S = c.shape[1]
+    if S <= length:
+        return MLACache(
+            ckv=jnp.pad(c, [(0, 0), (0, length - S), (0, 0)]),
+            k_rope=jnp.pad(k_rope, [(0, 0), (0, length - S), (0, 0)]),
+            pos=pos,
+        )
+    off = S % length
+    return MLACache(
+        ckv=jnp.roll(c[:, -length:], off, axis=1),
+        k_rope=jnp.roll(k_rope[:, -length:], off, axis=1),
+        pos=pos,
+    )
+
+
+class MLACache(NamedTuple):
+    ckv: jax.Array    # (B, L, lk)  — latent KV
+    k_rope: jax.Array  # (B, L, r)  — RoPE'd shared key
+    pos: jax.Array
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> MLACache:
+    return MLACache(
+        ckv=jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, length, cfg.rope_head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: MLACache,
+) -> tuple[jax.Array, MLACache]:
+    """Absorbed-form MLA decode: score via q·W_uk against the latent cache —
+    cache stays (L, lk + r) per token, the decode-memory advantage of MLA."""
+    B = x.shape[0]
+    hd, r, lk, H = cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank, cfg.n_heads
+    L = cache.ckv.shape[1]
+    pos = cache.pos
+    slot = pos % L
+
+    q = _mla_q(p, cfg, x)[:, 0]                             # (B,H,hd+r)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope[:, None], pos[None], cfg.rope_theta)[:, 0]
+
+    ckv_new = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])[:, 0]  # (B, lk+r)
+    c_new, kr_new = ckv_new[..., :lk], ckv_new[..., lk:]
+    kr_new = apply_rope(kr_new[:, None, None], pos[None], cfg.rope_theta)[:, 0, 0]
+
+    ckv_cache = jax.lax.dynamic_update_slice(cache.ckv, c_new[:, None].astype(cache.ckv.dtype), (0, slot, 0))
+    kr_cache = jax.lax.dynamic_update_slice(cache.k_rope, kr_new[:, None].astype(cache.k_rope.dtype), (0, slot, 0))
+
+    # absorbed q: (B,H,lk)
+    q_eff = jnp.einsum("bhk,rhk->bhr", q_nope.astype(jnp.float32), p["w_uk"].astype(jnp.float32))
+    s = jnp.einsum("bhr,blr->bhl", q_eff, ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhk,blk->bhl", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd + r))
+    valid = jnp.arange(L) <= slot
+    s = jnp.where(valid[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhl,blr->bhr", w, ckv_cache.astype(jnp.float32))   # (B,H,lk)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["w_uv"].astype(jnp.float32))   # (B,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", o[:, None].astype(x.dtype), p["wo"])
+    return out, MLACache(ckv=ckv_cache, k_rope=kr_cache, pos=pos + 1)

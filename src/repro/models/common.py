@@ -1,0 +1,139 @@
+"""Shared model building blocks: parameter definitions, norms, RoPE, MLPs.
+
+Parameters are declared as :class:`ParamDef` trees — a single source of
+truth for shape, initialization *and* logical sharding axes — from which we
+derive (a) initialized pytrees, (b) PartitionSpec trees for pjit
+in_shardings, and (c) ShapeDtypeStruct trees for AOT dry-runs that never
+allocate memory.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple                 # logical axis names, len == len(shape)
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float = 1.0          # stddev multiplier (normal) / fan-in handled below
+
+    def with_leading(self, n: int, axis_name: str | None = None) -> "ParamDef":
+        """Stack this def along a new leading 'layers' axis (for scan)."""
+        return self._replace(shape=(n, *self.shape), axes=(axis_name, *self.axes))
+
+
+def _fan_in(shape: tuple) -> int:
+    return int(shape[-2]) if len(shape) >= 2 else int(shape[-1])
+
+
+def init_param(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    # truncated-normal with 1/sqrt(fan_in) scaling
+    std = d.scale / np.sqrt(max(_fan_in(d.shape), 1))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, d.shape)).astype(dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(key: jax.Array, defs: Any, dtype) -> Any:
+    """Initialize a pytree of ParamDef into arrays (deterministic per-leaf
+    keys derived from the tree path hash, so adding parameters does not
+    reshuffle existing ones)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = [init_param(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(defs: Any, dtype) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def
+    )
+
+
+def param_count(defs: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp_defs(d_model: int, d_ff: int) -> dict:
+    return {
+        "gate": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "up": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "down": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["gate"], p["up"], p["down"])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
+    """Mean next-token cross entropy in f32 with optional z-loss.
+
+    logits: (..., V); labels: (...,) int32. Returns (loss, metrics).
+    """
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    return loss, {"nll": jnp.mean(nll), "z": jnp.mean(lse * lse)}

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+TPU adaptation notes:
+  * We deliberately avoid the GShard one-hot ``(T, E, C)`` dispatch einsum —
+    at kimi-k2 scale (T ≈ 1M tokens, E = 384) that temp is ~10¹² elements.
+    Instead tokens are *scattered* into a per-expert capacity buffer
+    ``(E, C, D)`` (one scatter per top-k choice, k unrolled) and gathered
+    back after the expert matmuls. With experts sharded over the 'model'
+    mesh axis this lowers to XLA all-to-all-style collectives.
+  * Capacity C = ceil(T·k/E · capacity_factor); overflow tokens drop (their
+    combine weight is zero) — standard GShard semantics, and the router
+    aux loss pushes load balance so drops are rare at convergence.
+  * The router runs in f32; an auxiliary load-balance loss (Switch-style)
+    is returned to the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from repro.models.common import ParamDef, swiglu
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), scale=0.1),
+        "gate": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "up": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "down": ParamDef((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs["shared"] = {
+            "gate": ParamDef((d, fs), ("embed", "mlp")),
+            "up": ParamDef((d, fs), ("embed", "mlp")),
+            "down": ParamDef((fs, d), ("mlp", "embed")),
+        }
+    return defs
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out (B, S, D), aux_loss ()).
+
+    Dispatch: top-k routing → position-in-expert via cumsum → k scatters
+    into (E, C, D) → expert SwiGLU → k gathers, combine-weighted.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                       # (T, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                                 # mean router prob / expert
+    onehot_tot = jnp.zeros((T, E), jnp.float32)
+    for j in range(K):
+        onehot_tot = onehot_tot + jax.nn.one_hot(top_e[:, j], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_tot, axis=0) / K                        # fraction of tokens / expert
+    aux = E * jnp.sum(me * ce)
+
+    capacity = max(int(T * K / E * cfg.capacity_factor), 4)
+    capacity = min(capacity, T)
+
+    # position of each (token, choice) within its expert's capacity buffer:
+    # flatten choices in priority order (choice-major keeps top-1 first)
+    flat_e = top_e.T.reshape(K * T)                              # (K·T,) choice-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (K·T, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot         # running index
+    flat_pos = jnp.sum(pos_in_e, axis=1)                         # (K·T,)
+    keep = flat_pos < capacity
+    pos = flat_pos.reshape(K, T)
+    keep = keep.reshape(K, T)
+
+    buf = jnp.zeros((E, capacity, D), x.dtype)
+    buf = shard_act(buf, "experts", None, "act_embed")
+    for j in range(K):
+        # dropped (over-capacity) tokens scatter a zero update into slot 0
+        slot = jnp.minimum(pos[j], capacity - 1)
+        upd = jnp.where(keep[j][:, None], xt, 0).astype(buf.dtype)
+        buf = buf.at[top_e[:, j], slot].add(upd)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    hmid = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    h = jnp.einsum("ecf,efd->ecd", hmid, p["down"])
+    h = shard_act(h, "experts", None, "act_embed")
+
+    out = jnp.zeros((T, D), jnp.float32)
+    for j in range(K):
+        gathered = h[top_e[:, j], jnp.minimum(pos[j], capacity - 1)]
+        w = jnp.where(keep[j], top_p[:, j], 0.0)
+        out = out + w[:, None] * gathered.astype(jnp.float32)
+
+    out = out.astype(x.dtype).reshape(B, S, D)
+    if "shared" in p:
+        out = out + swiglu(x, p["shared"]["gate"], p["shared"]["up"], p["shared"]["down"])
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,20 @@
+"""repro.optim — pytree optimizers built in-repo (no optax dependency)."""
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adamw,
+    projected_sgd,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adamw",
+    "projected_sgd",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,139 @@
+"""Pytree optimizers: SGD / momentum / AdamW + the paper's projected step.
+
+Each optimizer is an ``Optimizer(init, update)`` pair:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = tree_add(params, updates)
+
+``updates`` are *deltas* (already scaled by −lr), so optimizer composition
+and the Byzantine-aggregated path stay uniform. Learning rates may be
+floats or callables ``step → lr`` (schedules below).
+
+``projected_sgd`` implements the paper's Fact-2.5 mirror-descent step: after
+the SGD move, project onto the ball ‖x − x₁‖ ≤ D (global l2 over the whole
+pytree) — used by the convex experiments and available for LM training.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import (
+    clip_by_global_norm,
+    project_ball,
+    tree_add,
+    tree_map,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params, step)
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1) -> Callable:
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def lr(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr: Schedule, grad_clip: float | None = None) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        return tree_scale(grads, -_lr_at(lr, step)), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False,
+             grad_clip: float | None = None) -> Optimizer:
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        m = tree_map(lambda mi, gi: beta * mi + gi, state["m"], grads)
+        d = tree_map(lambda mi, gi: beta * mi + gi, m, grads) if nesterov else m
+        return tree_scale(d, -_lr_at(lr, step)), {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: float | None = None) -> Optimizer:
+    """AdamW with f32 moments regardless of param dtype (bf16-safe)."""
+
+    def init(params):
+        f32 = lambda t: tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return {"m": f32(params), "v": f32(params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        m = tree_map(lambda mi, gi: b1 * mi + (1 - b1) * gi.astype(jnp.float32),
+                     state["m"], grads)
+        v = tree_map(lambda vi, gi: b2 * vi + (1 - b2) * jnp.square(gi.astype(jnp.float32)),
+                     state["v"], grads)
+        mh = tree_scale(m, 1.0 / (1 - b1 ** t))
+        vh = tree_scale(v, 1.0 / (1 - b2 ** t))
+        lr_t = _lr_at(lr, step)
+        upd = tree_map(
+            lambda mi, vi, pi: (-lr_t * (mi / (jnp.sqrt(vi) + eps)
+                                         + weight_decay * pi.astype(jnp.float32))
+                                ).astype(pi.dtype),
+            mh, vh, params,
+        )
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def projected_sgd(lr: Schedule, x1: Any, D: float,
+                  grad_clip: float | None = None) -> Optimizer:
+    """The paper's update: x ← Proj_{‖·−x₁‖≤D}(x − η ξ). ``update`` returns
+    the delta that lands exactly on the projected point."""
+    base = sgd(lr, grad_clip)
+
+    def update(grads, state, params, step):
+        delta, state2 = base.update(grads, state, params, step)
+        x_proj = project_ball(tree_add(params, delta), x1, D)
+        return tree_sub(x_proj, params), state2
+
+    return Optimizer(base.init, update)

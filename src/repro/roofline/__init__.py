@@ -1,0 +1,14 @@
+"""repro.roofline — three-term roofline analysis from compiled AOT artifacts."""
+from repro.roofline.hw import TPU_V5E
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+    model_flops,
+)
+
+__all__ = [
+    "TPU_V5E",
+    "collective_bytes_from_hlo",
+    "roofline_from_compiled",
+    "model_flops",
+]

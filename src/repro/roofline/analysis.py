@@ -1,0 +1,202 @@
+"""Roofline terms from compiled AOT artifacts (no hardware required).
+
+* ``compiled.cost_analysis()`` → per-device HLO FLOPs and bytes accessed.
+* collective bytes are NOT in cost_analysis: we parse the partitioned HLO
+  (``compiled.as_text()``) and sum the operand sizes of every all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute (counting
+  async ``-start`` forms once, skipping ``-done``).
+
+Terms (seconds, per device — the HLO is already partitioned):
+
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / ICI_bw
+
+plus MODEL_FLOPS = 6·N_active·D (train) so the useful-compute ratio
+MODEL_FLOPS / (chips × HLO_FLOPs) exposes remat/attention/dispatch overhead.
+"""
+from __future__ import annotations
+
+import re
+from typing import NamedTuple
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.common import ParamDef, is_def
+from repro.roofline.hw import HwSpec, TPU_V5E
+
+import jax
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"                        # result type (maybe tuple)
+    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?)\("                                 # op name + open paren
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class CollectiveStats(NamedTuple):
+    total_bytes: int
+    by_kind: dict
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Estimate per-device wire bytes of every collective in (partitioned)
+    HLO text.  Operands print without types in modern HLO, so we size each
+    op from its RESULT type with a kind-specific ring-algorithm factor
+    (g = replica group size, parsed from ``replica_groups=[n,g]``):
+
+      all-gather          result·(g−1)/g   (receive all shards but your own)
+      all-reduce          2·result·(g−1)/g (reduce-scatter + all-gather ring)
+      reduce-scatter      result·(g−1)     (input = g·result, wire (g−1)/g)
+      all-to-all          result·(g−1)/g
+      collective-permute  result           (one send per device)
+    """
+    by_kind: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        rtype, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        kind = op.replace("-start", "")
+        rbytes = _shape_bytes(rtype)
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else 2
+        g = max(g, 2)
+        if kind == "all-gather":
+            wire = rbytes * (g - 1) // g
+        elif kind == "all-reduce":
+            wire = 2 * rbytes * (g - 1) // g
+        elif kind == "reduce-scatter":
+            wire = rbytes * (g - 1)
+        elif kind == "all-to-all":
+            wire = rbytes * (g - 1) // g
+        else:  # collective-permute
+            wire = rbytes
+        by_kind[kind] = by_kind.get(kind, 0) + wire
+    return CollectiveStats(total_bytes=sum(by_kind.values()), by_kind=by_kind)
+
+
+class RooflineReport(NamedTuple):
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float              # per device
+    hlo_bytes: float              # per device
+    collective_bytes: float       # per device
+    collective_by_kind: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # global useful FLOPs (6·N_active·D etc.)
+    useful_ratio: float           # model_flops / (chips · hlo_flops)
+    peak_memory_bytes: float      # per-device peak from memory_analysis
+    fits_hbm: bool
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:24s} {self.shape:12s} {self.mesh:10s} "
+            f"c={self.t_compute*1e3:9.3f}ms m={self.t_memory*1e3:9.3f}ms "
+            f"n={self.t_collective*1e3:9.3f}ms [{self.bottleneck:10s}] "
+            f"useful={self.useful_ratio:6.1%} mem={self.peak_memory_bytes/1e9:7.2f}GB"
+        )
+
+
+def active_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts. Routed-expert leaves scale by
+    top_k / n_experts in the active count."""
+    from repro.models.model import model_defs
+
+    defs = model_defs(cfg)
+    total = active = 0
+    for leaf in jax.tree_util.tree_leaves(defs, is_leaf=is_def):
+        n = int(np.prod(leaf.shape))
+        total += n
+        if cfg.is_moe and "experts" in (leaf.axes or ()):
+            active += n * cfg.top_k // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill), 2·N_active·batch (decode: one token per sequence)."""
+    _, act = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * act * shape.global_batch * shape.seq_len
+    return 2.0 * act * shape.global_batch
+
+
+def roofline_from_compiled(
+    compiled, arch: str, shape: InputShape, mesh_desc: str, n_chips: int,
+    cfg: ModelConfig, hw: HwSpec = TPU_V5E,
+) -> RooflineReport:
+    # loop-aware costs from the partitioned HLO text: XLA's cost_analysis()
+    # counts while bodies once, so scanned models would undercount by the
+    # trip counts (see repro.roofline.hlo_cost)
+    from repro.roofline.hlo_cost import cost_from_hlo_text
+
+    hlo_text = compiled.as_text()
+    lc = cost_from_hlo_text(hlo_text)
+    flops = float(lc.flops)
+    byts = float(lc.bytes_accessed)
+    coll = CollectiveStats(
+        total_bytes=int(lc.collective_bytes), by_kind=lc.collective_by_kind
+    )
+
+    mem = compiled.memory_analysis()
+    peak = float(
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0)
+    )
+
+    t_c = flops / hw.peak_flops_bf16
+    t_m = byts / hw.hbm_bw
+    t_n = coll.total_bytes / (hw.ici_bw_per_link * hw.ici_links)
+    bottleneck = max(
+        [("compute", t_c), ("memory", t_m), ("collective", t_n)], key=lambda kv: kv[1]
+    )[0]
+    mf = model_flops(cfg, shape)
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_desc, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=float(coll.total_bytes), collective_by_kind=coll.by_kind,
+        t_compute=t_c, t_memory=t_m, t_collective=t_n, bottleneck=bottleneck,
+        model_flops=mf, useful_ratio=mf / max(n_chips * flops, 1.0),
+        peak_memory_bytes=peak, fits_hbm=peak <= hw.hbm_bytes,
+    )

@@ -1,0 +1,315 @@
+"""Loop-aware cost model over partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — our
+models scan over layer groups / KV chunks / loss chunks, so FLOPs, bytes
+and collective bytes would be undercounted by the trip counts (≈10–30×).
+This module re-derives the three roofline inputs from ``compiled.as_text()``
+with explicit call-graph multipliers:
+
+* parse every computation into ops (name → result type, opcode, operands,
+  raw attrs);
+* resolve a ``while`` op's trip count from the constant bound in its
+  condition computation (the canonical lowered-scan pattern ``lt(iv, K)``);
+* walk the call graph from ENTRY with a multiplier: while bodies multiply
+  by trips, fusions/calls keep the parent multiplier;
+* FLOPs: 2·numel(result)·K for dot ops (K recovered from operand shapes via
+  a per-computation symbol table — operand *names* are typed by their
+  defining line), plus numel(result) for elementwise/reduce ops;
+* bytes: fusion/top-level op boundary traffic (operands + result numel
+  bytes), the standard materialization-point approximation of HBM traffic;
+* collectives: wire bytes as in :mod:`repro.roofline.analysis`, scaled by
+  the loop multiplier.
+"""
+from __future__ import annotations
+
+import re
+from typing import NamedTuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\) -> .+ \{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT )?%([\w\.\-]+) = (\([^)]*\)|\S+) ([\w\-]+)\((.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "rsqrt", "sqrt", "tanh", "power", "negate", "abs", "compare",
+    "select", "and", "or", "xor", "reduce", "convert",
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+class HloOp(NamedTuple):
+    name: str
+    rtype: str
+    opcode: str
+    rest: str          # everything after the open paren (operands + attrs)
+
+
+def _strip_layout(type_str: str) -> str:
+    """Normalize an HLO type string for alias comparison (drop layouts)."""
+    return re.sub(r"\{[^}]*\}", "", type_str).replace(" ", "")
+
+
+def _numel_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) summed over all shapes in a (possibly tuple) type."""
+    n_el = n_by = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_el += n
+        n_by += n * _DTYPE_BYTES[dt]
+    return n_el, n_by
+
+
+def parse_hlo_computations(text: str) -> dict[str, list[HloOp]]:
+    comps: dict[str, list[HloOp]] = {}
+    cur: list[HloOp] | None = None
+    entry_marker = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            name = hdr.group(1)
+            cur = comps.setdefault(name, [])
+            if line.startswith("ENTRY"):
+                entry_marker = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            cur.append(HloOp(m.group(1), m.group(2), m.group(3), m.group(4)))
+    if entry_marker:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+class HloCost(NamedTuple):
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_by_kind: dict
+    collective_by_op: dict     # op_name metadata → wire bytes (attribution)
+    bytes_by_op: dict          # op_name metadata → HBM bytes (attribution)
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _op_label(op: "HloOp") -> str:
+    m = _OPNAME_RE.search(op.rest)
+    if not m:
+        return op.opcode
+    name = m.group(1)
+    # keep the jaxpr-level tail: "jit(f)/a/b/c" → last two segments
+    parts = name.split("/")
+    return "/".join(parts[-2:]) if len(parts) > 1 else name
+
+
+def _trip_count(cond_ops: list[HloOp]) -> int:
+    """Largest integer constant in the loop condition — the canonical
+    lowered-scan bound. 1 if nothing found (conservative)."""
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*(-?\d+)\s*\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: HloOp, symtab: dict[str, str]) -> float:
+    out_el, _ = _numel_bytes(op.rtype)
+    # contracted size = lhs elements / product(lhs batch+free dims in result)
+    operands = _OPERAND_RE.findall(op.rest.split("metadata")[0])
+    if not operands:
+        return 2.0 * out_el
+    lhs_type = symtab.get(operands[0], "")
+    lhs_el, _ = _numel_bytes(lhs_type)
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if mm and lhs_type:
+        dims_m = _SHAPE_RE.search(lhs_type)
+        if dims_m:
+            dims = [int(d) for d in dims_m.group(2).split(",") if d]
+            for idx in mm.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+    return 2.0 * out_el * k
+
+
+def _fused_param_slice_bytes(fused_ops: list[HloOp]) -> dict[int, int]:
+    """For a fused computation: parameter index → slice bytes, for
+    parameters whose only use is a dynamic-slice (gather-one-step pattern)."""
+    if not fused_ops:
+        return {}
+    param_idx: dict[str, int] = {}
+    for op in fused_ops:
+        if op.opcode == "parameter":
+            m = re.match(r"\s*(\d+)\s*\)", op.rest)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    uses: dict[str, list[HloOp]] = {}
+    for op in fused_ops:
+        for nm in _OPERAND_RE.findall(op.rest.split("metadata")[0]):
+            if nm in param_idx:
+                uses.setdefault(nm, []).append(op)
+    out: dict[int, int] = {}
+    for pname, users in uses.items():
+        if users and all(u.opcode == "dynamic-slice" for u in users):
+            total = 0
+            for u in users:
+                _, b = _numel_bytes(u.rtype)
+                total += b
+            out[param_idx[pname]] = total
+    return out
+
+
+def cost_from_hlo_text(text: str) -> HloCost:
+    comps = parse_hlo_computations(text)
+    if "__entry__" not in comps:
+        return HloCost(0.0, 0.0, 0.0, {})
+
+    flops = 0.0
+    byts = 0.0
+    coll: dict[str, float] = {}
+    coll_by_op: dict[str, float] = {}
+    bytes_by_op: dict[str, float] = {}
+
+    def _acc(d, key, val):
+        d[key] = d.get(key, 0.0) + val
+
+    def symtab_of(ops: list[HloOp]) -> dict[str, str]:
+        return {o.name: o.rtype for o in ops}
+
+    seen_stack: set[tuple[str, float]] = set()
+
+    def walk(comp_name: str, mult: float, top_level: bool):
+        nonlocal flops, byts
+        ops = comps.get(comp_name)
+        if ops is None:
+            return
+        symtab = symtab_of(ops)
+        for op in ops:
+            code = op.opcode
+            if code == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    walk(body, mult * trips, top_level)
+                continue
+            if code in ("fusion", "call"):
+                cm = _CALL_ATTR.search(op.rest)
+                # boundary traffic: operands + result, refined two ways:
+                # (a) in-place accumulators — an operand with exactly the
+                #     result's type is aliased (scan-grad DUS accumulation):
+                #     skip the full buffer, the real traffic is the slice;
+                # (b) fused dynamic-slice reads — a fusion parameter whose
+                #     only use inside the fused computation is a
+                #     dynamic-slice only reads the slice, not the buffer
+                #     (scan xs/cache slicing) — use the slice bytes.
+                _, rb = _numel_bytes(op.rtype)
+                operand_names = _OPERAND_RE.findall(
+                    op.rest.split(", calls")[0].split("metadata")[0]
+                )
+                overrides = (
+                    _fused_param_slice_bytes(comps.get(cm.group(1), []))
+                    if cm else {}
+                )
+                aliased = False
+                ob = 0
+                for pi, nm in enumerate(operand_names):
+                    t = symtab.get(nm, "")
+                    if not aliased and t and _strip_layout(t) == _strip_layout(op.rtype):
+                        aliased = True      # skip the aliased accumulator once
+                        continue
+                    _, b = _numel_bytes(t)
+                    if pi in overrides:
+                        b = min(b, overrides[pi])
+                    ob += b
+                contrib = mult * (ob if aliased else rb + ob)
+                byts += contrib
+                _acc(bytes_by_op, _op_label(op), contrib)
+                if cm:
+                    walk(cm.group(1), mult, False)
+                continue
+            if code in ("dot", "convolution"):
+                flops += mult * _dot_flops(op, symtab)
+                if top_level:
+                    _, rb = _numel_bytes(op.rtype)
+                    byts += mult * rb * 3  # lhs+rhs+out rough
+                continue
+            base = code.replace("-start", "")
+            if base in _COLLECTIVES:
+                if code.endswith("-done"):
+                    continue
+                _, rb = _numel_bytes(op.rtype)
+                gm = _GROUPS_RE.search(op.rest)
+                g = max(int(gm.group(2)) if gm else 2, 2)
+                if base == "all-gather":
+                    wire = rb * (g - 1) / g
+                elif base == "all-reduce":
+                    wire = 2 * rb * (g - 1) / g
+                elif base == "reduce-scatter":
+                    wire = rb * (g - 1)
+                elif base == "all-to-all":
+                    wire = rb * (g - 1) / g
+                else:
+                    wire = rb
+                coll[base] = coll.get(base, 0.0) + mult * wire
+                _acc(coll_by_op, f"{base}:{_op_label(op)}", mult * wire)
+                continue
+            if code in _ELEMENTWISE_FLOP_OPS:
+                out_el, rb = _numel_bytes(op.rtype)
+                flops += mult * out_el
+                if top_level:
+                    byts += mult * rb
+                continue
+            if code == "dynamic-update-slice":
+                # in-place: traffic = the update slice (operand 1), not the buffer
+                ops_n = _OPERAND_RE.findall(op.rest.split("metadata")[0])
+                upd = symtab.get(ops_n[1], "") if len(ops_n) > 1 else ""
+                _, ub = _numel_bytes(upd)
+                byts += mult * 2 * ub
+                continue
+            if top_level and code in ("copy", "transpose", "concatenate",
+                                      "gather", "scatter", "sort", "pad"):
+                _, rb = _numel_bytes(op.rtype)
+                byts += mult * 2 * rb
+
+    walk("__entry__", 1.0, True)
+    top = lambda d, n=20: dict(sorted(d.items(), key=lambda kv: -kv[1])[:n])
+    return HloCost(
+        flops=flops,
+        bytes_accessed=byts,
+        collective_bytes=sum(coll.values()),
+        collective_by_kind={k: float(v) for k, v in coll.items()},
+        collective_by_op=top(coll_by_op),
+        bytes_by_op=top(bytes_by_op),
+    )

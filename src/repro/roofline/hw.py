@@ -1,0 +1,23 @@
+"""Target-hardware constants (TPU v5e) for the roofline terms."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class HwSpec(NamedTuple):
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw_per_link: float     # bytes/s per link
+    ici_links: int             # links per chip participating in a collective
+    hbm_bytes: float           # capacity per chip
+
+
+TPU_V5E = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=1,               # conservative: one active link per chip
+    hbm_bytes=16e9,
+)

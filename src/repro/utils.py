@@ -1,0 +1,164 @@
+"""Small pytree / math utilities shared across the framework.
+
+Everything here is pure JAX (jit/vmap/scan friendly) and dependency-free —
+we deliberately do not depend on optax/flax/chex since the substrate is
+built in-repo.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree arithmetic
+# ---------------------------------------------------------------------------
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return tree_map(jnp.zeros_like, a)
+
+
+def tree_ones_like(a: PyTree) -> PyTree:
+    return tree_map(jnp.ones_like, a)
+
+
+def tree_vdot(a: PyTree, b: PyTree) -> jax.Array:
+    """Sum of elementwise products across all leaves (float32 accumulate)."""
+    leaves = tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sq_norm(a: PyTree) -> jax.Array:
+    return tree_vdot(a, a)
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def global_norm(a: PyTree) -> jax.Array:
+    return tree_norm(a)
+
+
+def tree_count_params(a: PyTree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(a)))
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_random_normal(key: jax.Array, like: PyTree, scale: float = 1.0) -> PyTree:
+    """A tree of iid normal leaves shaped like ``like``."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = jax.random.split(key, len(leaves))
+    new = [
+        scale * jax.random.normal(k, l.shape, l.dtype if jnp.issubdtype(l.dtype, jnp.floating) else jnp.float32)
+        for k, l in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def tree_flatten_vector(a: PyTree) -> jax.Array:
+    """Concatenate all leaves into one flat float32 vector (small trees only)."""
+    leaves = jax.tree_util.tree_leaves(a)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def tree_unflatten_vector(vec: jax.Array, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flatten_vector` given a template tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, ofs = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(vec[ofs : ofs + n].reshape(l.shape).astype(l.dtype))
+        ofs += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# projections (paper uses ball-constrained mirror descent, Fact 2.5)
+# ---------------------------------------------------------------------------
+
+def project_ball(x: PyTree, center: PyTree, radius) -> PyTree:
+    """Euclidean projection of ``x`` onto {y : ||y - center|| <= radius}.
+
+    Operates on whole pytrees with the global l2 norm, matching the paper's
+    single-vector iterate x ∈ R^d.
+    """
+    delta = tree_sub(x, center)
+    nrm = tree_norm(delta)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+    return tree_add(center, tree_scale(delta, scale))
+
+
+def clip_by_global_norm(g: PyTree, max_norm) -> PyTree:
+    nrm = tree_norm(g)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-30))
+    return tree_scale(g, scale)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int, value=0.0) -> jax.Array:
+    """Pad ``axis`` of x up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def fold_key(key: jax.Array, *data: int) -> jax.Array:
+    for d in data:
+        key = jax.random.fold_in(key, d)
+    return key
+
+
+def chunked(seq: Iterable, n: int):
+    seq = list(seq)
+    for i in range(0, len(seq), n):
+        yield seq[i : i + n]
+
+
+@functools.lru_cache(maxsize=None)
+def log_c(m: int, T: int, delta: float) -> float:
+    """The paper's C = log(16 m T / δ) (Section 3.1)."""
+    return float(np.log(16.0 * m * T / delta))

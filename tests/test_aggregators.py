@@ -1,0 +1,95 @@
+"""Baseline aggregators: correctness + robustness semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import (
+    aggregate_coordinate_median,
+    aggregate_geometric_median,
+    aggregate_krum,
+    aggregate_mean,
+    aggregate_medoid,
+    aggregate_trimmed_mean,
+    get_aggregator,
+)
+
+
+@pytest.fixture
+def clustered(rng):
+    good = 0.1 * jax.random.normal(rng, (12, 8)) + 1.0
+    bad = 100.0 * jnp.ones((4, 8))
+    return jnp.concatenate([good, bad]), good
+
+
+def test_mean_matches_numpy(rng):
+    x = jax.random.normal(rng, (10, 5))
+    np.testing.assert_allclose(aggregate_mean(x), np.mean(np.asarray(x), axis=0), rtol=1e-6)
+
+
+def test_coordinate_median_matches_numpy(rng):
+    x = jax.random.normal(rng, (9, 7))
+    np.testing.assert_allclose(
+        aggregate_coordinate_median(x), np.median(np.asarray(x), axis=0), rtol=1e-6
+    )
+
+
+def test_trimmed_mean_drops_extremes():
+    x = jnp.asarray([[0.9], [1.0], [1.1], [1000.0], [-1000.0]])
+    out = aggregate_trimmed_mean(x, trim_fraction=0.2)
+    np.testing.assert_allclose(out, [1.0], rtol=1e-5)
+
+
+def test_trimmed_mean_rejects_overtrim():
+    with pytest.raises(ValueError):
+        aggregate_trimmed_mean(jnp.ones((4, 2)), trim_fraction=0.5)
+
+
+def test_krum_selects_cluster_member(clustered):
+    x, good = clustered
+    out = aggregate_krum(x, n_byzantine=4)
+    assert float(jnp.max(jnp.abs(out))) < 10.0  # a good row, not the 100s
+
+
+def test_multi_krum_averages_good(clustered):
+    x, good = clustered
+    out = aggregate_krum(x, n_byzantine=4, multi_k=4)
+    assert float(jnp.max(jnp.abs(out - 1.0))) < 1.0
+
+
+def test_medoid_is_actual_row(rng):
+    x = jax.random.normal(rng, (8, 4))
+    out = aggregate_medoid(x)
+    dists = jnp.sum(jnp.abs(x - out[None]), axis=1)
+    assert float(jnp.min(dists)) < 1e-6
+
+
+def test_geometric_median_robust(clustered):
+    x, good = clustered
+    gm = aggregate_geometric_median(x, n_iters=32)
+    assert float(jnp.linalg.norm(gm - 1.0)) < 1.5  # near the cluster, far from 100
+
+
+def test_geometric_median_minimizes_objective(rng):
+    x = jax.random.normal(rng, (12, 4))
+    gm = aggregate_geometric_median(x, n_iters=64)
+    def obj(y):
+        return float(jnp.sum(jnp.linalg.norm(x - y[None], axis=1)))
+    assert obj(gm) <= obj(jnp.mean(x, axis=0)) + 1e-3
+    assert obj(gm) <= obj(aggregate_medoid(x)) + 1e-3
+
+
+def test_registry_binds_kwargs(clustered):
+    x, _ = clustered
+    f = get_aggregator("krum", n_byzantine=4)
+    np.testing.assert_allclose(f(x), aggregate_krum(x, n_byzantine=4))
+    with pytest.raises(KeyError):
+        get_aggregator("nope")
+
+
+@pytest.mark.parametrize("name", ["mean", "coordinate_median", "medoid", "geometric_median"])
+def test_permutation_invariance(rng, name):
+    x = jax.random.normal(rng, (10, 6))
+    f = get_aggregator(name)
+    perm = jax.random.permutation(jax.random.PRNGKey(7), 10)
+    np.testing.assert_allclose(f(x), f(x[perm]), rtol=1e-4, atol=1e-5)

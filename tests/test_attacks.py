@@ -1,0 +1,57 @@
+"""Attack zoo semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import ATTACKS, apply_attack
+
+
+@pytest.fixture
+def setup(rng):
+    m, d = 8, 16
+    grads = jax.random.normal(rng, (m, d))
+    byz = jnp.arange(m) < 3
+    ctx = {"true_grad": jnp.ones((d,)) * 0.5, "V": 1.0, "step": 0}
+    return grads, byz, ctx
+
+
+def test_none_is_identity(setup, rng):
+    grads, byz, ctx = setup
+    np.testing.assert_array_equal(apply_attack("none", rng, grads, byz, ctx), grads)
+
+
+@pytest.mark.parametrize("name", sorted(set(ATTACKS) - {"none", "mirror"}))
+def test_good_rows_untouched(setup, rng, name):
+    grads, byz, ctx = setup
+    out = apply_attack(name, rng, grads, byz, ctx)
+    np.testing.assert_array_equal(out[~byz], grads[~byz])
+    assert out.shape == grads.shape
+
+
+def test_sign_flip(setup, rng):
+    grads, byz, ctx = setup
+    out = apply_attack("sign_flip", rng, grads, byz, ctx, scale=3.0)
+    np.testing.assert_allclose(out[byz], -3.0 * grads[byz], rtol=1e-6)
+
+
+def test_hidden_shift_within_deviation_bound(setup, rng):
+    grads, byz, ctx = setup
+    out = apply_attack("hidden_shift", rng, grads, byz, ctx, c=0.9)
+    dev = jnp.linalg.norm(out[byz] - ctx["true_grad"][None], axis=1)
+    assert float(jnp.max(dev)) <= 0.9 * ctx["V"] + 1e-5  # passes the ∇-check
+
+
+def test_alie_rows_close_to_good_stats(setup, rng):
+    grads, byz, ctx = setup
+    out = apply_attack("alie", rng, grads, byz, ctx, z=1.0)
+    mu = jnp.mean(grads[~byz], axis=0)
+    sd = jnp.std(grads[~byz], axis=0)
+    assert float(jnp.max(jnp.abs(out[byz][0] - (mu - sd)))) < 1e-4
+
+
+def test_mirror_uses_ctx(setup, rng):
+    grads, byz, ctx = setup
+    ctx = dict(ctx, mirror_grads=-grads)
+    out = apply_attack("mirror", rng, grads, byz, ctx)
+    np.testing.assert_array_equal(out[byz], -grads[byz])

@@ -1,0 +1,149 @@
+"""Unit tests for the paper's Algorithm 1 (filter + aggregation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.byzantine_sgd import (
+    ByzantineGuard,
+    GuardConfig,
+    GuardState,
+    counting_median_index,
+    filter_update,
+    pairwise_sq_dists_from_gram,
+)
+
+
+def make_guard(m=16, T=100, V=1.0, D=5.0):
+    return ByzantineGuard(GuardConfig(m=m, T=T, V=V, D=D))
+
+
+class TestGeometry:
+    def test_pairwise_from_gram_matches_direct(self, rng):
+        x = jax.random.normal(rng, (12, 40))
+        gram = x @ x.T
+        d2 = pairwise_sq_dists_from_gram(gram)
+        direct = jnp.sum((x[:, None] - x[None, :]) ** 2, axis=-1)
+        np.testing.assert_allclose(d2, direct, rtol=1e-4, atol=1e-4)
+
+    def test_pairwise_nonnegative_zero_diag(self, rng):
+        x = 100.0 * jax.random.normal(rng, (8, 5))
+        d2 = pairwise_sq_dists_from_gram(x @ x.T)
+        assert float(jnp.min(d2)) >= 0.0
+        np.testing.assert_allclose(jnp.diagonal(d2), 0.0, atol=1e-2)
+
+    def test_counting_median_picks_cluster_point(self, rng):
+        # 9 clustered points + 3 distant outliers: the median must be a
+        # cluster member (every cluster point has > m/2 within radius)
+        cluster = 0.1 * jax.random.normal(rng, (9, 4))
+        outliers = 50.0 + jax.random.normal(rng, (3, 4))
+        x = jnp.concatenate([cluster, outliers])
+        d2 = pairwise_sq_dists_from_gram(x @ x.T)
+        idx, found = counting_median_index(d2, jnp.asarray(2.0))
+        assert bool(found)
+        assert int(idx) < 9
+
+    def test_counting_median_fallback_is_medoid(self, rng):
+        # radius too small for any majority → fall back to global medoid
+        x = jax.random.normal(rng, (6, 3)) * 10
+        d2 = pairwise_sq_dists_from_gram(x @ x.T)
+        idx, found = counting_median_index(d2, jnp.asarray(1e-6))
+        assert not bool(found)
+        scores = jnp.sum(jnp.sqrt(d2), axis=1)
+        assert int(idx) == int(jnp.argmin(scores))
+
+
+class TestGuardStep:
+    def test_honest_workers_all_survive(self, rng):
+        guard = make_guard(m=8)
+        state = guard.init(d=16)
+        x1 = jnp.zeros((16,))
+        x = x1
+        for k in range(20):
+            key = jax.random.fold_in(rng, k)
+            noise = jax.random.normal(key, (8, 16))
+            noise = noise / jnp.linalg.norm(noise, axis=1, keepdims=True)  # ||dev||=1=V
+            grads = jnp.ones((8, 16)) * 0.1 + 0.5 * noise
+            state, xi, diag = guard.step(state, grads, x, x1)
+            x = x - 0.05 * xi
+        assert int(jnp.sum(state.alive)) == 8
+
+    def test_large_outlier_filtered_immediately(self, rng):
+        guard = make_guard(m=8, V=1.0)
+        state = guard.init(d=16)
+        x1 = jnp.zeros((16,))
+        grads = jnp.ones((8, 16)) * 0.1
+        grads = grads.at[3].set(100.0)  # gross outlier
+        state, xi, diag = guard.step(state, grads, x1, x1)
+        assert not bool(state.alive[3])
+        assert int(jnp.sum(state.alive)) == 7
+
+    def test_filtered_worker_never_returns(self, rng):
+        guard = make_guard(m=8, V=1.0)
+        state = guard.init(d=4)
+        x1 = jnp.zeros((4,))
+        bad = jnp.ones((8, 4)) * 0.1
+        bad = bad.at[0].set(50.0)
+        state, _, _ = guard.step(state, bad, x1, x1)
+        assert not bool(state.alive[0])
+        # behaves honestly afterwards — good_k ⊆ good_{k-1} keeps it out
+        honest = jnp.ones((8, 4)) * 0.1
+        state, _, _ = guard.step(state, honest, x1, x1)
+        assert not bool(state.alive[0])
+
+    def test_xi_is_filtered_mean_over_m(self, rng):
+        guard = make_guard(m=4, V=1.0)
+        state = guard.init(d=3)
+        x1 = jnp.zeros((3,))
+        grads = jnp.stack([
+            jnp.asarray([1.0, 0, 0]),
+            jnp.asarray([1.1, 0, 0]),
+            jnp.asarray([0.9, 0, 0]),
+            jnp.asarray([500.0, 0, 0]),   # filtered
+        ])
+        state, xi, _ = guard.step(state, grads, x1, x1)
+        # paper's ξ divides by m (=4), not |good|
+        np.testing.assert_allclose(xi[0], 3.0 / 4.0, rtol=1e-5)
+
+    def test_slow_drift_caught_by_martingale(self, rng):
+        """A worker whose per-step deviation stays within the ∇-check but
+        accumulates a one-directional bias must eventually trip the B check
+        (the cross-iteration martingale — the paper's key mechanism)."""
+        # bias b = 1.9/step vs threshold 𝔗_B(k) = 4V√(kC): the martingale
+        # catches at k ≈ (4V√C / b)² ≈ 340 steps — run 800 to be safe.
+        m, d = 8, 16
+        guard = ByzantineGuard(GuardConfig(m=m, T=800, V=2.0, D=5.0))
+        state = guard.init(d)
+        x1 = jnp.zeros((d,))
+        u = jnp.ones((d,)) / np.sqrt(d)
+        caught_at = None
+        for k in range(800):
+            key = jax.random.fold_in(rng, k)
+            noise = jax.random.normal(key, (m, d))
+            noise = noise / jnp.linalg.norm(noise, axis=1, keepdims=True)
+            grads = 0.1 * jnp.ones((m, d)) + 1.0 * noise
+            grads = grads.at[0].set(0.1 * jnp.ones((d,)) + 1.9 * u)  # biased, |dev| < V
+            state, _, _ = guard.step(state, grads, x1, x1)
+            if not bool(state.alive[0]):
+                caught_at = k
+                break
+        assert caught_at is not None, "drift attacker was never caught"
+        assert int(jnp.sum(state.alive)) == m - 1  # no good worker lost
+
+
+class TestThresholds:
+    def test_anytime_vs_fixed(self):
+        cfg_a = GuardConfig(m=8, T=100, V=1.0, D=2.0, threshold_mode="anytime")
+        cfg_f = GuardConfig(m=8, T=100, V=1.0, D=2.0, threshold_mode="fixed")
+        ta_a, tb_a = cfg_a.thresholds(jnp.asarray(4))
+        ta_f, tb_f = cfg_f.thresholds(jnp.asarray(4))
+        assert float(ta_a) < float(ta_f)  # anytime is tighter early
+        ta_a100, _ = cfg_a.thresholds(jnp.asarray(100))
+        np.testing.assert_allclose(float(ta_a100), float(ta_f), rtol=1e-6)
+
+    def test_threshold_formula(self):
+        cfg = GuardConfig(m=8, T=64, V=2.0, D=3.0, delta=1e-3)
+        ta, tb = cfg.thresholds(jnp.asarray(64))
+        C = np.log(16 * 8 * 64 / 1e-3)
+        np.testing.assert_allclose(float(ta), 4 * 3.0 * 2.0 * np.sqrt(64 * C), rtol=1e-6)
+        np.testing.assert_allclose(float(tb), 4 * 2.0 * np.sqrt(64 * C), rtol=1e-6)

@@ -1,0 +1,152 @@
+"""Distributed guard + trainer: exact vs sketch agreement, attack filtering,
+baseline aggregators at the tree level, spec builders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.byzantine_dp import (
+    DPGuardConfig,
+    apply_tree_attack,
+    guard_step,
+    init_guard_state,
+    sketch_tree,
+    worker_cross_gram,
+    worker_sq_norms,
+    worker_vdot,
+)
+from repro.distributed.trainer import (
+    aggregate_baseline,
+    build_train_step,
+    init_train_state,
+)
+from repro.models import build_model
+from repro.optim import adamw, sgd
+
+
+def tree_of(rng, W, scale=1.0):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "a": scale * jax.random.normal(k1, (W, 8, 4)),
+        "b": {"c": scale * jax.random.normal(k2, (W, 16))},
+    }
+
+
+class TestTreeAlgebra:
+    def test_worker_vdot_matches_flat(self, rng):
+        W = 6
+        g = tree_of(rng, W)
+        h = tree_of(jax.random.fold_in(rng, 1), W)
+        got = worker_vdot(g, h)
+        flat_g = jnp.concatenate([g["a"].reshape(W, -1), g["b"]["c"]], axis=1)
+        flat_h = jnp.concatenate([h["a"].reshape(W, -1), h["b"]["c"]], axis=1)
+        np.testing.assert_allclose(got, jnp.sum(flat_g * flat_h, axis=1), rtol=1e-5)
+
+    def test_cross_gram_matches_flat(self, rng):
+        W = 5
+        g = tree_of(rng, W)
+        flat = jnp.concatenate([g["a"].reshape(W, -1), g["b"]["c"]], axis=1)
+        np.testing.assert_allclose(worker_cross_gram(g), flat @ flat.T, rtol=1e-5)
+
+    def test_sketch_preserves_distances_approximately(self, rng):
+        W, k = 6, 2048
+        g = tree_of(rng, W, scale=1.0)
+        s = sketch_tree(g, k)
+        flat = jnp.concatenate([g["a"].reshape(W, -1), g["b"]["c"]], axis=1)
+        true_gram = flat @ flat.T
+        est_gram = s @ s.T
+        # diag exact in the guard; here check cross terms are in the ballpark
+        scale = float(jnp.mean(jnp.abs(true_gram)))
+        assert float(jnp.max(jnp.abs(est_gram - true_gram))) < 5.0 * scale
+
+
+class TestTreeAttacks:
+    def test_sign_flip_only_byz(self, rng):
+        W = 4
+        g = tree_of(rng, W)
+        byz = jnp.asarray([True, False, False, True])
+        out = apply_tree_attack("sign_flip", rng, g, byz, scale=2.0)
+        np.testing.assert_allclose(out["a"][0], -2.0 * g["a"][0], rtol=1e-6)
+        np.testing.assert_allclose(out["a"][1], g["a"][1], rtol=1e-6)
+
+    @pytest.mark.parametrize("name", ["none", "sign_flip", "noise", "constant_drift", "scaled_copy"])
+    def test_all_attacks_shape_preserving(self, rng, name):
+        W = 4
+        g = tree_of(rng, W)
+        byz = jnp.asarray([True, False, False, False])
+        out = apply_tree_attack(name, rng, g, byz)
+        assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(g)
+
+
+class TestBaselineAggregators:
+    def test_mean(self, rng):
+        g = tree_of(rng, 5)
+        out = aggregate_baseline("mean", g, 1)
+        np.testing.assert_allclose(out["a"], jnp.mean(g["a"], 0), rtol=1e-6)
+
+    def test_krum_selects_single_worker(self, rng):
+        g = tree_of(rng, 6, scale=0.1)
+        g["a"] = g["a"].at[2].add(100.0)   # outlier worker 2
+        out = aggregate_baseline("krum", g, 1)
+        dists = [float(jnp.sum(jnp.abs(out["a"] - g["a"][i]))) for i in range(6)]
+        assert np.argmin(dists) != 2
+
+    def test_trimmed_mean_robust(self, rng):
+        g = tree_of(rng, 8, scale=0.1)
+        g["a"] = g["a"].at[0].set(1e6)
+        out = aggregate_baseline("trimmed_mean", g, 2)
+        assert float(jnp.max(jnp.abs(out["a"]))) < 10.0
+
+
+class TestGuardModes:
+    @pytest.mark.parametrize("mode", ["exact", "sketch"])
+    def test_guard_filters_outlier(self, rng, mode):
+        W = 8
+        cfg = DPGuardConfig(n_workers=W, T=50, mode=mode, sketch_dim=1024,
+                            auto_v=True)
+        params = {"w": jnp.zeros((8, 4))}
+        state = init_guard_state(cfg, params)
+        for step in range(5):
+            g = {"w": 0.01 * jax.random.normal(jax.random.fold_in(rng, step), (W, 8, 4))
+                 + jnp.ones((W, 8, 4)) * 0.1}
+            g["w"] = g["w"].at[3].set(25.0)     # persistent gross outlier
+            state, xi, diag = guard_step(cfg, state, g, params, params)
+        assert not bool(state.alive[3])
+        assert int(jnp.sum(state.alive)) == W - 1
+
+    def test_exact_and_sketch_agree_on_clear_attack(self, rng):
+        W = 8
+        params = {"w": jnp.zeros((16,))}
+        masks = {}
+        for mode in ["exact", "sketch"]:
+            cfg = DPGuardConfig(n_workers=W, T=50, mode=mode, sketch_dim=4096, auto_v=True)
+            state = init_guard_state(cfg, params)
+            for step in range(5):
+                g = {"w": 0.01 * jax.random.normal(jax.random.fold_in(rng, step), (W, 16))}
+                g["w"] = g["w"].at[0].set(-30.0)
+                state, _, _ = guard_step(cfg, state, g, params, params)
+            masks[mode] = np.asarray(state.alive)
+        np.testing.assert_array_equal(masks["exact"], masks["sketch"])
+
+
+class TestTrainerIntegration:
+    @pytest.mark.slow
+    def test_byzantine_training_beats_mean_under_attack(self, rng):
+        cfg = get_config("internlm2-1.8b").reduced(max_d_model=128)
+        model = build_model(cfg)
+        from repro.data.synthetic import SyntheticTokens, make_worker_batch
+        stream = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32)
+        W = 8
+        byz = jnp.arange(W) < 2
+        losses = {}
+        for agg in ["byzantine_sgd", "mean"]:
+            dp = DPGuardConfig(n_workers=W, T=40, mode="exact", auto_v=True)
+            opt = adamw(3e-3, grad_clip=1.0)
+            ts = jax.jit(build_train_step(model, opt, dp, aggregator=agg, attack="sign_flip"))
+            state = init_train_state(model, opt, dp, rng)
+            for i in range(40):
+                batch = make_worker_batch(stream, W, 2, jnp.asarray(i))
+                state, m = ts(state, batch, byz, jax.random.fold_in(rng, i))
+            losses[agg] = float(m["loss_good_workers"])
+        assert losses["byzantine_sgd"] < losses["mean"] - 0.05

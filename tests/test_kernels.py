@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.countsketch import countsketch_pallas
+from repro.kernels.pairdist import gram_pallas
+from repro.kernels.robust_reduce import (
+    coordinate_median_pallas,
+    filtered_mean_pallas,
+    trimmed_mean_pallas,
+)
+
+SHAPES = [(4, 64), (8, 1000), (16, 4096), (17, 5555), (33, 257), (64, 2048)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(m, d, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d), jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram(m, d, dtype):
+    x = _data(m, d, dtype)
+    got = gram_pallas(x, d_block=512, interpret=True)
+    want = ref.gram_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_coordinate_median(m, d, dtype):
+    x = _data(m, d, dtype)
+    got = coordinate_median_pallas(x, d_block=512, interpret=True)
+    np.testing.assert_allclose(got, ref.coordinate_median_ref(x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("n_trim", [1, 2])
+def test_trimmed_mean(m, d, n_trim):
+    if 2 * n_trim >= m:
+        pytest.skip("overtrim")
+    x = _data(m, d, jnp.float32)
+    got = trimmed_mean_pallas(x, n_trim, d_block=512, interpret=True)
+    np.testing.assert_allclose(got, ref.trimmed_mean_ref(x, n_trim), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_filtered_mean(m, d, dtype):
+    x = _data(m, d, dtype)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(1), 0.6, (m,))
+    got = filtered_mean_pallas(x, mask, float(m), d_block=512, interpret=True)
+    want = ref.filtered_mean_ref(x, mask, float(m))
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("k", [16, 64, 128])
+@pytest.mark.parametrize("salt", [0, 7])
+def test_countsketch(m, d, k, salt):
+    x = _data(m, d, jnp.float32)
+    got = countsketch_pallas(x, k, salt=salt, d_block=512, interpret=True)
+    want = ref.countsketch_ref(x, k, salt=salt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_countsketch_inner_product_unbiased():
+    """Statistical property: E⟨s_x, s_y⟩ ≈ ⟨x, y⟩ over salts."""
+    d, k = 5000, 256
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, d))
+    y = jax.random.normal(jax.random.PRNGKey(3), (1, d))
+    true = float((x @ y.T)[0, 0])
+    ests = []
+    for salt in range(24):
+        sx = ref.countsketch_ref(x, k, salt=salt)
+        sy = ref.countsketch_ref(y, k, salt=salt)
+        ests.append(float((sx @ sy.T)[0, 0]))
+    # per-estimate std ≈ ‖x‖‖y‖/√k (CountSketch variance); mean-of-24 shrinks √24
+    se = float(jnp.linalg.norm(x) * jnp.linalg.norm(y)) / np.sqrt(k) / np.sqrt(len(ests))
+    err = abs(np.mean(ests) - true)
+    assert err < 3.0 * se, (err, se)
+
+
+def test_ops_dispatch_cpu_interpret(rng):
+    x = jax.random.normal(rng, (8, 300))
+    np.testing.assert_allclose(ops.gram(x), ref.gram_ref(x), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,30 @@
+"""Section-5 lower-bound distinguishing experiments (coarse but real)."""
+import jax
+import pytest
+
+from repro.core.lower_bound import (
+    distinguishing_experiment_linear,
+    distinguishing_experiment_strongly_convex,
+)
+
+
+@pytest.mark.slow
+def test_linear_threshold_behaviour():
+    key = jax.random.PRNGKey(0)
+    lo = distinguishing_experiment_linear(key, m=16, T=2, n_trials=48, alpha=0.3, eps=0.05)
+    hi = distinguishing_experiment_linear(key, m=16, T=1024, n_trials=48, alpha=0.3, eps=0.05)
+    # far below the α²V²D²/ε² threshold: near coin-flip; far above: near 1
+    assert float(lo.success_rate) < 0.75
+    assert float(hi.success_rate) > 0.9
+    assert hi.threshold_T == pytest.approx((0.3 ** 2) / (0.05 ** 2))
+
+
+@pytest.mark.slow
+def test_strongly_convex_threshold_behaviour():
+    key = jax.random.PRNGKey(1)
+    lo = distinguishing_experiment_strongly_convex(key, m=16, T=2, n_trials=48,
+                                                   alpha=0.3, eps_hat=0.05)
+    hi = distinguishing_experiment_strongly_convex(key, m=16, T=1024, n_trials=48,
+                                                   alpha=0.3, eps_hat=0.05)
+    assert float(lo.success_rate) < 0.75
+    assert float(hi.success_rate) > 0.9

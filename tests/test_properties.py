@@ -1,0 +1,91 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregators import (
+    aggregate_coordinate_median,
+    aggregate_krum,
+    aggregate_trimmed_mean,
+)
+from repro.core.byzantine_sgd import (
+    counting_median_index,
+    pairwise_sq_dists_from_gram,
+)
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arrays(m_min=3, m_max=12, d_min=1, d_max=16):
+    return st.tuples(
+        st.integers(m_min, m_max), st.integers(d_min, d_max), st.integers(0, 2**31 - 1)
+    ).map(lambda t: np.asarray(
+        jax.random.normal(jax.random.PRNGKey(t[2]), (t[0], t[1])) * 3.0
+    ))
+
+
+@given(arrays())
+def test_coordinate_median_within_range(x):
+    out = np.asarray(aggregate_coordinate_median(jnp.asarray(x)))
+    assert (out >= x.min(axis=0) - 1e-5).all()
+    assert (out <= x.max(axis=0) + 1e-5).all()
+
+
+@given(arrays(m_min=5))
+def test_trimmed_mean_within_untrimmed_range(x):
+    out = np.asarray(aggregate_trimmed_mean(jnp.asarray(x), trim_fraction=0.2))
+    s = np.sort(x, axis=0)
+    b = int(0.2 * x.shape[0])
+    assert (out >= s[b] - 1e-5).all()
+    assert (out <= s[x.shape[0] - b - 1] + 1e-5).all()
+
+
+@given(arrays(m_min=4))
+def test_krum_returns_input_row(x):
+    out = np.asarray(aggregate_krum(jnp.asarray(x), n_byzantine=1))
+    dists = np.abs(x - out[None]).sum(axis=1)
+    assert dists.min() < 1e-5
+
+
+@given(arrays())
+def test_pairwise_dists_symmetric_nonneg(x):
+    g = jnp.asarray(x) @ jnp.asarray(x).T
+    d2 = np.asarray(pairwise_sq_dists_from_gram(g))
+    assert (d2 >= 0).all()
+    np.testing.assert_allclose(d2, d2.T, rtol=1e-4, atol=1e-4)
+
+
+@given(arrays(m_min=5), st.floats(0.5, 50.0))
+def test_counting_median_majority_property(x, radius):
+    """If the counting median reports found=True, the returned point must
+    genuinely have a strict majority within the radius."""
+    g = jnp.asarray(x) @ jnp.asarray(x).T
+    d2 = pairwise_sq_dists_from_gram(g)
+    idx, found = counting_median_index(d2, jnp.asarray(radius))
+    if bool(found):
+        m = x.shape[0]
+        cnt = int(jnp.sum(d2[idx] <= radius * radius))
+        assert cnt * 2 > m
+
+
+@given(arrays(m_min=2), st.integers(4, 64), st.integers(0, 5))
+def test_countsketch_linear(x, k, salt):
+    """Sketching is linear: sk(a+b) == sk(a) + sk(b)."""
+    xa = jnp.asarray(x)
+    s_sum = ref.countsketch_ref(xa + xa, k, salt)
+    s_twice = 2.0 * ref.countsketch_ref(xa, k, salt)
+    np.testing.assert_allclose(s_sum, s_twice, rtol=1e-4, atol=1e-4)
+
+
+@given(arrays(m_min=4), st.integers(0, 2**31 - 1))
+def test_filtered_mean_in_convex_hull_coordinatewise(x, seed):
+    mask = np.asarray(jax.random.bernoulli(jax.random.PRNGKey(seed), 0.7, (x.shape[0],)))
+    if mask.sum() == 0:
+        return
+    out = np.asarray(ref.filtered_mean_ref(jnp.asarray(x), jnp.asarray(mask), float(mask.sum())))
+    sel = x[mask.astype(bool)]
+    assert (out >= sel.min(axis=0) - 1e-4).all()
+    assert (out <= sel.max(axis=0) + 1e-4).all()

@@ -1,0 +1,111 @@
+"""Sharding rules + spec builders (logical→mesh mapping invariants).
+
+These run on a single CPU device using AbstractMesh-free tiny meshes is not
+possible (1 device), so we validate the pure logic: divisibility fallback,
+conflict resolution, spec construction from ParamDefs, and the roofline
+HLO collective parser on synthetic HLO text.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (
+    LOGICAL_RULES_SINGLE_POD,
+    logical_to_spec,
+)
+from repro.models.model import model_defs
+from repro.roofline.analysis import collective_bytes_from_hlo, active_params, model_flops
+from repro.configs.base import INPUT_SHAPES
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape mapping (enough for logical_to_spec)."""
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+class TestLogicalToSpec:
+    def test_basic_mapping(self):
+        spec = logical_to_spec(("embed", "heads", None), (4096, 64, 128),
+                               LOGICAL_RULES_SINGLE_POD, MESH)
+        assert spec == P(None, "model", None)
+
+    def test_divisibility_fallback(self):
+        # kv=2 heads don't divide model=16 → replicate
+        spec = logical_to_spec(("embed", "kv_heads", None), (4096, 2, 128),
+                               LOGICAL_RULES_SINGLE_POD, MESH)
+        assert spec == P(None, None, None)
+
+    def test_conflict_earlier_dim_wins(self):
+        rules = dict(LOGICAL_RULES_SINGLE_POD, cache_seq="model", kv_heads="model")
+        spec = logical_to_spec(("batch", "cache_seq", "kv_heads", None),
+                               (128, 32768, 16, 128), rules, MESH)
+        assert spec == P("data", "model", None, None)
+
+    def test_tuple_axes(self):
+        rules = dict(LOGICAL_RULES_SINGLE_POD, worker=("pod", "data"))
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        spec = logical_to_spec(("worker", None), (32, 7), rules, mesh)
+        assert spec == P(("pod", "data"), None)
+
+    def test_no_rules_means_replicated(self):
+        spec = logical_to_spec(("embed", "heads"), (8, 8), None, None)
+        assert spec == P(None, None)
+
+
+class TestParamDefsCoverage:
+    @pytest.mark.parametrize("arch", ["llama3.2-3b", "kimi-k2-1t-a32b", "jamba-v0.1-52b"])
+    def test_all_leaves_have_axes_matching_rank(self, arch):
+        defs = model_defs(get_config(arch))
+        from repro.models.common import ParamDef, is_def
+        for leaf in jax.tree_util.tree_leaves(defs, is_leaf=is_def):
+            assert len(leaf.axes) == len(leaf.shape), leaf
+
+    def test_kimi_param_count_near_1t(self):
+        total, active = active_params(get_config("kimi-k2-1t-a32b"))
+        assert 0.8e12 < total < 1.3e12, total
+        assert 20e9 < active < 45e9, active
+
+    def test_dense_active_equals_total(self):
+        total, active = active_params(get_config("llama3.2-3b"))
+        assert total == active
+        assert 2.5e9 < total < 4.5e9
+
+
+class TestHloCollectiveParser:
+    HLO = """
+  %ag = f32[128,256]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = (f32[64]{0}, f32[32]{0}) all-reduce(%a, %b), replica_groups=[8,2]<=[16], to_apply=%add
+  %rs = bf16[4,8]{1,0} reduce-scatter(%c), replica_groups=[1,4]<=[4], dimensions={0}
+  %cp = f32[10]{0} collective-permute(%d), source_target_pairs={{0,1}}
+  %done = f32[1]{0} all-gather-done(%h)
+"""
+
+    def test_kinds_and_sizes(self):
+        stats = collective_bytes_from_hlo(self.HLO)
+        ag = 128 * 256 * 4 * 15 // 16
+        ar = 2 * (64 + 32) * 4 * 1 // 2
+        rs = 4 * 8 * 2 * 3
+        cp = 40
+        assert stats.by_kind["all-gather"] == ag
+        assert stats.by_kind["all-reduce"] == ar
+        assert stats.by_kind["reduce-scatter"] == rs
+        assert stats.by_kind["collective-permute"] == cp
+        assert stats.total_bytes == ag + ar + rs + cp
+
+
+class TestModelFlops:
+    def test_train_flops_scale(self):
+        mf = model_flops(get_config("llama3.2-3b"), INPUT_SHAPES["train_4k"])
+        # 6 · ~3.4B · 1M tokens ≈ 2.1e16
+        assert 1e16 < mf < 4e16
+
+    def test_decode_flops_tiny(self):
+        mf = model_flops(get_config("llama3.2-3b"), INPUT_SHAPES["decode_32k"])
+        assert mf < 1e13

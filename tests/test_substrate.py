@@ -1,0 +1,170 @@
+"""Optimizers, schedules, checkpointing, data pipeline, utils."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.problems import (
+    make_least_squares_problem,
+    make_logistic_problem,
+    make_quadratic_problem,
+)
+from repro.data.synthetic import SyntheticTokens, make_worker_batch
+from repro.optim import adamw, cosine_schedule, linear_warmup_cosine, momentum, projected_sgd, sgd
+from repro.utils import (
+    clip_by_global_norm,
+    project_ball,
+    tree_add,
+    tree_norm,
+    tree_vdot,
+)
+
+
+class TestOptimizers:
+    def _quad_min(self, opt, steps=400):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"x": jnp.zeros(3)}
+        state = opt.init(params)
+        for i in range(steps):
+            g = {"x": 2.0 * (params["x"] - target)}
+            upd, state = opt.update(g, state, params, jnp.asarray(i))
+            params = tree_add(params, upd)
+        return float(jnp.max(jnp.abs(params["x"] - target)))
+
+    def test_sgd(self):
+        assert self._quad_min(sgd(0.1)) < 1e-3
+
+    def test_momentum(self):
+        assert self._quad_min(momentum(0.02, beta=0.9)) < 1e-3
+
+    def test_adamw(self):
+        assert self._quad_min(adamw(0.05)) < 1e-2
+
+    def test_grad_clip_bounds_step(self):
+        opt = sgd(1.0, grad_clip=0.5)
+        upd, _ = opt.update({"x": jnp.asarray([100.0, 0.0])}, {}, {"x": jnp.zeros(2)},
+                            jnp.asarray(0))
+        assert abs(float(tree_norm(upd)) - 0.5) < 1e-5
+
+    def test_projected_sgd_stays_in_ball(self):
+        x1 = {"x": jnp.zeros(2)}
+        opt = projected_sgd(1.0, x1, D=1.0)
+        params = {"x": jnp.asarray([0.9, 0.0])}
+        state = opt.init(params)
+        upd, _ = opt.update({"x": jnp.asarray([-5.0, 0.0])}, state, params, jnp.asarray(0))
+        new = tree_add(params, upd)
+        assert float(tree_norm(new)) <= 1.0 + 1e-5
+
+    def test_adamw_weight_decay_shrinks(self):
+        opt = adamw(0.1, weight_decay=0.1)
+        params = {"x": jnp.asarray([10.0])}
+        state = opt.init(params)
+        upd, _ = opt.update({"x": jnp.asarray([0.0])}, state, params, jnp.asarray(0))
+        assert float(upd["x"][0]) < 0.0
+
+
+class TestSchedules:
+    def test_cosine_endpoints(self):
+        s = cosine_schedule(1.0, 100, final_frac=0.1)
+        assert abs(float(s(jnp.asarray(0))) - 1.0) < 1e-5
+        assert abs(float(s(jnp.asarray(100))) - 0.1) < 1e-5
+
+    def test_warmup_ramps(self):
+        s = linear_warmup_cosine(1.0, warmup=10, total_steps=100)
+        assert float(s(jnp.asarray(0))) < 0.11
+        assert float(s(jnp.asarray(10))) > 0.9
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng):
+        tree = {"a": jax.random.normal(rng, (4, 3)),
+                "b": [jnp.arange(5), {"c": jnp.float32(2.5)}]}
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        restored, step = restore_checkpoint(str(tmp_path), tree)
+        assert step == 7
+        for x, y in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_allclose(x, y)
+
+    def test_structure_mismatch_raises(self, tmp_path, rng):
+        save_checkpoint(str(tmp_path), 1, {"a": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), {"zz": jnp.zeros(3)})
+
+    def test_latest_of_many(self, tmp_path):
+        for s in (1, 5, 3):
+            save_checkpoint(str(tmp_path), s, {"a": jnp.zeros(2)})
+        assert latest_step(str(tmp_path)) == 5
+
+
+class TestSyntheticData:
+    def test_deterministic_per_worker_step(self):
+        st = SyntheticTokens(vocab_size=97, seq_len=16, seed=3)
+        a = st.sample(jnp.asarray(1), jnp.asarray(5), 4)
+        b = st.sample(jnp.asarray(1), jnp.asarray(5), 4)
+        np.testing.assert_array_equal(a, b)
+        c = st.sample(jnp.asarray(2), jnp.asarray(5), 4)
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_batch_shapes_and_labels(self):
+        st = SyntheticTokens(vocab_size=97, seq_len=16)
+        batch = make_worker_batch(st, 4, 2, jnp.asarray(0))
+        assert batch["tokens"].shape == (4, 2, 16)
+        assert batch["labels"].shape == (4, 2, 16)
+        assert int(jnp.max(batch["tokens"])) < 97
+
+    def test_poisoning_flips_only_masked(self):
+        st = SyntheticTokens(vocab_size=96, seq_len=8)
+        mask = jnp.asarray([True, False, False, False])
+        clean = make_worker_batch(st, 4, 2, jnp.asarray(0))
+        pois = make_worker_batch(st, 4, 2, jnp.asarray(0), poison_mask=mask)
+        assert not np.array_equal(np.asarray(clean["labels"][0]), np.asarray(pois["labels"][0]))
+        np.testing.assert_array_equal(clean["labels"][1:], pois["labels"][1:])
+
+    def test_learnable_structure(self):
+        """Next token is a deterministic function of current + small noise —
+        bigram mutual information should be high (sanity that a model can
+        learn it)."""
+        st = SyntheticTokens(vocab_size=64, seq_len=64, noise_levels=4)
+        seq = np.asarray(st.sample(jnp.asarray(0), jnp.asarray(0), 8))
+        nxt = (st.a * seq[:, :-1] + st.b) % st.vocab_size
+        diff = (seq[:, 1:] - nxt) % st.vocab_size
+        assert diff.max() < st.noise_levels
+
+
+class TestProblems:
+    def test_quadratic_properties(self):
+        p = make_quadratic_problem(d=8, sigma=0.5, L=4.0, V=1.0)
+        g = p.grad(p.x_star)
+        assert float(jnp.linalg.norm(g)) < 1e-5
+        # deviation bound holds a.s.
+        for i in range(20):
+            dev = p.stoch_grad(jax.random.PRNGKey(i), p.x1) - p.grad(p.x1)
+            assert float(jnp.linalg.norm(dev)) <= p.V + 1e-5
+
+    def test_least_squares_xstar(self):
+        p = make_least_squares_problem(d=6, n_data=128, noise=0.01)
+        assert float(jnp.linalg.norm(p.grad(p.x_star))) < 1e-4
+
+    def test_logistic_gradient_correct(self):
+        p = make_logistic_problem(d=5, n_data=64)
+        gnum = jax.grad(p.f)(p.x1)
+        np.testing.assert_allclose(p.grad(p.x1), gnum, rtol=1e-4, atol=1e-5)
+
+
+class TestUtils:
+    def test_project_ball(self, rng):
+        x = {"a": jnp.asarray([3.0, 4.0])}
+        c = {"a": jnp.zeros(2)}
+        p = project_ball(x, c, 1.0)
+        np.testing.assert_allclose(tree_norm(p), 1.0, rtol=1e-5)
+        inside = project_ball({"a": jnp.asarray([0.1, 0.0])}, c, 1.0)
+        np.testing.assert_allclose(inside["a"], [0.1, 0.0], rtol=1e-6)
+
+    def test_tree_vdot_symmetric(self, rng):
+        a = {"x": jax.random.normal(rng, (3, 3))}
+        b = {"x": jax.random.normal(jax.random.fold_in(rng, 1), (3, 3))}
+        np.testing.assert_allclose(tree_vdot(a, b), tree_vdot(b, a), rtol=1e-6)

@@ -1,0 +1,59 @@
+"""End-to-end behaviour tests for the whole system.
+
+The headline claim, at LM scale: training with ByzantineSGD aggregation
+under attack (α = 1/4 sign-flipping workers) converges like clean training,
+while naive mean aggregation degrades; the guard identifies exactly the
+Byzantine workers and never drops an honest one.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.train import run_training
+
+
+@pytest.mark.slow
+def test_e2e_guard_filters_and_learns():
+    state, hist = run_training(
+        "internlm2-1.8b", reduced=True, workers=8, per_worker_batch=2,
+        seq_len=64, steps=40, alpha=0.25, attack="sign_flip",
+        aggregator="byzantine_sgd", guard_mode="exact", lr=3e-3, d_model=128,
+    )
+    first, last = hist[0], hist[-1]
+    assert last["loss_good_workers"] < first["loss_good_workers"]
+    assert int(last["n_alive"]) == 6            # both attackers removed
+    assert int(last["byz_alive"]) == 0
+    assert all(int(h["good_filtered"]) == 0 for h in hist)
+
+
+@pytest.mark.slow
+def test_e2e_label_flip_data_poisoning():
+    """Data-level poisoning: corrupted workers compute honest gradients of
+    corrupted data; the guard still isolates them via the martingales."""
+    state, hist = run_training(
+        "internlm2-1.8b", reduced=True, workers=8, per_worker_batch=2,
+        seq_len=64, steps=50, alpha=0.25, attack="label_flip",
+        aggregator="byzantine_sgd", guard_mode="exact", lr=3e-3, d_model=128,
+    )
+    assert hist[-1]["loss_good_workers"] < hist[0]["loss_good_workers"]
+    assert all(int(h["good_filtered"]) == 0 for h in hist)
+
+
+@pytest.mark.slow
+def test_e2e_sketch_mode_on_moe():
+    """Scalable sketch guard on an MoE arch (expert-parallel gradients)."""
+    state, hist = run_training(
+        "deepseek-v2-lite-16b", reduced=True, workers=8, per_worker_batch=1,
+        seq_len=64, steps=30, alpha=0.25, attack="noise",
+        aggregator="byzantine_sgd", guard_mode="sketch", lr=3e-3, d_model=128,
+    )
+    assert hist[-1]["loss_good_workers"] < hist[0]["loss_good_workers"]
+    assert int(hist[-1]["byz_alive"]) == 0
+
+
+@pytest.mark.slow
+def test_e2e_serving_roundtrip():
+    from repro.launch.serve import run_serving
+    gen = run_serving("jamba-v0.1-52b", batch=2, prompt_len=32, gen_tokens=8,
+                      cache_len=64)
+    assert gen.shape == (2, 8)
