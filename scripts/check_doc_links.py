@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Docs-link check (CI): every ``DESIGN.md §N`` reference in the tree must
+resolve to a ``## §N`` heading in DESIGN.md, and every file that mentions
+DESIGN.md / README.md must find it present.  Exits non-zero with a listing
+of dangling references.
+
+Usage: python scripts/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+SECTION_REF = re.compile(r"DESIGN\.md\s*§\s*([0-9]+(?:\.[0-9]+)?)")
+HEADING = re.compile(r"^#{1,6}\s*§\s*([0-9]+(?:\.[0-9]+)?)\b", re.M)
+SCAN_SUFFIXES = {".py", ".md"}
+SKIP_DIRS = {".git", "__pycache__", ".github", "experiments"}
+SKIP_FILES = {"DESIGN.md"}  # self-references are headings, not links
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    design = root / "DESIGN.md"
+    if not design.exists():
+        print(f"FAIL: {design} does not exist but is referenced across the tree")
+        return 1
+    sections = set(HEADING.findall(design.read_text()))
+    print(f"DESIGN.md sections: {sorted(sections, key=float)}")
+
+    errors = []
+    n_refs = 0
+    for path in sorted(root.rglob("*")):
+        if path.suffix not in SCAN_SUFFIXES or path.name in SKIP_FILES:
+            continue
+        if any(part in SKIP_DIRS for part in path.parts):
+            continue
+        text = path.read_text(errors="replace")
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for sec in SECTION_REF.findall(line):
+                n_refs += 1
+                if sec not in sections:
+                    errors.append(
+                        f"{path.relative_to(root)}:{lineno}: DESIGN.md §{sec} "
+                        f"does not resolve (have {sorted(sections, key=float)})"
+                    )
+
+    if errors:
+        print(f"FAIL: {len(errors)} dangling DESIGN.md section reference(s):")
+        for e in errors:
+            print(" ", e)
+        return 1
+    print(f"ok: {n_refs} DESIGN.md § references all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 
 # ---------------------------------------------------------------------------
 # configuration / state
@@ -81,12 +83,19 @@ class GuardConfig(NamedTuple):
 
 
 class GuardState(NamedTuple):
-    """Per-worker filter state (a pytree; all leaves have leading dim m)."""
+    """Per-worker filter state (a pytree; leaves have leading dim m).
+
+    ``gram_B`` carries ⟨B_i, B_j⟩ across iterations so the streaming path
+    never recomputes B Bᵀ from scratch: the rank-style identity
+    ``G_B^k = G_B^{k-1} + B gᵀ + g Bᵀ + g gᵀ`` (DESIGN.md §5) updates it
+    from quantities the fused kernel already produces.  The dense path
+    recomputes it each step (and so doubles as the drift oracle)."""
 
     A: jax.Array        # (m,)  scalar martingales
     B: jax.Array        # (m, d) gradient-sum martingales (dense form)
     alive: jax.Array    # (m,) bool — good_{k-1}
     k: jax.Array        # () int32 — iterations done
+    gram_B: jax.Array   # (m, m) ⟨B_i, B_j⟩ — maintained incrementally
 
 
 # ---------------------------------------------------------------------------
@@ -194,10 +203,24 @@ class ByzantineGuard:
 
     ``grads`` is the stacked (m, d) matrix of per-worker gradients at x_k.
     ``xi`` is the paper's ξ_k = (1/m) Σ_{i∈good_k} ∇_{k,i}.
+
+    ``use_fused=True`` routes the O(m·d) / O(m²·d) work through the
+    one-pass Pallas pipeline (:mod:`repro.kernels.fused_guard` + the
+    fused filtered-mean): each step reads ``grads`` and ``B`` once,
+    updates ``gram_B`` incrementally, and never re-forms B Bᵀ — halving
+    HBM traffic per guard step (DESIGN.md §5).  The default dense form
+    is the correctness oracle the fused path is tested against.
     """
 
-    def __init__(self, cfg: GuardConfig):
+    def __init__(self, cfg: GuardConfig, use_fused: bool = False,
+                 d_block: int = 2048, gram_resync_every: int = 64):
         self.cfg = cfg
+        self.use_fused = use_fused
+        self.d_block = d_block
+        # fused path: every N-th step re-derive gram_B from B instead of
+        # rank-updating, zeroing accumulated f32 rounding (0 disables);
+        # amortized cost is one extra B read per N steps
+        self.gram_resync_every = gram_resync_every
 
     def init(self, d: int) -> GuardState:
         m = self.cfg.m
@@ -206,6 +229,7 @@ class ByzantineGuard:
             B=jnp.zeros((m, d), jnp.float32),
             alive=jnp.ones((m,), bool),
             k=jnp.zeros((), jnp.int32),
+            gram_B=jnp.zeros((m, m), jnp.float32),
         )
 
     def step(
@@ -219,21 +243,42 @@ class ByzantineGuard:
         m = cfg.m
         grads = grads.astype(jnp.float32)
         k = state.k + 1
+        delta = (x_k - x_1).astype(jnp.float32)
 
-        # line 5: accumulate the two martingales
-        A = state.A + grads @ (x_k - x_1).astype(jnp.float32)
-        B = state.B + grads
-
-        # Gram matrices (the only O(m² d) work — the Pallas kernel target)
-        gram_b = B @ B.T
-        gram_g = grads @ grads.T
+        if self.use_fused:
+            # one HBM sweep: both Grams' raw terms + A-increments + B
+            gram_g, cross, a_inc, B = ops.fused_guard(
+                grads, state.B, delta, d_block=self.d_block
+            )
+            A = state.A + a_inc
+            gram_b = state.gram_B + cross + cross.T + gram_g
+            if self.gram_resync_every > 0:
+                gram_b = jax.lax.cond(
+                    k % self.gram_resync_every == 0,
+                    lambda: B @ B.T,
+                    lambda: gram_b,
+                )
+        else:
+            # line 5: accumulate the two martingales
+            A = state.A + grads @ delta
+            B = state.B + grads
+            # Gram matrices (the three independent O(m·d)/O(m²·d) passes
+            # the fused pipeline replaces)
+            gram_b = B @ B.T
+            gram_g = grads @ grads.T
 
         good_k, diag = filter_update(A, gram_b, gram_g, state.alive, k, cfg)
 
         denom = jnp.where(
             cfg.mean_over_alive, jnp.maximum(jnp.sum(good_k), 1), m
         ).astype(jnp.float32)
-        xi = (good_k.astype(jnp.float32) @ grads) / denom
+        if self.use_fused:
+            xi = ops.filtered_mean(
+                grads, good_k.astype(jnp.float32) / denom, 1.0,
+                d_block=self.d_block,
+            )
+        else:
+            xi = (good_k.astype(jnp.float32) @ grads) / denom
 
-        new_state = GuardState(A=A, B=B, alive=good_k, k=k)
+        new_state = GuardState(A=A, B=B, alive=good_k, k=k, gram_B=gram_b)
         return new_state, xi, diag

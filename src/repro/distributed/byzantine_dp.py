@@ -16,7 +16,9 @@ Two guard modes (DESIGN.md §3):
   optimizer moment).  Gram matrices are leaf-wise ``einsum('w...,v...->wv')``
   contractions; XLA realizes the required all-gather of gradient shards
   over the data axis (the same order of communication mini-batch SGD's
-  all-reduce already pays).
+  all-reduce already pays).  With ``incremental_gram`` (default) the
+  B-Gram is carried in state and rank-updated from the gradient
+  all-gather (DESIGN.md §5), so B shards themselves never travel.
 
 * ``sketch`` — beyond-paper scalable variant.  Per-worker gradients are
   CountSketched (feature hashing: s_j = Σ_{h(i)=j} σ(i)·g_i, computed
@@ -71,6 +73,18 @@ class DPGuardConfig(NamedTuple):
     # inside the contractions (preferred_element_type) — no param-sized
     # f32 temporaries, halved all-gather bytes.
     low_precision_stats: bool = False
+    # Incremental B-Gram (exact mode; DESIGN.md §5): maintain ⟨B_i, B_j⟩
+    # across steps via G_B += B gᵀ + g Bᵀ + g gᵀ instead of re-contracting
+    # the full B pytree.  The cross term reuses the gradient all-gather the
+    # ∇-Gram already pays, so the per-step collective volume of the exact
+    # guard halves (B shards never move).  False re-derives G_B from B
+    # every step — the drift oracle.
+    incremental_gram: bool = True
+    # Every N steps re-derive gram_B from B (one full contraction), zeroing
+    # the accumulated rounding of the incremental path — essential under
+    # low_precision_stats, where each cross term rounds the local B shard
+    # to bf16.  0 disables resync.
+    gram_resync_every: int = 64
 
     def guard_config(self, v_eff) -> GuardConfig:
         # jnp scalar V is fine: GuardConfig.thresholds only multiplies by it
@@ -87,6 +101,7 @@ class DPGuardState(NamedTuple):
     alive: jax.Array             # (W,) bool
     k: jax.Array                 # () int32
     v_est: jax.Array             # () f32 — calibrated V (EMA)
+    gram_B: jax.Array            # (W, W) ⟨B_i, B_j⟩ — incremental (DESIGN.md §5)
 
 
 # ---------------------------------------------------------------------------
@@ -122,14 +137,33 @@ def worker_sq_norms(g: PyTree, low_precision: bool = False) -> jax.Array:
 
 
 def worker_cross_gram(g: PyTree, low_precision: bool = False) -> jax.Array:
-    """Full (W, W) Gram — exact mode. Leaf-wise W×W contractions; XLA
-    inserts the data-axis all-gather of gradient shards."""
-    def one(a):
-        a2 = (a if low_precision else _leaf_f32(a)).reshape(a.shape[0], -1)
+    """Full (W, W) Gram — exact mode. The self-pair case of
+    :func:`worker_pair_gram`; XLA inserts the data-axis all-gather of
+    gradient shards."""
+    return worker_pair_gram(g, g, low_precision)
+
+
+def worker_pair_gram(ga: PyTree, gb: PyTree, low_precision: bool = False) -> jax.Array:
+    """(W, W) cross-Gram ⟨a_i, b_j⟩ between two worker-stacked pytrees —
+    the ``B gᵀ`` term of the incremental Gram update.  Only ``gb`` (the
+    fresh gradients) needs gathering across the worker axis; ``ga`` (the
+    B martingale) is consumed at its home shard, so the exact guard's
+    B-sized all-gather disappears.  With ``low_precision`` the gradient
+    operand stays in its native dtype — reusing the same half-width
+    gather ``gram_g`` already pays — and the *local* B shard is rounded
+    down to match (dot_general needs one dtype; rounding the ungathered
+    side keeps the wire bytes halved), accumulating in f32 as usual."""
+    def one(a, b):
+        if low_precision:
+            a = a.astype(b.dtype)
+        else:
+            a, b = _leaf_f32(a), _leaf_f32(b)
+        a2 = a.reshape(a.shape[0], -1)
+        b2 = b.reshape(b.shape[0], -1)
         return jax.lax.dot_general(
-            a2, a2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            a2, b2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
-    parts = jax.tree_util.tree_map(one, g)
+    parts = jax.tree_util.tree_map(one, ga, gb)
     return functools.reduce(jnp.add, jax.tree_util.tree_leaves(parts))
 
 
@@ -202,6 +236,7 @@ def init_guard_state(cfg: DPGuardConfig, params_like: PyTree) -> DPGuardState:
         alive=jnp.ones((W,), bool),
         k=jnp.zeros((), jnp.int32),
         v_est=jnp.zeros((), jnp.float32),
+        gram_B=jnp.zeros((W, W), jnp.float32),
     )
 
 
@@ -273,7 +308,26 @@ def guard_step(
     else:
         B = jax.tree_util.tree_map(lambda b, g: b + _leaf_f32(g), state.B, grads_w)
         gram_g = worker_cross_gram(grads_w, lp)
-        gram_B = worker_cross_gram(B, lp)
+        if cfg.incremental_gram:
+            def _incremental():
+                # G_B^k = G_B^{k-1} + B gᵀ + g Bᵀ + g gᵀ — no contraction
+                # over (and no all-gather of) the accumulated B pytree
+                cross = worker_pair_gram(state.B, grads_w, lp)
+                return state.gram_B + cross + cross.T + gram_g
+
+            if cfg.gram_resync_every > 0:
+                # zero the accumulated rounding (bf16 cross terms under lp)
+                # with a from-scratch contraction every N-th step; both
+                # alternatives live inside the cond so only one is paid
+                gram_B = jax.lax.cond(
+                    k_new % cfg.gram_resync_every == 0,
+                    lambda: worker_cross_gram(B, lp),
+                    _incremental,
+                )
+            else:
+                gram_B = _incremental()
+        else:
+            gram_B = worker_cross_gram(B, lp)
 
     # --- V calibration + filter --------------------------------------------
     v_eff = _calibrate_v(cfg, gram_g, state.v_est)
@@ -302,7 +356,8 @@ def guard_step(
         )
 
     diag = dict(diag, v_est=v_eff, sq_norm_mean=jnp.mean(sq_g))
-    new_state = DPGuardState(A=A, B=B, alive=good_k, k=k_new, v_est=v_eff)
+    new_state = DPGuardState(A=A, B=B, alive=good_k, k=k_new, v_est=v_eff,
+                             gram_B=gram_B)
     return new_state, xi, diag
 
 

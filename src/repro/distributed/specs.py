@@ -135,6 +135,8 @@ def make_train_specs(
         alive=_sds((W,), jnp.bool_, mesh, worker_spec),
         k=_sds((), jnp.int32, mesh, P()),
         v_est=_sds((), jnp.float32, mesh, P()),
+        # (W, W) is filter-sized, not model-sized — replicate it
+        gram_B=_sds((W, W), jnp.float32, mesh, P()),
     )
     from repro.distributed.byzantine_dp import DPGuardState
     from repro.distributed.trainer import TrainState

@@ -6,9 +6,24 @@ spots (the O(m²d) / O(md) per-iteration work the paper's Table 1 accounts):
                       baseline) and the fused filtered mean ξ_k
 * ``countsketch``   — fused sign-hash + strided-fold gradient sketch
                       (the scalable guard's compression)
+* ``fused_guard``   — one-pass guard-statistics pipeline: both Gram
+                      terms + A-increments + the B update in a single
+                      HBM sweep (DESIGN.md §5)
 
-Kernels are written with explicit BlockSpec VMEM tiling for TPU and
-validated on CPU in interpret mode against ``ref.py`` jnp oracles.
+All kernels share one grid/BlockSpec layout — grid ``(d // d_blk,)``,
+``(m, d_blk)`` strips streamed HBM→VMEM, small ``(m, m)``/``(m,)``
+outputs resident and accumulated across the grid, zero-initialized
+under ``pl.when(i == 0)``.  Wrappers zero-pad d up to d_blk (exact for
+every kernel) and slice it back off; the Gram-producing kernels
+(``pairdist``, ``fused_guard``) additionally pad m to the 8-sublane
+multiple — exact for Grams/sums, which is why the order-statistic
+kernels in ``robust_reduce`` deliberately do NOT pad the worker axis
+(zero rows would corrupt a median).  See DESIGN.md §4 for the full
+convention, including VMEM budgets.
+
+Kernels are validated on CPU in interpret mode against the ``ref.py``
+jnp oracles; ``ops.py`` is the dispatch layer that selects interpret
+mode automatically off-TPU.
 """
 from repro.kernels import ops, ref
 

@@ -1,15 +1,13 @@
 """Pallas TPU kernel: fused sign-flip + strided-fold CountSketch.
 
-The sketch-mode guard compresses each worker's (huge) gradient into k
-buckets: s_c = Σ_{i ≡ c (mod k)} σ(i)·x_i with hashed signs.  Memory-bound
-like the robust reductions, but with the extra twist that the sign pattern
-is *generated inside the kernel* from the global coordinate index (iota +
-block offset → multiplicative hash) — zero bytes of hash state ever touch
-HBM, so the stream runs at pure read bandwidth.
-
-Grid:    (d // d_blk,)   with d_blk a multiple of k
-x strip: BlockSpec((m, d_blk), lambda i: (0, i))
-out:     BlockSpec((m, k), lambda i: (0, 0)) — resident, accumulated
+The sketch-mode guard (DESIGN.md §3) compresses each worker's (huge)
+gradient into k buckets: s_c = Σ_{i ≡ c (mod k)} σ(i)·x_i with hashed
+signs.  Layout is the shared strip convention of DESIGN.md §4 (with
+d_blk constrained to a multiple of k and an (m, k) resident output); the
+twist is that the sign pattern is *generated inside the kernel* from the
+global coordinate index (iota + block offset → multiplicative hash) —
+zero bytes of hash state ever touch HBM, so the stream runs at pure read
+bandwidth.
 """
 from __future__ import annotations
 

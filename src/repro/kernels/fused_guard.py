@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: one-pass fused guard-statistics pipeline.
+
+Algorithm 1's per-iteration filter needs four quantities that each touch
+the full (m, d) worker data: the fresh-gradient Gram ``g gᵀ``, the cross
+Gram ``B gᵀ`` (feeding the incremental B-martingale Gram, see DESIGN.md
+§5), the A-martingale increments ``g · (x_k − x_1)``, and the updated
+martingale matrix ``B + g``.  Computed separately (as the dense reference
+in :mod:`repro.core.byzantine_sgd` does) that is three independent sweeps
+over HBM; this kernel produces all four in a *single* grid pass — every
+(m, d_blk) strip of ``grads`` and ``B`` is read exactly once and the new
+``B`` strip is written in place of a separate accumulation pass.
+
+Layout is the shared strip convention of :mod:`repro.kernels` (m padded
+to the next 8-sublane multiple) with two resident (m, m) accumulators
+and one resident (m,) accumulator alongside the streamed ``B`` output
+strip.  VMEM per step = 2·m·d_blk·4 (g + B in) + m·d_blk·4 (B out)
++ 2·m²·4 + m·4 bytes ≈ 0.8 MB at m=32, d_blk=2048 — comfortably inside
+the double-buffered ~16 MB/core budget.
+
+Roofline (DESIGN.md §5): HBM traffic drops from 6·m·d·4 bytes per guard
+step (dense: g read 3×, B read 2×, B written 1×) to 3·m·d·4 (g read 1×,
+B read 1×, B written 1×) — a 2× reduction by the pass-count model in
+``repro.roofline.guard_cost``, recorded alongside measured wall-clock by
+``benchmarks/bench_filtering.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_guard_kernel(g_ref, b_ref, delta_ref,
+                        gram_g_ref, cross_ref, a_inc_ref, b_new_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_g_ref[...] = jnp.zeros_like(gram_g_ref)
+        cross_ref[...] = jnp.zeros_like(cross_ref)
+        a_inc_ref[...] = jnp.zeros_like(a_inc_ref)
+
+    g = g_ref[...].astype(jnp.float32)        # (m, d_blk)
+    b = b_ref[...].astype(jnp.float32)        # (m, d_blk)
+    dlt = delta_ref[...].astype(jnp.float32)  # (d_blk,)
+
+    contract = (((1,), (1,)), ((), ()))
+    gram_g_ref[...] += jax.lax.dot_general(
+        g, g, contract, preferred_element_type=jnp.float32
+    )
+    cross_ref[...] += jax.lax.dot_general(     # ⟨B_i, g_j⟩ — pre-update B
+        b, g, contract, preferred_element_type=jnp.float32
+    )
+    a_inc_ref[...] += jnp.sum(g * dlt[None, :], axis=1)
+    b_new_ref[...] = b + g
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def fused_guard_pallas(
+    grads: jax.Array,   # (m, d) fresh per-worker gradients
+    B: jax.Array,       # (m, d) martingale matrix B_{k-1}
+    delta: jax.Array,   # (d,)   x_k − x_1
+    d_block: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass guard statistics: ``(gram_g, cross, a_inc, B_new)`` with
+
+    * ``gram_g[i, j] = ⟨∇_i, ∇_j⟩``            (m, m)
+    * ``cross[i, j]  = ⟨B_{k-1,i}, ∇_j⟩``      (m, m)
+    * ``a_inc[i]     = ⟨∇_i, x_k − x_1⟩``      (m,)
+    * ``B_new        = B_{k-1} + ∇``           (m, d) f32
+
+    matching :func:`repro.kernels.ref.fused_guard_ref`.  The caller folds
+    ``cross`` into the incremental Gram ``G_B^k = G_B^{k-1} + cross +
+    crossᵀ + gram_g``.  Padding (m → ×8, d → ×d_block) is with zeros,
+    which is exact for all four outputs.
+    """
+    m, d = grads.shape
+    if B.shape != (m, d):
+        raise ValueError(f"B shape {B.shape} != grads shape {(m, d)}")
+    m_pad = (-m) % 8
+    d_pad = (-d) % d_block
+    if m_pad or d_pad:
+        grads = jnp.pad(grads, ((0, m_pad), (0, d_pad)))
+        B = jnp.pad(B, ((0, m_pad), (0, d_pad)))
+    if d_pad:
+        delta = jnp.pad(delta, (0, d_pad))
+    mp, dp = grads.shape
+
+    gram_g, cross, a_inc, b_new = pl.pallas_call(
+        _fused_guard_kernel,
+        grid=(dp // d_block,),
+        in_specs=[
+            pl.BlockSpec((mp, d_block), lambda i: (0, i)),
+            pl.BlockSpec((mp, d_block), lambda i: (0, i)),
+            pl.BlockSpec((d_block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((mp, mp), lambda i: (0, 0)),
+            pl.BlockSpec((mp, mp), lambda i: (0, 0)),
+            pl.BlockSpec((mp,), lambda i: (0,)),
+            pl.BlockSpec((mp, d_block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grads, B, delta)
+    return gram_g[:m, :m], cross[:m, :m], a_inc[:m], b_new[:m, :d]

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.countsketch import countsketch_pallas
+from repro.kernels.fused_guard import fused_guard_pallas
 from repro.kernels.pairdist import gram_pallas
 from repro.kernels.robust_reduce import (
     coordinate_median_pallas,
@@ -20,29 +21,40 @@ from repro.kernels.robust_reduce import (
 )
 
 
-def _interpret() -> bool:
+def interpret_mode() -> bool:
+    """True when kernels run the Pallas interpreter (any non-TPU backend).
+    Public so benchmarks/records can report the execution mode without
+    re-deriving the predicate."""
     return jax.default_backend() != "tpu"
 
 
 def gram(x: jax.Array, d_block: int = 2048) -> jax.Array:
     """(m, d) → (m, m) worker Gram matrix (see pairdist.py)."""
-    return gram_pallas(x, d_block=d_block, interpret=_interpret())
+    return gram_pallas(x, d_block=d_block, interpret=interpret_mode())
 
 
 def coordinate_median(x: jax.Array, d_block: int = 4096) -> jax.Array:
-    return coordinate_median_pallas(x, d_block=d_block, interpret=_interpret())
+    return coordinate_median_pallas(x, d_block=d_block, interpret=interpret_mode())
 
 
 def trimmed_mean(x: jax.Array, n_trim: int, d_block: int = 4096) -> jax.Array:
-    return trimmed_mean_pallas(x, n_trim, d_block=d_block, interpret=_interpret())
+    return trimmed_mean_pallas(x, n_trim, d_block=d_block, interpret=interpret_mode())
 
 
 def filtered_mean(x: jax.Array, mask: jax.Array, denom: float, d_block: int = 4096) -> jax.Array:
-    return filtered_mean_pallas(x, mask, denom, d_block=d_block, interpret=_interpret())
+    return filtered_mean_pallas(x, mask, denom, d_block=d_block, interpret=interpret_mode())
 
 
 def countsketch(x: jax.Array, k: int, salt: int = 0, d_block: int = 8192) -> jax.Array:
-    return countsketch_pallas(x, k, salt=salt, d_block=d_block, interpret=_interpret())
+    return countsketch_pallas(x, k, salt=salt, d_block=d_block, interpret=interpret_mode())
+
+
+def fused_guard(grads: jax.Array, B: jax.Array, delta: jax.Array,
+                d_block: int = 2048):
+    """(m, d), (m, d), (d,) → (gram_g, cross, a_inc, B_new) in one HBM
+    sweep (see fused_guard.py); the streaming ByzantineGuard path."""
+    return fused_guard_pallas(grads, B, delta, d_block=d_block,
+                              interpret=interpret_mode())
 
 
 ORACLES = {
@@ -51,4 +63,5 @@ ORACLES = {
     "trimmed_mean": ref.trimmed_mean_ref,
     "filtered_mean": ref.filtered_mean_ref,
     "countsketch": ref.countsketch_ref,
+    "fused_guard": ref.fused_guard_ref,
 }

@@ -2,18 +2,10 @@
 
 The master-side hot spot of ByzantineSGD (and of Krum, which the paper's
 Table 1 costs at O(m²d)): G = X Xᵀ for X = (m, d) stacked worker vectors,
-with d = |params| ≫ VMEM.  We tile over d: each grid step loads an
-(m, d_blk) strip into VMEM, runs one MXU matmul (m padded to the 128 MXU
-lane width by the wrapper), and accumulates into the (m, m) output block
-that stays resident across the whole grid.
-
-Grid:    (d // d_blk,)
-x strip: BlockSpec((m, d_blk), lambda i: (0, i))  — streams HBM→VMEM
-out:     BlockSpec((m, m),     lambda i: (0, 0))  — revisited, accumulated
-
-VMEM per step = m·d_blk·4 + m²·4 bytes; with m=128 (padded), d_blk=2048
-that is ~1.1 MB — well inside the ~16 MB/core budget, leaving room for the
-double-buffered pipeline.
+with d = |params| ≫ VMEM.  One MXU matmul per streamed strip, accumulated
+into the resident (m, m) output — the shared layout of DESIGN.md §4.
+Standalone form of the Gram terms; the guard's step-loop uses the fused
+variant in :mod:`repro.kernels.fused_guard` instead (DESIGN.md §5).
 """
 from __future__ import annotations
 

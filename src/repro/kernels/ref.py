@@ -35,6 +35,19 @@ def filtered_mean_ref(x: jax.Array, mask: jax.Array, denom: float) -> jax.Array:
     return w @ x.astype(jnp.float32)
 
 
+def fused_guard_ref(
+    grads: jax.Array, B: jax.Array, delta: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Dense oracle for the one-pass guard pipeline: ``(gram_g, cross,
+    a_inc, B_new)`` = (g gᵀ, B gᵀ, g·Δ, B + g), everything f32.  ``cross``
+    uses the *pre-update* B — the incremental-Gram identity is
+    G_B^k = G_B^{k-1} + cross + crossᵀ + gram_g."""
+    g = grads.astype(jnp.float32)
+    b = B.astype(jnp.float32)
+    dlt = delta.astype(jnp.float32)
+    return g @ g.T, b @ g.T, g @ dlt, b + g
+
+
 def sketch_sign(n: int, salt: int) -> jax.Array:
     """±1 per flat coordinate — the hash shared with repro.distributed."""
     idx = jax.lax.iota(jnp.uint32, n)

@@ -1,19 +1,12 @@
 """Pallas TPU kernels: coordinate-wise robust reductions over the worker axis.
 
 The Yin et al. baseline (Median-GD / trimmed-mean-GD) and the paper's
-filtered mean are all (m, d) → (d,) reductions with tiny m and huge d —
-pure memory-bound streams. One grid step loads an (m, d_blk) strip into
-VMEM, reduces over the worker axis (sorting network over m via repeated
-min/max for the order statistics; masked dot for the filtered mean), and
-writes a (d_blk,) strip out. Arithmetic intensity ≈ m·log m flops / m·4
-bytes, so the roofline is HBM bandwidth — the kernel's job is simply to
-stream at full bandwidth with no (m, d)-sized temporaries (which the naive
-``jnp.sort(axis=0)`` would materialize).
-
-All three kernels share the grid/BlockSpec layout:
-  grid       (d // d_blk,)
-  in strip   BlockSpec((m, d_blk), lambda i: (0, i))
-  out strip  BlockSpec((d_blk,),   lambda i: (i,))
+filtered mean are all (m, d) → (d,) reductions: the strip-streaming
+layout of DESIGN.md §4 with a (d_blk,) output strip per grid step.  The
+reduction over m is a sorting network (odd-even min/max rounds) for the
+order statistics and a masked dot for the filtered mean — no
+(m, d)-sized temporaries (which the naive ``jnp.sort(axis=0)`` would
+materialize), so the stream runs at HBM bandwidth.
 """
 from __future__ import annotations
 

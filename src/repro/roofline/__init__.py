@@ -1,9 +1,15 @@
-"""repro.roofline — three-term roofline analysis from compiled AOT artifacts."""
+"""repro.roofline — three-term roofline analysis from compiled AOT
+artifacts, plus the analytic guard-step traffic model (guard_cost)."""
 from repro.roofline.hw import TPU_V5E
 from repro.roofline.analysis import (
     collective_bytes_from_hlo,
     roofline_from_compiled,
     model_flops,
+)
+from repro.roofline.guard_cost import (
+    GuardStepCost,
+    dense_guard_cost,
+    fused_guard_cost,
 )
 
 __all__ = [
@@ -11,4 +17,7 @@ __all__ = [
     "collective_bytes_from_hlo",
     "roofline_from_compiled",
     "model_flops",
+    "GuardStepCost",
+    "dense_guard_cost",
+    "fused_guard_cost",
 ]

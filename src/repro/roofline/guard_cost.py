@@ -1,0 +1,67 @@
+"""Analytic HBM-traffic / FLOP model for the guard step (DESIGN.md §5).
+
+The guard is memory-bound on every realistic shape (arithmetic intensity
+≈ m/2 flops per byte with m ≤ a few hundred, far under the TPU ridge
+point), so the quantity that predicts wall-clock is bytes moved per step.
+This module is the accounting used by ``benchmarks/bench_filtering.py``
+and quoted in DESIGN.md; only O(m·d) terms are counted (the (m, m) Grams,
+(m,) vectors, and (d,) iterate reads are noise at d ≫ m).
+
+Dense reference (:class:`repro.core.byzantine_sgd.ByzantineGuard`,
+``use_fused=False``), e = element bytes (4 for f32):
+
+    A += g·Δ          read g                      1·m·d·e
+    B += g            read B, read g, write B     3·m·d·e
+    G_B = B Bᵀ        read B                      1·m·d·e
+    G_g = g gᵀ        read g                      1·m·d·e
+    ─────────────────────────── statistics total  6·m·d·e
+    ξ  = mask·g/denom read g                      1·m·d·e
+    ─────────────────────────── step total        7·m·d·e
+
+Fused pipeline (``use_fused=True``): one sweep of
+:mod:`repro.kernels.fused_guard` reads each g and B strip once and writes
+the new B strip (G_B is updated incrementally from the sweep's outputs —
+nothing re-reads B):
+
+    fused sweep       read g, read B, write B     3·m·d·e
+    ─────────────────────────── statistics total  3·m·d·e   (2.0× less)
+    ξ (filtered-mean kernel)                      1·m·d·e
+    ─────────────────────────── step total        4·m·d·e   (1.75× less)
+
+ξ cannot join the sweep: good_k depends on the Grams the sweep produces.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class GuardStepCost(NamedTuple):
+    """Per-step cost of one guard variant (bytes/flops, leading order)."""
+
+    stats_bytes: int    # martingale + Gram production (what the kernel fuses)
+    xi_bytes: int       # the filtered-mean aggregation pass
+    flops: int          # dominated by the two (m, m, d) contractions
+
+    @property
+    def step_bytes(self) -> int:
+        return self.stats_bytes + self.xi_bytes
+
+
+def dense_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
+    """Three-pass dense reference: 6 m·d reads/writes for the statistics."""
+    mde = m * d * elem_bytes
+    return GuardStepCost(
+        stats_bytes=6 * mde,
+        xi_bytes=1 * mde,
+        flops=2 * m * m * d * 2 + 2 * m * d,   # B Bᵀ + g gᵀ, A + ξ dots
+    )
+
+
+def fused_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
+    """One-pass fused pipeline: 3 m·d for the statistics sweep."""
+    mde = m * d * elem_bytes
+    return GuardStepCost(
+        stats_bytes=3 * mde,
+        xi_bytes=1 * mde,
+        flops=2 * m * m * d * 2 + 2 * m * d,   # same math, fewer bytes
+    )

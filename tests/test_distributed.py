@@ -129,6 +129,62 @@ class TestGuardModes:
             masks[mode] = np.asarray(state.alive)
         np.testing.assert_array_equal(masks["exact"], masks["sketch"])
 
+    @pytest.mark.parametrize("lp", [False, True])
+    def test_exact_incremental_gram_matches_recompute(self, rng, lp):
+        """DESIGN.md §5: the rank-updated gram_B must track the from-scratch
+        B Bᵀ contraction across steps (drift ≪ filter thresholds), and the
+        two exact-mode variants must make identical filter decisions."""
+        W = 6
+        params = {"a": jnp.zeros((8, 4)), "b": {"c": jnp.zeros((16,))}}
+        states = {}
+        for incremental in [True, False]:
+            cfg = DPGuardConfig(n_workers=W, T=50, mode="exact", auto_v=True,
+                                incremental_gram=incremental,
+                                low_precision_stats=lp)
+            state = init_guard_state(cfg, params)
+            for step in range(6):
+                g = tree_of(jax.random.fold_in(rng, step), W, scale=0.1)
+                g = jax.tree_util.tree_map(lambda x: x + 0.3, g)
+                g["a"] = g["a"].at[1].set(-20.0)      # persistent attacker
+                if lp:   # lp statistics consume native-dtype gradients
+                    g = jax.tree_util.tree_map(
+                        lambda x: x.astype(jnp.bfloat16), g
+                    )
+                state, xi, _ = guard_step(cfg, state, g, params, params)
+            states[incremental] = (state, xi)
+        s_inc, xi_inc = states[True]
+        s_rec, xi_rec = states[False]
+        np.testing.assert_array_equal(np.asarray(s_inc.alive), np.asarray(s_rec.alive))
+        tol = 1e-2 if lp else 1e-5   # lp rounds the local B operand to bf16
+        err = float(jnp.linalg.norm(s_inc.gram_B - s_rec.gram_B)
+                    / jnp.maximum(jnp.linalg.norm(s_rec.gram_B), 1e-12))
+        assert err < tol, err
+        np.testing.assert_allclose(
+            np.asarray(jax.tree_util.tree_leaves(xi_inc)[0]),
+            np.asarray(jax.tree_util.tree_leaves(xi_rec)[0]),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_gram_resync_zeroes_drift(self, rng):
+        """On a resync step gram_B is re-derived from B, so it must equal
+        the recompute-mode value bit-for-bit (both are the same f32
+        contraction), even with bf16 lp gradients driving drift between."""
+        W = 5
+        params = {"w": jnp.zeros((12,))}
+        grams = {}
+        for incremental in [True, False]:
+            cfg = DPGuardConfig(n_workers=W, T=50, mode="exact", auto_v=True,
+                                incremental_gram=incremental,
+                                low_precision_stats=True,
+                                gram_resync_every=4)
+            state = init_guard_state(cfg, params)
+            for step in range(4):   # step 4 is a resync step (k_new == 4)
+                g = {"w": (0.3 + 0.05 * jax.random.normal(
+                    jax.random.fold_in(rng, step), (W, 12))).astype(jnp.bfloat16)}
+                state, _, _ = guard_step(cfg, state, g, params, params)
+            grams[incremental] = np.asarray(state.gram_B)
+        np.testing.assert_array_equal(grams[True], grams[False])
+
 
 class TestTrainerIntegration:
     @pytest.mark.slow

@@ -1,0 +1,141 @@
+"""Fused one-pass guard pipeline vs the dense reference (the oracle).
+
+Covers three layers: the raw fused kernel vs :func:`ref.fused_guard_ref`,
+the incremental-Gram identity across steps, and the full
+``ByzantineGuard.step`` fused path vs the dense path — clean gradients and
+under the alie / sign-flip attacks.  All Pallas calls run interpret mode
+on CPU (the kernel dispatch in ``ops`` does this automatically).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import attack_alie, attack_sign_flip
+from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
+from repro.kernels import ref
+from repro.kernels.fused_guard import fused_guard_pallas
+
+SHAPES = [(4, 64), (8, 1000), (16, 4096), (17, 555), (32, 2048)]
+
+
+def _rel_close(got, want, tol=1e-5):
+    """‖got − want‖ ≤ tol·‖want‖ (+tol absolute for near-zero targets)."""
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    err = np.linalg.norm(got - want)
+    assert err <= tol * np.linalg.norm(want) + tol, (err, np.linalg.norm(want))
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_kernel_matches_oracle(m, d, dtype):
+    key = jax.random.PRNGKey(m * 1000 + d)
+    k1, k2, k3 = jax.random.split(key, 3)
+    g = jax.random.normal(k1, (m, d), jnp.float32).astype(dtype)
+    B = (3.0 * jax.random.normal(k2, (m, d), jnp.float32)).astype(dtype)
+    dlt = jax.random.normal(k3, (d,), jnp.float32).astype(dtype)
+    got = fused_guard_pallas(g, B, dlt, d_block=512, interpret=True)
+    want = ref.fused_guard_ref(g, B, dlt)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(got, want):
+        _rel_close(a, b, tol)
+
+
+def test_incremental_gram_identity():
+    """G_B^k = G_B^{k-1} + cross + crossᵀ + gram_g reproduces (B+g)(B+g)ᵀ."""
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    m, d = 12, 777
+    B = jax.random.normal(k1, (m, d))
+    g = jax.random.normal(k2, (m, d))
+    gram_g, cross, _, B_new = fused_guard_pallas(
+        g, B, jnp.zeros((d,)), d_block=256, interpret=True
+    )
+    got = B @ B.T + cross + cross.T + gram_g
+    _rel_close(got, B_new @ B_new.T, 1e-5)
+    _rel_close(B_new, B + g, 1e-6)
+
+
+def _run_both(m, d, steps, grads_fn, cfg=None, gram_resync_every=64):
+    cfg = cfg or GuardConfig(m=m, T=100, V=1.0, D=5.0)
+    dense = ByzantineGuard(cfg)
+    fused = ByzantineGuard(cfg, use_fused=True, d_block=256,
+                           gram_resync_every=gram_resync_every)
+    sd, sf = dense.init(d), fused.init(d)
+    x1 = jnp.zeros((d,))
+    xd = xf = x1
+    for k in range(steps):
+        grads = grads_fn(k)
+        sd, xi_d, _ = dense.step(sd, grads, xd, x1)
+        sf, xi_f, _ = fused.step(sf, grads, xf, x1)
+        xd = xd - 0.05 * xi_d
+        xf = xf - 0.05 * xi_f
+    return sd, sf, xi_d, xi_f
+
+
+def _assert_paths_agree(sd, sf, xi_d, xi_f):
+    assert bool(jnp.all(sd.alive == sf.alive)), "good_k diverged"
+    _rel_close(sf.gram_B, sd.gram_B, 1e-5)
+    _rel_close(sf.A, sd.A, 1e-5)
+    _rel_close(xi_f, xi_d, 1e-5)
+    _rel_close(sf.B, sd.B, 1e-5)
+
+
+@pytest.mark.parametrize("m,d", [(8, 300), (16, 1024), (5, 2000)])
+def test_guard_step_fused_equals_dense_clean(m, d):
+    key = jax.random.PRNGKey(7)
+
+    def grads_fn(k):
+        noise = jax.random.normal(jax.random.fold_in(key, k), (m, d))
+        noise = noise / jnp.linalg.norm(noise, axis=1, keepdims=True)
+        return 0.1 * jnp.ones((m, d)) + 0.5 * noise
+
+    sd, sf, xi_d, xi_f = _run_both(m, d, 6, grads_fn)
+    _assert_paths_agree(sd, sf, xi_d, xi_f)
+    assert int(jnp.sum(sf.alive)) == m   # clean workers all survive
+
+
+@pytest.mark.parametrize("attack", [attack_alie, attack_sign_flip])
+def test_guard_step_fused_equals_dense_under_attack(attack):
+    m, d = 16, 512
+    key = jax.random.PRNGKey(3)
+    byz = jnp.isin(jnp.arange(m), jnp.asarray([1, 5, 9, 13]))
+
+    def grads_fn(k):
+        kk = jax.random.fold_in(key, k)
+        noise = jax.random.normal(kk, (m, d))
+        noise = noise / jnp.linalg.norm(noise, axis=1, keepdims=True)
+        honest = 0.1 * jnp.ones((m, d)) + 0.5 * noise
+        ctx = {"true_grad": 0.1 * jnp.ones((d,)), "V": 1.0, "step": k}
+        return attack(kk, honest, byz, ctx)
+
+    sd, sf, xi_d, xi_f = _run_both(m, d, 6, grads_fn)
+    _assert_paths_agree(sd, sf, xi_d, xi_f)
+
+
+def test_fused_gram_resync_matches_dense():
+    """With resync firing mid-run (every 2nd step) the fused path re-derives
+    gram_B from B — it must still track the dense oracle exactly as the
+    pure-incremental path does."""
+    m, d = 8, 300
+    key = jax.random.PRNGKey(11)
+
+    def grads_fn(k):
+        noise = jax.random.normal(jax.random.fold_in(key, k), (m, d))
+        return 0.1 * jnp.ones((m, d)) + 0.5 * noise / jnp.linalg.norm(
+            noise, axis=1, keepdims=True)
+
+    sd, sf, xi_d, xi_f = _run_both(m, d, 5, grads_fn, gram_resync_every=2)
+    _assert_paths_agree(sd, sf, xi_d, xi_f)
+
+
+def test_fused_filters_gross_outlier_like_dense():
+    m, d = 8, 400
+    cfg = GuardConfig(m=m, T=100, V=1.0, D=5.0)
+    fused = ByzantineGuard(cfg, use_fused=True, d_block=128)
+    x1 = jnp.zeros((d,))
+    grads = jnp.ones((m, d)) * 0.1
+    grads = grads.at[3].set(100.0)
+    state, _, _ = fused.step(fused.init(d), grads, x1, x1)
+    assert not bool(state.alive[3])
+    assert int(jnp.sum(state.alive)) == m - 1
