@@ -1,0 +1,168 @@
+"""Scenario campaigns — dynamic adversaries × aggregators, one jit.
+
+Two deliverables (DESIGN.md §8):
+
+1. the **scenario leaderboard**: every aggregator against the full dynamic
+   zoo (lie-low-then-strike, churn, coalition splits, filter-feedback
+   adaptation) across ≥ 100 (scenario, α, seed) grid rows, seed-aggregated
+   into ``BENCH_scenarios.json`` — including the degradation table (which
+   baselines break under a dynamic adversary whose static counterpart they
+   survive) and the Theorem-3.8 bound check for the guard;
+2. the **batched-vs-looped wall-clock** on the 6×6 robustness matrix: the
+   one-jit campaign against the historical one-eager-``run_sgd``-per-cell
+   Python loop.
+
+``--mini`` is the CI tier-2 shape: 5 scenarios (3 dynamic) × 2 seeds at
+small T, looped comparison on the matrix kept.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit
+from repro.core.solver import SolverConfig
+from repro.data.problems import make_quadratic_problem
+from repro.scenarios import (
+    degraded_pairs,
+    expand_grid,
+    run_campaign,
+    run_campaign_looped,
+    scenario_adaptive,
+    scenario_churn,
+    scenario_coalition,
+    scenario_lie_low_then_strike,
+    scenario_static,
+    summarize_campaign,
+    write_report,
+)
+
+AGGREGATORS = ["mean", "krum", "coordinate_median", "trimmed_mean",
+               "geometric_median", "byzantine_sgd"]
+MATRIX_ATTACKS = ["none", "sign_flip", "random_gaussian", "alie",
+                  "inner_product", "hidden_shift"]
+
+
+def scenario_zoo(T: int, m: int) -> tuple[list, dict]:
+    """The standard campaign scenarios + the dynamic→static pairing used by
+    the degradation table.  Churn is one rotation by an m/8-sized group at
+    T/2, so the ever-Byzantine fraction is α + 1/8 — at most 0.375 on the
+    α ≤ 0.25 grid, strictly inside the α < 1/2 Theorem-3.8 regime (the
+    report checks the bound at that realized fraction)."""
+    scenarios = [
+        ("static_sign_flip", scenario_static("sign_flip")),
+        ("static_alie", scenario_static("alie")),
+        ("static_inner_product", scenario_static("inner_product")),
+        ("static_hidden_shift", scenario_static("hidden_shift")),
+        ("lie_low_then_strike", scenario_lie_low_then_strike("inner_product", T // 2)),
+        ("churn_sign_flip", scenario_churn("sign_flip", period=T // 2, stride=m // 8)),
+        ("adaptive_inner_product", scenario_adaptive("inner_product", adapt_rate=0.5)),
+        ("coalition_alie_ip", scenario_coalition("alie", "inner_product", 0.5)),
+        ("retreat_on_filter", scenario_static("retreat_on_filter")),
+    ]
+    static_of = {
+        "lie_low_then_strike": "static_inner_product",
+        "churn_sign_flip": "static_sign_flip",
+        "adaptive_inner_product": "static_inner_product",
+        "coalition_alie_ip": "static_alie",
+        "retreat_on_filter": "static_inner_product",
+    }
+    return scenarios, static_of
+
+
+def campaign_leaderboard(mini: bool) -> dict:
+    m = 16
+    T = 300 if mini else 1500
+    prob = make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
+    cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
+                       aggregator="byzantine_sgd", attack="sign_flip")
+    scenarios, static_of = scenario_zoo(T, m)
+    aggs = AGGREGATORS
+    if mini:
+        keep = {"static_sign_flip", "static_inner_product",
+                "lie_low_then_strike", "churn_sign_flip",
+                "adaptive_inner_product"}
+        scenarios = [s for s in scenarios if s[0] in keep]
+        static_of = {k: v for k, v in static_of.items() if k in keep}
+        alphas, seeds = [0.25], range(2)
+        aggs = ["mean", "krum", "byzantine_sgd"]
+    else:
+        alphas, seeds = [0.125, 0.25], range(8)
+
+    grid = expand_grid(scenarios, alphas, seeds)
+    result = run_campaign(prob, cfg, grid, aggs)
+    record = summarize_campaign(result, prob, cfg, static_of=static_of)
+    emit("scenarios/campaign", result.wall_s * 1e6,
+         f"runs={result.n_runs * len(aggs)},compile_s={result.compile_s:.1f}")
+    for row in record["leaderboard"]:
+        emit(
+            f"scenarios/{row['scenario']}/a{row['alpha']}/{row['aggregator']}",
+            row["gap_med"] * 1e6,  # gap in µ-units for the CSV column
+            f"gap_med={row['gap_med']:.5f},detect_p50={row['detect_p50']},"
+            f"breaks={row['breaks']}",
+        )
+    for row in record["guard_bound"]:
+        emit(f"scenarios/bound/{row['scenario']}/a{row['alpha']}",
+             row["gap_med"] * 1e6,
+             f"thm38_bound={row['bound']:.4f},within={row['within']},"
+             f"alpha_ever={row['alpha_ever']:.3f}")
+    for row in degraded_pairs(record):
+        emit(f"scenarios/degraded/{row['aggregator']}/{row['dynamic']}",
+             row["gap_dynamic"] * 1e6,
+             f"static_gap={row['gap_static']:.5f},ratio={row['ratio']:.1f}")
+    return record
+
+
+def matrix_wallclock(mini: bool, skip_looped: bool = False) -> dict:
+    """The 6×6 robustness matrix (every static attack × every aggregator),
+    batched through one jit vs the historical per-cell Python loop."""
+    m = 16
+    T = 200 if mini else 2000
+    prob = make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
+    cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
+                       aggregator="byzantine_sgd", attack="sign_flip")
+    scenarios = [(a, scenario_static(a)) for a in MATRIX_ATTACKS]
+    grid = expand_grid(scenarios, [0.25], [0])
+    result = run_campaign(prob, cfg, grid, AGGREGATORS)
+    cells = result.n_runs * len(AGGREGATORS)
+    rec = {
+        "T": T,
+        "cells": cells,
+        "batched_s": result.wall_s,
+        "batched_compile_s": result.compile_s,
+    }
+    if not skip_looped:
+        _, looped_s = run_campaign_looped(prob, cfg, grid, AGGREGATORS)
+        rec["looped_s"] = looped_s
+        rec["speedup_steady"] = looped_s / max(result.wall_s, 1e-9)
+        rec["speedup_incl_compile"] = looped_s / max(
+            result.wall_s + result.compile_s, 1e-9
+        )
+    emit("scenarios/matrix6x6_batched", result.wall_s * 1e6,
+         f"cells={cells},compile_s={result.compile_s:.1f}")
+    if not skip_looped:
+        emit("scenarios/matrix6x6_looped", looped_s * 1e6,
+             f"cells={cells},speedup_steady={rec['speedup_steady']:.1f}x,"
+             f"incl_compile={rec['speedup_incl_compile']:.2f}x")
+    return rec
+
+
+def main(mini: bool = False, skip_looped: bool = False,
+         out_path: str = "BENCH_scenarios.json") -> dict:
+    record = campaign_leaderboard(mini)
+    record["matrix6x6_wallclock"] = matrix_wallclock(mini, skip_looped)
+    record["mini"] = mini
+    write_report(record, out_path)
+    emit("scenarios/report", 0.0,
+         f"out={out_path},degraded_pairs={len(degraded_pairs(record))}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mini", action="store_true",
+                    help="CI tier-2 shape: 5 scenarios x 2 seeds, small T")
+    ap.add_argument("--skip-looped", action="store_true",
+                    help="skip the slow per-cell Python-loop baseline")
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    args = ap.parse_args()
+    main(mini=args.mini, skip_looped=args.skip_looped, out_path=args.out)

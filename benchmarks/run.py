@@ -4,6 +4,7 @@
   aggregators  — per-iteration per-machine work (wall time) incl. kernels
   filtering    — Claim 3.5 detection latency / false-positive behaviour
   lower_bound  — Theorems 5.4/5.5 distinguishing-success curves
+  scenarios    — dynamic-adversary campaigns (one-jit grid) → BENCH_scenarios.json
   roofline     — deliverable (g) table from the dry-run records
 
 Prints ``name,us_per_call,derived`` CSV.  Select suites with
@@ -12,7 +13,8 @@ Prints ``name,us_per_call,derived`` CSV.  Select suites with
 import sys
 
 
-SUITES = ["table1", "aggregators", "filtering", "lower_bound", "ablation", "roofline"]
+SUITES = ["table1", "aggregators", "filtering", "lower_bound", "ablation",
+          "scenarios", "roofline"]
 
 
 def main() -> None:

@@ -22,6 +22,22 @@ simulator first computes honest gradients for every worker, then the attack
 overwrites the Byzantine rows), ``byz_mask`` is (m,) bool, and ``ctx`` is a
 dict of adversary knowledge: ``true_grad`` (d,), ``V``, ``step`` and
 optionally ``mirror_grad``.
+
+The solver additionally feeds back everything the Remark-2.3 adversary is
+entitled to observe from the *previous* iteration (zeros / all-alive on the
+first step):
+
+* ``ctx["alive"]`` (m,) bool — good_{k-1}, the guard's filter decision
+  (all-True under stateless aggregators),
+* ``ctx["n_alive"]`` () — |good_{k-1}|,
+* ``ctx["prev_xi"]`` (d,) — the realized aggregated update ξ_{k-1}
+  (observable from the broadcast iterates: x_k = x_{k-1} − η ξ_{k-1}).
+
+Stateless attacks ignore these; *adaptive* attacks (``retreat_on_filter``
+here, and anything run with ``adapt_rate > 0`` through
+:mod:`repro.scenarios`) condition on them.  Scheduled / coalition behaviour
+is built from these primitives via the combinators at the bottom
+(:func:`phase_switch`, :func:`coalition`).
 """
 from __future__ import annotations
 
@@ -32,6 +48,10 @@ import jax.numpy as jnp
 
 
 def _overwrite(grads: jax.Array, byz_mask: jax.Array, rows: jax.Array) -> jax.Array:
+    """Replace Byzantine rows with ``rows`` (broadcast against (m, d));
+    honest rows pass through bit-identical.  A shared colluding row should
+    be passed as (1, d) — ``jnp.where`` broadcasts it, so no (m, d) temp is
+    materialized in the scan body."""
     return jnp.where(byz_mask[:, None], rows, grads)
 
 
@@ -68,7 +88,7 @@ def attack_alie(key, grads, byz_mask, ctx, z: float = 1.0):
     mu = jnp.sum(grads * w, axis=0) / n_good
     var = jnp.sum(w * (grads - mu[None, :]) ** 2, axis=0) / n_good
     row = mu - z * jnp.sqrt(var + 1e-12)
-    return _overwrite(grads, byz_mask, row[None, :].repeat(grads.shape[0], 0))
+    return _overwrite(grads, byz_mask, row[None, :])
 
 
 def attack_inner_product(key, grads, byz_mask, ctx, scale: float = 1.0):
@@ -77,7 +97,7 @@ def attack_inner_product(key, grads, byz_mask, ctx, scale: float = 1.0):
     g = ctx["true_grad"]
     gn = g / jnp.maximum(jnp.linalg.norm(g), 1e-12)
     row = g - (1.0 + scale) * ctx["V"] * gn
-    return _overwrite(grads, byz_mask, row[None, :].repeat(grads.shape[0], 0))
+    return _overwrite(grads, byz_mask, row[None, :])
 
 
 def attack_hidden_shift(key, grads, byz_mask, ctx, c: float = 0.9):
@@ -89,13 +109,27 @@ def attack_hidden_shift(key, grads, byz_mask, ctx, c: float = 0.9):
     d = grads.shape[1]
     u = jnp.ones((d,), grads.dtype) / jnp.sqrt(d)
     row = ctx["true_grad"] + c * ctx["V"] * u
-    return _overwrite(grads, byz_mask, row[None, :].repeat(grads.shape[0], 0))
+    return _overwrite(grads, byz_mask, row[None, :])
 
 
 def attack_mirror(key, grads, byz_mask, ctx):
     """Section-5 lower-bound adversary: Byzantine workers behave as honest
     workers of the mirror objective (requires ctx['mirror_grads'])."""
     return _overwrite(grads, byz_mask, ctx["mirror_grads"])
+
+
+def attack_retreat_on_filter(key, grads, byz_mask, ctx, scale: float = 1.0):
+    """Filter-feedback evasion: strike (inner-product row) only while the
+    whole coalition is still alive per the guard's previous filter decision
+    (``ctx["alive"]``); once any colluder is caught, the survivors revert to
+    honest behaviour to avoid tripping the martingale checks themselves.
+    Against stateless aggregators ``alive`` is constant all-True, so this
+    degenerates to the static inner-product attack."""
+    alive = ctx["alive"]
+    n_byz = jnp.maximum(jnp.sum(byz_mask), 1)
+    coalition_intact = jnp.sum(alive & byz_mask) >= n_byz
+    struck = attack_inner_product(key, grads, byz_mask, ctx, scale=scale)
+    return jnp.where(coalition_intact, struck, grads)
 
 
 ATTACKS: dict[str, Callable] = {
@@ -107,6 +141,7 @@ ATTACKS: dict[str, Callable] = {
     "inner_product": attack_inner_product,
     "hidden_shift": attack_hidden_shift,
     "mirror": attack_mirror,
+    "retreat_on_filter": attack_retreat_on_filter,
 }
 
 
@@ -118,3 +153,39 @@ def get_attack(name: str) -> Callable:
 
 def apply_attack(name: str, key, grads, byz_mask, ctx, **kwargs):
     return get_attack(name)(key, grads, byz_mask, ctx, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# combinators — scheduled / split adversaries from the primitives above.
+# Each returns a callable with the standard attack signature; the closed-over
+# parameters may be Python numbers or traced scalars (so the scenario engine
+# can vmap over them — see repro.scenarios.adversary).
+# ---------------------------------------------------------------------------
+
+def phase_switch(attack_a: Callable, attack_b: Callable, switch_step) -> Callable:
+    """Scheduled phase change: play ``attack_a`` while ``step < switch_step``,
+    then ``attack_b`` (e.g. lie low past the 𝔗_A/𝔗_B warmup, then strike)."""
+
+    def attack(key, grads, byz_mask, ctx, **kwargs):
+        ka, kb = jax.random.split(key)
+        ga = attack_a(ka, grads, byz_mask, ctx, **kwargs)
+        gb = attack_b(kb, grads, byz_mask, ctx, **kwargs)
+        return jnp.where(ctx["step"] >= switch_step, gb, ga)
+
+    return attack
+
+
+def coalition(attack_a: Callable, attack_b: Callable, frac) -> Callable:
+    """Coalition split: the first ⌈frac·n_byz⌉ Byzantine workers (by index
+    order) play ``attack_a``, the rest simultaneously play ``attack_b``."""
+
+    def attack(key, grads, byz_mask, ctx, **kwargs):
+        ka, kb = jax.random.split(key)
+        ga = attack_a(ka, grads, byz_mask, ctx, **kwargs)
+        gb = attack_b(kb, grads, byz_mask, ctx, **kwargs)
+        n_byz = jnp.sum(byz_mask)
+        rank = jnp.cumsum(byz_mask) - 1          # 0-based index among byz
+        in_a = byz_mask & (rank < jnp.ceil(frac * n_byz))
+        return jnp.where(in_a[:, None], ga, gb)
+
+    return attack

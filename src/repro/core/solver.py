@@ -68,14 +68,18 @@ class SolverResult(NamedTuple):
     x_avg: jax.Array            # (1/T) Σ x_{k+1}  (Theorem 3.8 average)
     gaps: jax.Array             # (T,) f(x_k) − f(x*)
     n_alive: jax.Array          # (T,) |good_k| (m for stateless aggregators)
-    byz_mask: jax.Array         # (m,) which workers were Byzantine
+    byz_mask: jax.Array         # (m,) workers that were *ever* Byzantine
     ever_filtered_good: jax.Array  # () bool — did the filter ever drop a good worker
     final_alive: jax.Array      # (m,) bool
 
 
-def _make_byz_mask(key: jax.Array, m: int, n_byz: int) -> jax.Array:
-    perm = jax.random.permutation(key, m)
-    return jnp.isin(jnp.arange(m), perm[:n_byz])
+def _byz_rank(key: jax.Array, m: int) -> jax.Array:
+    """Random per-worker rank; worker w is Byzantine iff rank[w] < n_byz.
+    (``argsort(perm)[w]`` is w's position in ``perm``, so ``rank < n_byz``
+    equals the historical ``isin(arange(m), perm[:n_byz])`` bit-for-bit.)
+    Scenario adversaries re-derive a *per-step* mask from the same rank
+    (churn/late-join schedules — repro.scenarios.adversary)."""
+    return jnp.argsort(jax.random.permutation(key, m))
 
 
 def _make_aggregator(problem: Problem, cfg: SolverConfig):
@@ -110,24 +114,66 @@ def _make_aggregator(problem: Problem, cfg: SolverConfig):
     return jnp.zeros(()), step
 
 
-def run_sgd(problem: Problem, cfg: SolverConfig, key: jax.Array) -> SolverResult:
-    """Run one full optimization (jit-compiled scan over T iterations)."""
+def run_sgd(
+    problem: Problem,
+    cfg: SolverConfig,
+    key: jax.Array,
+    adversary=None,
+) -> SolverResult:
+    """Run one full optimization (jit-compiled scan over T iterations).
+
+    ``adversary`` (optional) replaces the static ``cfg.attack`` /
+    ``cfg.alpha`` pair with a *scenario* adversary — any object with the
+    :class:`repro.scenarios.adversary.ScenarioAdversary` interface:
+
+    * ``mask_at(rank, k) -> (m,) bool`` — the per-step Byzantine set (the
+      static path evaluates its mask once; churn/late-join schedules vary it),
+    * ``init_state(m, d) -> pytree`` — adversary memory, scan-carried next
+      to the aggregator state,
+    * ``attack(key, grads, mask_k, ctx, state) -> grads'`` and
+      ``update_state(state, mask_k, grads', xi, alive, n_alive, ctx) ->
+      state'`` — the (possibly adaptive) corruption and its feedback update.
+
+    Its leaves may be traced arrays, so an entire grid of scenarios runs
+    under one ``jit(vmap)`` (see :func:`repro.scenarios.campaign.run_campaign`).
+    Both paths feed the attack a ``ctx`` extended with the previous step's
+    filter feedback (``alive``, ``n_alive``, ``prev_xi``) — everything the
+    Remark-2.3 adversary may observe.
+    """
     key, mask_key = jax.random.split(key)
-    byz_mask = _make_byz_mask(mask_key, cfg.m, cfg.n_byzantine)
-    attack_fn = attack_lib.get_attack(cfg.attack)
-    attack_kwargs = dict(cfg.attack_kwargs)
+    rank = _byz_rank(mask_key, cfg.m)
+    if adversary is None:
+        static_mask = rank < cfg.n_byzantine
+        attack_fn = attack_lib.get_attack(cfg.attack)
+        attack_kwargs = dict(cfg.attack_kwargs)
+        adv_state0: object = jnp.zeros(())
+    else:
+        adv_state0 = adversary.init_state(cfg.m, problem.d)
     agg_state0, agg_step = _make_aggregator(problem, cfg)
     x1 = problem.x1.astype(jnp.float32)
 
     def body(carry, k):
-        x, agg_state, x_sum, any_good_filtered, rng = carry
+        x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered, fb, rng = carry
+        prev_xi, prev_alive, prev_n_alive = fb
         rng, gkey, akey = jax.random.split(rng, 3)
         worker_keys = jax.random.split(gkey, cfg.m)
         grads = jax.vmap(lambda wk: problem.stoch_grad(wk, x))(worker_keys)
-        ctx = {"true_grad": problem.grad(x), "V": problem.V, "step": k}
-        grads = attack_fn(akey, grads, byz_mask, ctx, **attack_kwargs)
+        ctx = {
+            "true_grad": problem.grad(x), "V": problem.V, "step": k,
+            "alive": prev_alive, "n_alive": prev_n_alive, "prev_xi": prev_xi,
+        }
+        if adversary is None:
+            mask_k = static_mask
+            grads = attack_fn(akey, grads, mask_k, ctx, **attack_kwargs)
+        else:
+            mask_k = adversary.mask_at(rank, k)
+            grads = adversary.attack(akey, grads, mask_k, ctx, adv_state)
 
         agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1)
+        if adversary is not None:
+            adv_state = adversary.update_state(
+                adv_state, mask_k, grads, xi, alive, n_alive, ctx
+            )
 
         x_new = x - cfg.eta * xi
         # Fact 2.5 projected step: ball of radius D around x_1
@@ -136,15 +182,24 @@ def run_sgd(problem: Problem, cfg: SolverConfig, key: jax.Array) -> SolverResult
         x_new = x1 + delta * jnp.minimum(1.0, problem.D / jnp.maximum(nrm, 1e-30))
 
         gap = problem.f(x) - problem.f(problem.x_star)
-        any_good_filtered = any_good_filtered | jnp.any((~alive) & (~byz_mask))
+        ever_byz = ever_byz | mask_k
+        any_good_filtered = any_good_filtered | jnp.any((~alive) & (~ever_byz))
+        fb = (xi, alive, jnp.asarray(n_alive, jnp.int32))
         return (
-            (x_new, agg_state, x_sum + x_new, any_good_filtered, rng),
+            (x_new, agg_state, adv_state, x_sum + x_new, ever_byz,
+             any_good_filtered, fb, rng),
             (gap, n_alive),
         )
 
-    carry0 = (x1, agg_state0, jnp.zeros_like(x1), jnp.asarray(False), key)
-    (x_fin, agg_state, x_sum, good_filtered, _), (gaps, n_alive) = jax.lax.scan(
-        body, carry0, jnp.arange(cfg.T)
+    fb0 = (
+        jnp.zeros_like(x1),
+        jnp.ones((cfg.m,), bool),
+        jnp.asarray(cfg.m, jnp.int32),
+    )
+    carry0 = (x1, agg_state0, adv_state0, jnp.zeros_like(x1),
+              jnp.zeros((cfg.m,), bool), jnp.asarray(False), fb0, key)
+    (x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _), (gaps, n_alive) = (
+        jax.lax.scan(body, carry0, jnp.arange(cfg.T))
     )
     final_alive = (
         agg_state.alive if hasattr(agg_state, "alive") else jnp.ones((cfg.m,), bool)
@@ -154,7 +209,7 @@ def run_sgd(problem: Problem, cfg: SolverConfig, key: jax.Array) -> SolverResult
         x_avg=x_sum / cfg.T,
         gaps=gaps,
         n_alive=n_alive,
-        byz_mask=byz_mask,
+        byz_mask=ever_byz,
         ever_filtered_good=good_filtered,
         final_alive=final_alive,
     )

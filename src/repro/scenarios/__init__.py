@@ -1,0 +1,77 @@
+"""Scenario engine: adaptive adversaries + the one-jit campaign runner.
+
+The paper's Remark-2.3 adversary may collude, change identity over time,
+and condition on everything observed so far; this package makes that class
+executable and sweepable (DESIGN.md §8):
+
+* :mod:`repro.scenarios.spec` — :class:`Scenario`, a scalar-leaf pytree
+  describing one adversary dynamic (phase switches, coalition splits,
+  churn/late-join mask schedules, feedback adaptation), plus the
+  ``scenario_*`` constructors and :func:`expand_grid`;
+* :mod:`repro.scenarios.adversary` — the runtime the solver's scan body
+  drives: per-step mask schedule, ``lax.switch`` attack dispatch, and the
+  scan-carried :class:`AdvState` feedback loop;
+* :mod:`repro.scenarios.campaign` — :func:`run_campaign`, lowering a whole
+  (scenario × α × seed × aggregator) grid into one jitted ``vmap``;
+* :mod:`repro.scenarios.report` — seed-aggregated leaderboard /
+  degradation / Theorem-3.8-bound records → ``BENCH_scenarios.json``.
+"""
+from repro.scenarios.adversary import (
+    ATTACK_TABLE,
+    AdvState,
+    ScenarioAdversary,
+    attack_id,
+)
+from repro.scenarios.campaign import (
+    CampaignResult,
+    RunStats,
+    build_campaign_fn,
+    run_campaign,
+    run_campaign_looped,
+)
+from repro.scenarios.report import (
+    degraded_pairs,
+    summarize_campaign,
+    theorem38_bound,
+    write_report,
+)
+from repro.scenarios.spec import (
+    NEVER,
+    CampaignGrid,
+    Scenario,
+    expand_grid,
+    make_scenario,
+    scenario_adaptive,
+    scenario_churn,
+    scenario_coalition,
+    scenario_late_join,
+    scenario_lie_low_then_strike,
+    scenario_static,
+)
+
+__all__ = [
+    "ATTACK_TABLE",
+    "AdvState",
+    "CampaignGrid",
+    "CampaignResult",
+    "NEVER",
+    "RunStats",
+    "Scenario",
+    "ScenarioAdversary",
+    "attack_id",
+    "build_campaign_fn",
+    "degraded_pairs",
+    "expand_grid",
+    "make_scenario",
+    "run_campaign",
+    "run_campaign_looped",
+    "scenario_adaptive",
+    "scenario_churn",
+    "scenario_coalition",
+    "scenario_late_join",
+    "scenario_lie_low_then_strike",
+    "scenario_static",
+    "summarize_campaign",
+    "theorem38_bound",
+    "write_report",
+]

@@ -1,0 +1,179 @@
+"""Adversary runtime: turns a :class:`repro.scenarios.spec.Scenario` into
+the stateful, scheduled attacker the solver's scan body drives.
+
+Three pieces (DESIGN.md §8):
+
+* **per-step mask schedule** — :meth:`ScenarioAdversary.mask_at` re-derives
+  good_k's complement from the run's random worker ranks: rotation by
+  ``churn_stride`` every ``churn_period`` steps, activation at ``join_step``;
+* **attack dispatch** — both coalition phases are evaluated through one
+  ``lax.switch`` over :data:`ATTACK_TABLE` (ids, not Python branches, so a
+  vmapped campaign traces the body exactly once);
+* **feedback adaptation** — :class:`AdvState` is scan-carried next to the
+  aggregator state and updated *after* each aggregation from exactly what
+  Remark 2.3 grants the adversary: the previous filter decision
+  (alive, n_alive) and the realized update ξ (observable from the broadcast
+  iterates).  ``adapt_scale`` is a multiplicative-weights search for the
+  largest magnitude the aggregator still accepts.
+
+Every attack in the table is the *same function* as the static zoo in
+:mod:`repro.core.attacks`, wrapped so one generic ``scale`` knob multiplies
+its natural magnitude parameter — ``scale = 1`` reproduces the zoo's
+defaults bit-for-bit, which is what the static-equivalence tests pin down.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as attack_lib
+
+# (name, wrapper) — wrapper(key, grads, mask, ctx, scale) maps the generic
+# scale onto the attack's own magnitude knob, scaled from its default.
+_SCALE_KNOBS: dict[str, tuple[str, float] | None] = {
+    "none": None,
+    "sign_flip": ("scale", 3.0),
+    "random_gaussian": ("scale", 100.0),
+    "constant_drift": ("scale", 10.0),
+    "alie": ("z", 1.0),
+    "inner_product": ("scale", 1.0),
+    "hidden_shift": ("c", 0.9),
+    "retreat_on_filter": ("scale", 1.0),
+}
+
+ATTACK_TABLE: tuple[str, ...] = tuple(_SCALE_KNOBS)
+
+
+def attack_id(name: str) -> int:
+    """Integer id of ``name`` in the ``lax.switch`` dispatch table."""
+    try:
+        return ATTACK_TABLE.index(name)
+    except ValueError:
+        raise KeyError(
+            f"attack {name!r} is not scenario-dispatchable; have {ATTACK_TABLE}"
+        ) from None
+
+
+def _wrap(name: str):
+    fn = attack_lib.get_attack(name)
+    knob = _SCALE_KNOBS[name]
+    if knob is None:
+        return lambda key, grads, mask, ctx, scale: fn(key, grads, mask, ctx)
+    kwarg, default = knob
+
+    def wrapped(key, grads, mask, ctx, scale):
+        return fn(key, grads, mask, ctx, **{kwarg: default * scale})
+
+    return wrapped
+
+
+_BRANCHES = tuple(_wrap(name) for name in ATTACK_TABLE)
+
+
+def _dispatch(aid, key, grads, mask, ctx, scale):
+    return jax.lax.switch(
+        aid,
+        [functools.partial(lambda f, op: f(*op), b) for b in _BRANCHES],
+        (key, grads, mask, ctx, scale),
+    )
+
+
+# bounds of the multiplicative-weights magnitude search
+ADAPT_MIN, ADAPT_MAX = 0.1, 8.0
+# cosine threshold deciding "the previous update moved our way"
+_WIN_COS = 0.3
+
+
+class AdvState(NamedTuple):
+    """Adversary memory, scan-carried next to the aggregator state."""
+
+    adapt_scale: jax.Array   # () multiplicative magnitude multiplier
+
+
+class ScenarioAdversary(NamedTuple):
+    """A Scenario bound to its Byzantine fraction; the solver's ``adversary``
+    runtime.  A NamedTuple of (possibly traced) leaves, so constructing it
+    *inside* a vmapped function from grid rows is free."""
+
+    scenario: "spec.Scenario"  # Scenario pytree of scalar leaves
+    alpha: jax.Array           # () f32
+
+    def n_byz(self, m: int) -> jax.Array:
+        # match int(alpha * m): floor, with an epsilon against f32 round-down
+        return jnp.floor(self.alpha * m + 1e-6).astype(jnp.int32)
+
+    # -- mask schedule -----------------------------------------------------
+    def mask_at(self, rank: jax.Array, k: jax.Array) -> jax.Array:
+        """(m,) bool Byzantine set at step k from the per-worker ranks."""
+        s = self.scenario
+        m = rank.shape[0]
+        rot = jnp.where(
+            s.churn_period > 0,
+            (k // jnp.maximum(s.churn_period, 1)) * s.churn_stride,
+            0,
+        )
+        mask = ((rank - rot) % m) < self.n_byz(m)
+        return mask & (k >= s.join_step)
+
+    # -- attack ------------------------------------------------------------
+    def init_state(self, m: int, d: int) -> AdvState:
+        return AdvState(adapt_scale=jnp.ones((), jnp.float32))
+
+    def attack(self, key, grads, mask_k, ctx, state: AdvState) -> jax.Array:
+        """Corrupt Byzantine rows per the scenario's per-step rule."""
+        s = self.scenario
+        scale = s.attack_scale * jnp.where(
+            s.adapt_rate > 0, state.adapt_scale, 1.0
+        )
+        ka, kb = jax.random.split(key)
+        ga = _dispatch(s.attack_a, ka, grads, mask_k, ctx, scale)
+        gb = _dispatch(s.attack_b, kb, grads, mask_k, ctx, scale)
+        n_byz_k = jnp.sum(mask_k)
+        crank = jnp.cumsum(mask_k) - 1  # 0-based rank within the byz set
+        use_b = (ctx["step"] >= s.switch_step) | (
+            crank >= jnp.ceil(s.coalition_frac * n_byz_k)
+        )
+        # Per-row select = the combinator composition
+        # coalition(phase_switch(a, b, switch_step), b, frac) from
+        # repro.core.attacks, collapsed to two dispatches instead of three
+        # (tests pin the equivalence); honest rows are identical in ga/gb.
+        return jnp.where((mask_k & use_b)[:, None], gb, ga)
+
+    # -- feedback ----------------------------------------------------------
+    def update_state(
+        self, state: AdvState, mask_k, grads_out, xi, alive, n_alive, ctx
+    ) -> AdvState:
+        """Multiplicative-weights response to the aggregation outcome.
+
+        ``xi`` was aggregated from exactly the rows in ``grads_out``, so the
+        injected direction is judged against the *current* coalition row.
+        "Win" = the realized update's residual (ξ minus the honest-mean
+        prediction (n_alive/m)·∇f) points along that direction AND the
+        coalition is still mostly alive.  On win the magnitude escalates by
+        (1+rate); on loss it backs off by 1/(1+rate), clipped to
+        [ADAPT_MIN, ADAPT_MAX] — an online probe of the largest deviation
+        the aggregator accepts.  No-op when adapt_rate == 0 or no worker is
+        currently Byzantine (e.g. before a late join).
+        """
+        s = self.scenario
+        m = mask_k.shape[0]
+        n_byz_k = jnp.sum(mask_k)
+        w = mask_k.astype(jnp.float32)[:, None]
+        byz_row = jnp.sum(grads_out * w, axis=0) / jnp.maximum(n_byz_k, 1)
+
+        dev = byz_row - ctx["true_grad"]
+        resid = xi - (n_alive.astype(jnp.float32) / m) * ctx["true_grad"]
+        cos = jnp.vdot(resid, dev) / jnp.maximum(
+            jnp.linalg.norm(resid) * jnp.linalg.norm(dev), 1e-12
+        )
+        byz_alive_frac = jnp.sum(alive & mask_k) / jnp.maximum(n_byz_k, 1)
+        win = (cos > _WIN_COS) & (byz_alive_frac > 0.5)
+        factor = jnp.where(win, 1.0 + s.adapt_rate, 1.0 / (1.0 + s.adapt_rate))
+        new_scale = jnp.clip(state.adapt_scale * factor, ADAPT_MIN, ADAPT_MAX)
+        adaptive = (s.adapt_rate > 0) & (n_byz_k > 0)
+        return AdvState(
+            adapt_scale=jnp.where(adaptive, new_scale, state.adapt_scale)
+        )

@@ -1,0 +1,151 @@
+"""Campaign runner — a whole grid of runs under one ``jit``.
+
+Every sweep in this repo used to be a Python loop re-tracing
+``run_sgd`` once per configuration.  :func:`run_campaign` lowers the entire
+(scenario × α × seed) grid for every requested aggregator into a *single*
+jitted computation: one ``jax.vmap`` over the stacked grid per aggregator,
+the (small, static) aggregator axis unrolled inside the same trace.  One
+compile, zero per-run re-traces, and the vmapped scan bodies batch the
+per-worker gradient math into (N, m, d) contractions the backend actually
+likes (DESIGN.md §8).
+
+Per-run summaries (gap of the averaged iterate, detection latency, …) are
+computed in-graph so the host transfer is O(N), not O(N·T); pass
+``return_gaps=True`` when the full (N, T) gap traces are needed (e.g. the
+multi-seed iterations-to-ε quantiles of ``bench_table1``).
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import Problem, SolverConfig, run_sgd
+from repro.scenarios.adversary import ScenarioAdversary
+from repro.scenarios.spec import CampaignGrid
+
+
+class RunStats(NamedTuple):
+    """Per-run summaries; every leaf has leading axis N (the grid)."""
+
+    gap_avg: jax.Array        # f(x̄) − f*   (Theorem-3.8 average iterate)
+    gap_final: jax.Array      # f(x_T) − f*
+    n_alive_final: jax.Array  # |good_T|
+    n_byz_ever: jax.Array     # |{workers ever Byzantine}|
+    detect_latency: jax.Array # first k with |good_k| ≤ m − n_byz_ever; -1 = never
+    ever_filtered_good: jax.Array  # did the filter ever drop a never-Byzantine worker
+    gaps: jax.Array | None = None  # (N, T) traces, only when return_gaps
+
+
+class CampaignResult(NamedTuple):
+    stats: dict[str, RunStats]   # aggregator name → stacked per-run stats
+    entries: list[dict]          # grid row metadata (scenario name, α, seed)
+    wall_s: float                # steady-state wall-clock of the one-jit call
+    compile_s: float             # first-call (trace + compile) overhead
+    n_runs: int                  # grid rows per aggregator
+
+
+def _summarize(problem: Problem, cfg: SolverConfig, res, return_gaps: bool):
+    gap_avg = problem.f(res.x_avg) - problem.f(problem.x_star)
+    gap_final = problem.f(res.x_final) - problem.f(problem.x_star)
+    n_byz_ever = jnp.sum(res.byz_mask)
+    hit = res.n_alive <= (cfg.m - n_byz_ever)
+    detect = jnp.where(
+        jnp.any(hit) & (n_byz_ever > 0),
+        jnp.argmax(hit).astype(jnp.int32) + 1,
+        jnp.asarray(-1, jnp.int32),
+    )
+    return RunStats(
+        gap_avg=gap_avg,
+        gap_final=gap_final,
+        n_alive_final=jnp.asarray(res.n_alive[-1], jnp.int32),
+        n_byz_ever=n_byz_ever.astype(jnp.int32),
+        detect_latency=detect,
+        ever_filtered_good=res.ever_filtered_good,
+        gaps=res.gaps if return_gaps else None,
+    )
+
+
+def build_campaign_fn(
+    problem: Problem,
+    base_cfg: SolverConfig,
+    aggregators: Sequence[str],
+    return_gaps: bool = False,
+):
+    """The jittable (scenarios, alpha, seeds) → {agg: RunStats} function.
+
+    ``base_cfg`` supplies everything static: m, T, η, thresholds, and the
+    *nominal* α that sizes Krum's f and the trimmed-mean fraction (baselines
+    are configured for the nominal fraction; the realized per-run fraction
+    is a grid axis the adversary owns).
+    """
+    cfgs = {name: base_cfg._replace(aggregator=name) for name in aggregators}
+
+    def campaign(scenarios, alpha, seeds):
+        out = {}
+        for name, cfg in cfgs.items():  # static unroll — one trace total
+
+            def one(scn, a, seed, cfg=cfg):
+                adv = ScenarioAdversary(scenario=scn, alpha=a)
+                res = run_sgd(problem, cfg, jax.random.PRNGKey(seed), adversary=adv)
+                return _summarize(problem, cfg, res, return_gaps)
+
+            out[name] = jax.vmap(one)(scenarios, alpha, seeds)
+        return out
+
+    return campaign
+
+
+def run_campaign(
+    problem: Problem,
+    base_cfg: SolverConfig,
+    grid: CampaignGrid,
+    aggregators: Sequence[str],
+    return_gaps: bool = False,
+) -> CampaignResult:
+    """Execute the full grid for every aggregator under one jit.
+
+    Trace + compile are paid once for the whole campaign and measured
+    separately via AOT lowering (``compile_s``); ``wall_s`` is the pure
+    execution of all ``len(aggregators) × grid.n_runs`` runs.
+    """
+    fn = jax.jit(build_campaign_fn(problem, base_cfg, aggregators, return_gaps))
+    t0 = time.perf_counter()
+    compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
+    t1 = time.perf_counter()
+    out = jax.block_until_ready(compiled(grid.scenarios, grid.alpha, grid.seeds))
+    t2 = time.perf_counter()
+    return CampaignResult(
+        stats=out,
+        entries=grid.entries,
+        wall_s=t2 - t1,
+        compile_s=t1 - t0,
+        n_runs=grid.n_runs,
+    )
+
+
+def run_campaign_looped(
+    problem: Problem,
+    base_cfg: SolverConfig,
+    grid: CampaignGrid,
+    aggregators: Sequence[str],
+) -> tuple[dict[str, list[float]], float]:
+    """The pre-campaign baseline: one eager ``run_sgd`` per grid row per
+    aggregator, re-tracing the scan every call — exactly how the sweeps in
+    ``examples/`` and ``benchmarks/`` used to run.  Returns per-aggregator
+    gap lists and total wall-clock, for the batched-vs-looped comparison
+    recorded in ``BENCH_scenarios.json``."""
+    t0 = time.perf_counter()
+    gaps: dict[str, list[float]] = {name: [] for name in aggregators}
+    f_star = problem.f(problem.x_star)
+    for name in aggregators:
+        cfg = base_cfg._replace(aggregator=name)
+        for i in range(grid.n_runs):
+            scn = jax.tree.map(lambda x, i=i: x[i], grid.scenarios)
+            adv = ScenarioAdversary(scenario=scn, alpha=grid.alpha[i])
+            res = run_sgd(problem, cfg, jax.random.PRNGKey(grid.seeds[i]),
+                          adversary=adv)
+            gaps[name].append(float(problem.f(res.x_avg) - f_star))
+    return gaps, time.perf_counter() - t0

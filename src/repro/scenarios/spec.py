@@ -1,0 +1,198 @@
+"""Scenario specs — data-parameterized adversary dynamics.
+
+The paper's Remark-2.3 adversary is *adaptive*: Byzantine workers may
+collude, change identity over time, and condition on everything observed so
+far.  A :class:`Scenario` captures one point in that space as a pytree of
+**scalars only** — every scenario has the same structure and differs only in
+leaf values, which is what lets an entire campaign of scenarios stack along
+one leading axis and run under a single ``jit(vmap)`` with zero per-run
+re-tracing (DESIGN.md §8).
+
+One uniform rule generates the whole family.  At step k, a Byzantine worker
+with coalition rank r (its 0-based index within the current Byzantine set)
+plays::
+
+    attack_b  if  (k >= switch_step) or (r >= ceil(coalition_frac · n_byz))
+    attack_a  otherwise
+
+and the Byzantine *identity* set itself is a schedule: workers join only at
+``join_step``, and rotate to the next ``churn_stride`` workers every
+``churn_period`` steps.  Special cases of that rule:
+
+* static attack             — attack_a = attack_b, everything else neutral;
+* lie-low-then-strike       — attack_a = none, switch_step past the
+                              𝔗_A/𝔗_B warmup;
+* coalition split           — coalition_frac ∈ (0, 1), switch_step = NEVER;
+* churn / late join         — churn_period > 0 / join_step > 0;
+* feedback-adaptive         — adapt_rate > 0: the attack magnitude is a
+                              multiplicative-weights response to the guard's
+                              previous filter decision (see
+                              :mod:`repro.scenarios.adversary`).
+
+Attacks are referenced by integer id into
+:data:`repro.scenarios.adversary.ATTACK_TABLE` so dispatch is a
+``lax.switch`` (vmappable), not a Python branch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# sentinel for "this schedule never fires" — any step count in practice is
+# far below 2^30 and int32 arithmetic on it cannot overflow when compared
+NEVER = 1 << 30
+
+
+class Scenario(NamedTuple):
+    """One adversary dynamic, as a pytree of scalar arrays (vmap-stackable).
+
+    See the module docstring for the per-step rule these parameters feed.
+    ``attack_scale`` multiplies each attack's *default* magnitude (so 1.0
+    reproduces the static zoo exactly); ``adapt_rate`` > 0 turns on the
+    multiplicative feedback response, which further scales the magnitude by
+    the scan-carried ``AdvState.adapt_scale``.
+    """
+
+    attack_a: jax.Array       # () int32 — id into ATTACK_TABLE
+    attack_b: jax.Array       # () int32
+    switch_step: jax.Array    # () int32 — k ≥ switch → coalition A plays b
+    coalition_frac: jax.Array # () f32 — fraction of byz in coalition A
+    churn_period: jax.Array   # () int32 — 0 = static membership
+    churn_stride: jax.Array   # () int32 — workers rotated per churn event
+    join_step: jax.Array      # () int32 — byz honest before this step
+    attack_scale: jax.Array   # () f32 — multiplier on the attack's default
+    adapt_rate: jax.Array     # () f32 — 0 = no feedback adaptation
+
+
+def make_scenario(
+    attack: str | None = None,
+    *,
+    attack_a: str | None = None,
+    attack_b: str | None = None,
+    switch_step: int = NEVER,
+    coalition_frac: float = 1.0,
+    churn_period: int = 0,
+    churn_stride: int = 1,
+    join_step: int = 0,
+    attack_scale: float = 1.0,
+    adapt_rate: float = 0.0,
+) -> Scenario:
+    """General constructor; the ``scenario_*`` helpers below name the common
+    dynamics.  ``attack`` is shorthand for attack_a = attack_b = attack."""
+    from repro.scenarios.adversary import attack_id  # avoid import cycle
+
+    a = attack_a if attack_a is not None else attack
+    b = attack_b if attack_b is not None else a
+    if a is None:
+        raise ValueError("make_scenario needs `attack` or `attack_a`")
+    return Scenario(
+        attack_a=jnp.asarray(attack_id(a), jnp.int32),
+        attack_b=jnp.asarray(attack_id(b), jnp.int32),
+        switch_step=jnp.asarray(switch_step, jnp.int32),
+        coalition_frac=jnp.asarray(coalition_frac, jnp.float32),
+        churn_period=jnp.asarray(churn_period, jnp.int32),
+        churn_stride=jnp.asarray(churn_stride, jnp.int32),
+        join_step=jnp.asarray(join_step, jnp.int32),
+        attack_scale=jnp.asarray(attack_scale, jnp.float32),
+        adapt_rate=jnp.asarray(adapt_rate, jnp.float32),
+    )
+
+
+def scenario_static(attack: str, attack_scale: float = 1.0) -> Scenario:
+    """The stateless zoo, unchanged — the baseline every dynamic is compared
+    against in the campaign report."""
+    return make_scenario(attack, attack_scale=attack_scale)
+
+
+def scenario_lie_low_then_strike(
+    attack: str, switch_step: int, attack_scale: float = 1.0
+) -> Scenario:
+    """Behave honestly until ``switch_step``, then strike — exploits the
+    √k growth of the 𝔗_A/𝔗_B thresholds (the longer the wait, the more
+    drift the martingale checks tolerate)."""
+    return make_scenario(attack_a="none", attack_b=attack,
+                         switch_step=switch_step, attack_scale=attack_scale)
+
+
+def scenario_churn(
+    attack: str, period: int, stride: int, attack_scale: float = 1.0
+) -> Scenario:
+    """Byzantine identity rotates by ``stride`` workers every ``period``
+    steps — fresh attackers arrive with clean martingales while previous
+    ones go quiet.  The *ever-Byzantine* fraction grows with each rotation;
+    keep period·stride sized so it stays below 1/2 if the Theorem-3.8
+    regime is to apply (the campaign report checks this per run)."""
+    return make_scenario(attack, churn_period=period, churn_stride=stride,
+                         attack_scale=attack_scale)
+
+
+def scenario_late_join(
+    attack: str, join_step: int, attack_scale: float = 1.0
+) -> Scenario:
+    """Workers are honest until ``join_step``, Byzantine afterwards."""
+    return make_scenario(attack, join_step=join_step, attack_scale=attack_scale)
+
+
+def scenario_coalition(
+    attack_a: str, attack_b: str, frac: float = 0.5
+) -> Scenario:
+    """Split coalition: ⌈frac·n_byz⌉ workers play ``attack_a``, the rest
+    simultaneously play ``attack_b``."""
+    return make_scenario(attack_a=attack_a, attack_b=attack_b,
+                         coalition_frac=frac)
+
+
+def scenario_adaptive(
+    attack: str, adapt_rate: float = 0.5, attack_scale: float = 1.0
+) -> Scenario:
+    """Filter-feedback adaptive magnitude: each step the coalition observes
+    (alive, n_alive, prev ξ) and multiplies its magnitude by (1+rate) when
+    the previous step's aggregate moved in the attack direction with the
+    coalition intact, by 1/(1+rate) otherwise — an online search for the
+    largest deviation the aggregator still accepts."""
+    return make_scenario(attack, adapt_rate=adapt_rate,
+                         attack_scale=attack_scale)
+
+
+class CampaignGrid:
+    """A stacked cartesian product of (scenario × α × seed) runs.
+
+    ``scenarios``/``alpha``/``seeds`` are pytrees/arrays with leading axis
+    N = len(entries); ``entries`` keeps the human-readable (name, alpha,
+    seed) triple per row for reporting.  Not a pytree — pass the three
+    array members into jitted code separately.
+    """
+
+    def __init__(self, scenarios: Scenario, alpha: jax.Array,
+                 seeds: jax.Array, entries: list[dict]):
+        self.scenarios = scenarios
+        self.alpha = alpha
+        self.seeds = seeds
+        self.entries = entries
+
+    @property
+    def n_runs(self) -> int:
+        return len(self.entries)
+
+
+def expand_grid(
+    named_scenarios: Sequence[tuple[str, Scenario]],
+    alphas: Sequence[float],
+    seeds: Sequence[int],
+) -> CampaignGrid:
+    """Cartesian product (scenario × α × seed) → one stacked grid."""
+    rows, entries = [], []
+    for name, scn in named_scenarios:
+        for alpha in alphas:
+            for seed in seeds:
+                rows.append((scn, float(alpha), int(seed)))
+                entries.append({"scenario": name, "alpha": float(alpha),
+                                "seed": int(seed)})
+    if not rows:
+        raise ValueError("empty grid")
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[r[0] for r in rows])
+    alpha = jnp.asarray([r[1] for r in rows], jnp.float32)
+    seed = jnp.asarray([r[2] for r in rows], jnp.int32)
+    return CampaignGrid(stacked, alpha, seed, entries)

@@ -12,7 +12,10 @@ def setup(rng):
     m, d = 8, 16
     grads = jax.random.normal(rng, (m, d))
     byz = jnp.arange(m) < 3
-    ctx = {"true_grad": jnp.ones((d,)) * 0.5, "V": 1.0, "step": 0}
+    # full solver-provided ctx, incl. the previous-step feedback channel
+    ctx = {"true_grad": jnp.ones((d,)) * 0.5, "V": 1.0, "step": 0,
+           "alive": jnp.ones((m,), bool), "n_alive": jnp.asarray(m),
+           "prev_xi": jnp.zeros((d,))}
     return grads, byz, ctx
 
 
@@ -55,3 +58,38 @@ def test_mirror_uses_ctx(setup, rng):
     ctx = dict(ctx, mirror_grads=-grads)
     out = apply_attack("mirror", rng, grads, byz, ctx)
     np.testing.assert_array_equal(out[byz], -grads[byz])
+
+
+def test_retreat_on_filter_feedback(setup, rng):
+    """Strikes while the coalition is intact, reverts to honesty once the
+    guard's previous filter decision caught any colluder."""
+    grads, byz, ctx = setup
+    struck = apply_attack("retreat_on_filter", rng, grads, byz, ctx)
+    expect = apply_attack("inner_product", rng, grads, byz, ctx)
+    np.testing.assert_array_equal(struck, expect)
+    caught = dict(ctx, alive=ctx["alive"].at[0].set(False))  # worker 0 is byz
+    out = apply_attack("retreat_on_filter", rng, grads, byz, caught)
+    np.testing.assert_array_equal(out, grads)
+
+
+def test_phase_switch_combinator(setup, rng):
+    from repro.core.attacks import attack_none, attack_sign_flip, phase_switch
+
+    fn = phase_switch(attack_none, attack_sign_flip, switch_step=10)
+    early = fn(rng, *setup[:2], dict(setup[2], step=jnp.asarray(5)))
+    late = fn(rng, *setup[:2], dict(setup[2], step=jnp.asarray(10)))
+    np.testing.assert_array_equal(early, setup[0])
+    np.testing.assert_allclose(late[setup[1]], -3.0 * setup[0][setup[1]], rtol=1e-6)
+
+
+def test_coalition_combinator(setup, rng):
+    from repro.core.attacks import attack_constant_drift, attack_sign_flip, coalition
+
+    grads, byz, ctx = setup  # byz = workers 0,1,2
+    fn = coalition(attack_sign_flip, attack_constant_drift, frac=0.5)
+    out = fn(rng, grads, byz, ctx)
+    # ceil(0.5·3) = 2 → workers 0,1 sign-flip; worker 2 drifts
+    np.testing.assert_allclose(out[:2], -3.0 * grads[:2], rtol=1e-6)
+    drift = apply_attack("constant_drift", rng, grads, byz, ctx)
+    np.testing.assert_array_equal(out[2], drift[2])
+    np.testing.assert_array_equal(out[~byz], grads[~byz])

@@ -12,6 +12,7 @@ from repro.core.aggregators import (
     aggregate_krum,
     aggregate_trimmed_mean,
 )
+from repro.core.attacks import ATTACKS, apply_attack
 from repro.core.byzantine_sgd import (
     counting_median_index,
     pairwise_sq_dists_from_gram,
@@ -81,6 +82,65 @@ def test_countsketch_linear(x, k, salt):
     s_sum = ref.countsketch_ref(xa + xa, k, salt)
     s_twice = 2.0 * ref.countsketch_ref(xa, k, salt)
     np.testing.assert_allclose(s_sum, s_twice, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attack-zoo invariants: every attack is a pure overwrite of Byzantine rows
+# ---------------------------------------------------------------------------
+
+_ZOO = sorted(set(ATTACKS) - {"mirror"})  # mirror needs ctx['mirror_grads']
+
+
+def _attack_ctx(x, seed):
+    m, d = x.shape
+    return {
+        "true_grad": jnp.asarray(x).mean(axis=0),
+        "V": 1.0,
+        "step": jnp.asarray(seed % 7),
+        "alive": jnp.asarray(
+            jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.8, (m,))
+        ),
+        "n_alive": jnp.asarray(m),
+        "prev_xi": jnp.zeros((d,)),
+    }
+
+
+@pytest.mark.parametrize("name", _ZOO)
+@given(arrays(m_min=3), st.integers(0, 2**31 - 1))
+def test_attack_honest_rows_bit_identical(name, x, seed):
+    """Attacks may only overwrite Byzantine rows — honest rows must come
+    back bit-for-bit, not approximately (broadcasting through jnp.where
+    guarantees this; a repeat+add would not)."""
+    m = x.shape[0]
+    mask = np.asarray(jax.random.bernoulli(jax.random.PRNGKey(seed), 0.4, (m,)))
+    out = apply_attack(name, jax.random.PRNGKey(seed + 2), jnp.asarray(x),
+                       jnp.asarray(mask), _attack_ctx(x, seed))
+    assert out.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(out)[~mask], x[~mask])
+
+
+@pytest.mark.parametrize("name", _ZOO)
+@given(arrays(m_min=3), st.integers(0, 2**31 - 1))
+def test_attack_respects_empty_mask(name, x, seed):
+    """With no Byzantine workers the attack is the identity."""
+    mask = jnp.zeros((x.shape[0],), bool)
+    out = apply_attack(name, jax.random.PRNGKey(seed), jnp.asarray(x),
+                       mask, _attack_ctx(x, seed))
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+@given(arrays(m_min=3), st.integers(0, 2**31 - 1), st.floats(0.05, 1.0))
+def test_hidden_shift_within_claimed_deviation(x, seed, c):
+    """hidden_shift claims its rows are valid-looking gradients: within
+    c·V of the true gradient (so they pass the ∇-check for c ≤ 1)."""
+    m = x.shape[0]
+    mask = np.asarray(jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (m,)))
+    ctx = _attack_ctx(x, seed)
+    out = apply_attack("hidden_shift", jax.random.PRNGKey(seed), jnp.asarray(x),
+                       jnp.asarray(mask), ctx, c=float(c))
+    dev = np.linalg.norm(np.asarray(out)[mask] - np.asarray(ctx["true_grad"]),
+                         axis=-1)
+    assert (dev <= c * ctx["V"] + 1e-4).all()
 
 
 @given(arrays(m_min=4), st.integers(0, 2**31 - 1))

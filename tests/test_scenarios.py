@@ -1,0 +1,282 @@
+"""Scenario engine: spec/grid plumbing, mask schedules, adaptive feedback,
+and the one-jit campaign runner (DESIGN.md §8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.solver import SolverConfig, run_sgd
+from repro.data.problems import make_quadratic_problem
+from repro.scenarios import (
+    ATTACK_TABLE,
+    NEVER,
+    ScenarioAdversary,
+    attack_id,
+    expand_grid,
+    run_campaign,
+    scenario_adaptive,
+    scenario_churn,
+    scenario_coalition,
+    scenario_late_join,
+    scenario_lie_low_then_strike,
+    scenario_static,
+    summarize_campaign,
+    theorem38_bound,
+)
+from repro.scenarios.adversary import ADAPT_MAX, ADAPT_MIN, AdvState
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=1)
+
+
+def _cfg(**kw):
+    base = dict(m=16, T=200, eta=0.05, alpha=0.25,
+                aggregator="byzantine_sgd", attack="sign_flip")
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+def _adv(scn, alpha=0.25):
+    return ScenarioAdversary(scenario=scn, alpha=jnp.float32(alpha))
+
+
+class TestSpec:
+    def test_attack_ids_roundtrip(self):
+        for i, name in enumerate(ATTACK_TABLE):
+            assert attack_id(name) == i
+        with pytest.raises(KeyError):
+            attack_id("mirror")  # needs ctx the scenario engine doesn't carry
+
+    def test_expand_grid_cartesian(self):
+        scns = [("a", scenario_static("sign_flip")),
+                ("b", scenario_static("alie"))]
+        grid = expand_grid(scns, alphas=[0.125, 0.25], seeds=[0, 1, 2])
+        assert grid.n_runs == 12
+        assert grid.alpha.shape == (12,) and grid.seeds.shape == (12,)
+        assert grid.scenarios.attack_a.shape == (12,)
+        names = [e["scenario"] for e in grid.entries]
+        assert names[:6] == ["a"] * 6 and names[6:] == ["b"] * 6
+
+    def test_empty_grid_rejected(self):
+        with pytest.raises(ValueError):
+            expand_grid([], [0.25], [0])
+
+
+class TestMaskSchedule:
+    rank = jnp.arange(16)  # identity ranks: workers 0..3 byz at α=0.25
+
+    def test_static_mask_fixed_count(self):
+        adv = _adv(scenario_static("sign_flip"))
+        for k in [0, 57, 199]:
+            mask = adv.mask_at(self.rank, jnp.asarray(k))
+            assert int(mask.sum()) == 4
+            np.testing.assert_array_equal(np.asarray(mask), np.arange(16) < 4)
+
+    def test_late_join_activates_at_step(self):
+        adv = _adv(scenario_late_join("sign_flip", join_step=100))
+        assert int(adv.mask_at(self.rank, jnp.asarray(99)).sum()) == 0
+        assert int(adv.mask_at(self.rank, jnp.asarray(100)).sum()) == 4
+
+    def test_churn_rotates_identity(self):
+        adv = _adv(scenario_churn("sign_flip", period=50, stride=4))
+        m0 = np.asarray(adv.mask_at(self.rank, jnp.asarray(0)))
+        m1 = np.asarray(adv.mask_at(self.rank, jnp.asarray(50)))
+        m2 = np.asarray(adv.mask_at(self.rank, jnp.asarray(100)))
+        assert m0.sum() == m1.sum() == m2.sum() == 4
+        # stride = n_byz → disjoint rotation groups
+        assert not (m0 & m1).any() and not (m1 & m2).any()
+        np.testing.assert_array_equal(m1, np.roll(m0, 4))
+
+    def test_alpha_zero_never_byzantine(self):
+        adv = _adv(scenario_static("sign_flip"), alpha=0.0)
+        assert int(adv.mask_at(self.rank, jnp.asarray(0)).sum()) == 0
+
+
+class TestAdversaryRuntime:
+    def test_static_scenario_matches_cfg_attack(self, quad):
+        """scale=1 scenarios reproduce the static zoo — the scenario path
+        must be a strict generalization of cfg.attack.  Same RNG streams,
+        same masks; values agree up to compiler reassociation (the dual
+        coalition-phase evaluation fuses reductions differently)."""
+        for attack in ["sign_flip", "alie", "inner_product", "hidden_shift"]:
+            cfg = _cfg(attack=attack)
+            key = jax.random.PRNGKey(3)
+            res_static = run_sgd(quad, cfg, key)
+            res_scn = run_sgd(quad, cfg, key,
+                              adversary=_adv(scenario_static(attack)))
+            np.testing.assert_allclose(np.asarray(res_static.gaps),
+                                       np.asarray(res_scn.gaps),
+                                       rtol=2e-4, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(res_static.byz_mask),
+                                          np.asarray(res_scn.byz_mask))
+
+    def test_lie_low_is_honest_before_switch(self, quad):
+        """Before switch_step the adversary plays `none`, so the run is
+        identical to an unattacked one up to the strike."""
+        cfg = _cfg(aggregator="mean", T=100)
+        key = jax.random.PRNGKey(0)
+        adv = _adv(scenario_lie_low_then_strike("inner_product", switch_step=50))
+        res = run_sgd(quad, cfg, key, adversary=adv)
+        res_none = run_sgd(quad, cfg, key, adversary=_adv(scenario_static("none")))
+        np.testing.assert_allclose(np.asarray(res.gaps[:50]),
+                                   np.asarray(res_none.gaps[:50]), rtol=1e-6)
+        assert not np.allclose(np.asarray(res.gaps[60:]),
+                               np.asarray(res_none.gaps[60:]))
+
+    def test_coalition_split_rows(self, quad):
+        """frac=0.5 → half the coalition plays attack_a, half attack_b."""
+        adv = _adv(scenario_coalition("sign_flip", "constant_drift", 0.5))
+        m, d = 16, quad.d
+        grads = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+        mask = jnp.arange(m) < 4
+        ctx = {"true_grad": quad.grad(quad.x1), "V": quad.V,
+               "step": jnp.asarray(0), "alive": jnp.ones((m,), bool),
+               "n_alive": jnp.asarray(m), "prev_xi": jnp.zeros((d,))}
+        state = adv.init_state(m, d)
+        out = np.asarray(adv.attack(jax.random.PRNGKey(2), grads, mask, ctx, state))
+        np.testing.assert_allclose(out[:2], -3.0 * np.asarray(grads[:2]), rtol=1e-5)
+        drift_row = 10.0 * quad.V * np.ones(d) / np.sqrt(d)
+        np.testing.assert_allclose(out[2:4], np.broadcast_to(drift_row, (2, d)),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(out[4:], np.asarray(grads[4:]))
+
+    def test_feedback_escalates_and_backs_off(self):
+        """update_state judges ξ against the *current* coalition row:
+        aligned residual + intact coalition → scale × (1+r); opposed
+        residual → scale ÷ (1+r); always clipped."""
+        m, d = 8, 4
+        adv = _adv(scenario_adaptive("inner_product", adapt_rate=0.5))
+        mask = jnp.arange(m) < 2
+        dirn = jnp.ones((d,)) / 2.0
+        ctx = {"true_grad": jnp.zeros((d,))}
+        grads_out = jnp.where(mask[:, None], dirn[None, :], 0.0)
+        state = AdvState(adapt_scale=jnp.float32(1.0))
+        win = adv.update_state(state, mask, grads_out, xi=dirn,
+                               alive=jnp.ones((m,), bool),
+                               n_alive=jnp.asarray(m), ctx=ctx)
+        assert float(win.adapt_scale) == pytest.approx(1.5)
+        lose = adv.update_state(state, mask, grads_out, xi=-dirn,
+                                alive=jnp.ones((m,), bool),
+                                n_alive=jnp.asarray(m), ctx=ctx)
+        assert float(lose.adapt_scale) == pytest.approx(1.0 / 1.5)
+        # filtered coalition loses even with aligned residual
+        dead = adv.update_state(state, mask, grads_out, xi=dirn,
+                                alive=~mask, n_alive=jnp.asarray(m - 2), ctx=ctx)
+        assert float(dead.adapt_scale) == pytest.approx(1.0 / 1.5)
+        # no currently-Byzantine worker (pre-join) → feedback is a no-op
+        idle = adv.update_state(state, jnp.zeros((m,), bool), grads_out,
+                                xi=dirn, alive=jnp.ones((m,), bool),
+                                n_alive=jnp.asarray(m), ctx=ctx)
+        assert float(idle.adapt_scale) == 1.0
+        # clipping
+        hi = AdvState(adapt_scale=jnp.float32(ADAPT_MAX))
+        assert float(adv.update_state(hi, mask, grads_out, xi=dirn,
+                                      alive=jnp.ones((m,), bool),
+                                      n_alive=jnp.asarray(m),
+                                      ctx=ctx).adapt_scale) <= ADAPT_MAX
+        assert ADAPT_MIN <= float(lose.adapt_scale)
+
+    def test_engine_rule_equals_combinator_composition(self, quad):
+        """ScenarioAdversary.attack collapses the combinator composition
+        coalition(phase_switch(a, b, switch), b, frac) to two dispatches —
+        pin the equivalence so the two implementations cannot drift."""
+        from repro.core.attacks import (
+            attack_constant_drift,
+            attack_sign_flip,
+            coalition,
+            phase_switch,
+        )
+        from repro.scenarios import make_scenario
+
+        m, d = 16, quad.d
+        scn = make_scenario(attack_a="sign_flip", attack_b="constant_drift",
+                            switch_step=50, coalition_frac=0.5)
+        adv = _adv(scn)
+        fa = lambda key, grads, mask, ctx: attack_sign_flip(
+            key, grads, mask, ctx, scale=3.0)
+        fb = lambda key, grads, mask, ctx: attack_constant_drift(
+            key, grads, mask, ctx, scale=10.0)
+        composed = coalition(phase_switch(fa, fb, 50), fb, 0.5)
+        grads = jax.random.normal(jax.random.PRNGKey(4), (m, d))
+        mask = jnp.arange(m) < 4
+        state = adv.init_state(m, d)
+        for k in [0, 49, 50, 120]:
+            ctx = {"true_grad": quad.grad(quad.x1), "V": quad.V,
+                   "step": jnp.asarray(k), "alive": jnp.ones((m,), bool),
+                   "n_alive": jnp.asarray(m), "prev_xi": jnp.zeros((d,))}
+            out_engine = adv.attack(jax.random.PRNGKey(5), grads, mask, ctx, state)
+            out_comb = composed(jax.random.PRNGKey(5), grads, mask, ctx)
+            np.testing.assert_allclose(np.asarray(out_engine),
+                                       np.asarray(out_comb), rtol=1e-6)
+
+    def test_adapt_rate_zero_is_static(self):
+        m, d = 8, 4
+        adv = _adv(scenario_static("inner_product"))
+        state = adv.init_state(m, d)
+        mask = jnp.arange(m) < 2
+        out = adv.update_state(state, mask,
+                               jnp.ones((m, d)), xi=jnp.ones((d,)),
+                               alive=jnp.ones((m,), bool),
+                               n_alive=jnp.asarray(m),
+                               ctx={"true_grad": jnp.zeros((d,))})
+        assert float(out.adapt_scale) == 1.0
+
+
+class TestCampaign:
+    def test_grid_runs_match_individual_runs(self, quad):
+        """The vmapped campaign must reproduce per-run eager results."""
+        cfg = _cfg(T=150)
+        scns = [("sf", scenario_static("sign_flip")),
+                ("churn", scenario_churn("sign_flip", period=75, stride=4))]
+        grid = expand_grid(scns, alphas=[0.25], seeds=[0, 1])
+        result = run_campaign(quad, cfg, grid, ["mean", "byzantine_sgd"])
+        assert result.n_runs == 4
+        for agg in ["mean", "byzantine_sgd"]:
+            for i, e in enumerate(result.entries):
+                scn = dict(scns)[e["scenario"]]
+                res = run_sgd(quad, cfg._replace(aggregator=agg),
+                              jax.random.PRNGKey(e["seed"]),
+                              adversary=_adv(scn, e["alpha"]))
+                gap = float(quad.f(res.x_avg) - quad.f(quad.x_star))
+                assert float(result.stats[agg].gap_avg[i]) == pytest.approx(
+                    gap, rel=1e-5
+                ), (agg, e)
+
+    def test_churn_inflates_ever_byzantine(self, quad):
+        cfg = _cfg(T=100)
+        grid = expand_grid(
+            [("churn", scenario_churn("sign_flip", period=50, stride=4)),
+             ("static", scenario_static("sign_flip"))],
+            alphas=[0.25], seeds=[0],
+        )
+        result = run_campaign(quad, cfg, grid, ["byzantine_sgd"])
+        ever = np.asarray(result.stats["byzantine_sgd"].n_byz_ever)
+        by_name = {e["scenario"]: ever[i] for i, e in enumerate(result.entries)}
+        assert by_name["churn"] == 8 and by_name["static"] == 4
+
+    def test_return_gaps_shape(self, quad):
+        cfg = _cfg(T=60)
+        grid = expand_grid([("sf", scenario_static("sign_flip"))],
+                           alphas=[0.25], seeds=[0, 1, 2])
+        result = run_campaign(quad, cfg, grid, ["mean"], return_gaps=True)
+        assert result.stats["mean"].gaps.shape == (3, 60)
+
+    def test_summarize_and_bound(self, quad):
+        cfg = _cfg(T=150)
+        grid = expand_grid(
+            [("static_sf", scenario_static("sign_flip")),
+             ("adaptive_ip", scenario_adaptive("inner_product", 0.5))],
+            alphas=[0.25], seeds=[0, 1],
+        )
+        result = run_campaign(quad, cfg, grid, ["mean", "byzantine_sgd"])
+        rec = summarize_campaign(result, quad, cfg,
+                                 static_of={"adaptive_ip": "static_sf"})
+        assert len(rec["leaderboard"]) == 2 * 2  # scenarios × aggregators
+        guard_rows = {r["scenario"]: r for r in rec["guard_bound"]}
+        assert set(guard_rows) == {"static_sf", "adaptive_ip"}
+        for r in guard_rows.values():
+            assert r["within"], r  # Theorem-3.8 gap bound holds
+        assert all(d["static"] == "static_sf" for d in rec["degradation"])
+        assert theorem38_bound(quad, cfg, 0.5) > theorem38_bound(quad, cfg, 0.25)
