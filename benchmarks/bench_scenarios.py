@@ -12,16 +12,30 @@ Two deliverables (DESIGN.md §8):
    one-jit campaign against the historical one-eager-``run_sgd``-per-cell
    Python loop.
 
+Third deliverable (DESIGN.md §9): the **guard-backend axis** — the same
+campaign sweeps the guard's realizations (dense / fused Pallas pipeline /
+distributed CountSketch) as variants next to the aggregator axis, and the
+report gains a ``backend_axis`` section with per-backend campaign
+wall-clock (measured on this backend) plus the roofline-model steady-state
+per-step wall-clock at the m = 32, d = 2²⁰ headline shape, where the fused
+pipeline's 3-vs-6-pass traffic reduction makes it strictly cheaper than
+dense.
+
 ``--mini`` is the CI tier-2 shape: 5 scenarios (3 dynamic) × 2 seeds at
-small T, looped comparison on the matrix kept.
+small T, two guard backends, looped comparison on the matrix kept.
 """
 from __future__ import annotations
 
 import argparse
 
+import jax
+
 from benchmarks.common import emit
 from repro.core.solver import SolverConfig
 from repro.data.problems import make_quadratic_problem
+from repro.kernels import ops
+from repro.roofline.guard_cost import BACKEND_COSTS, steady_state_us
+from repro.roofline.hw import TPU_V5E
 from repro.scenarios import (
     degraded_pairs,
     expand_grid,
@@ -40,6 +54,14 @@ AGGREGATORS = ["mean", "krum", "coordinate_median", "trimmed_mean",
                "geometric_median", "byzantine_sgd"]
 MATRIX_ATTACKS = ["none", "sign_flip", "random_gaussian", "alie",
                   "inner_product", "hidden_shift"]
+# the guard-backend sweep: dense oracle, fused Pallas pipeline, distributed
+# CountSketch guard (dp_exact is covered by the tier-1 parity tests; it
+# models collective savings, not local-traffic savings, so the leaderboard
+# sweeps the three local realizations)
+BACKENDS = ["dense", "fused", "dp_sketch"]
+MINI_BACKENDS = ["dense", "fused"]
+# headline shape of the DESIGN.md §5 roofline claim
+MODEL_SHAPE = {"m": 32, "d": 1 << 20}
 
 
 def scenario_zoo(T: int, m: int) -> tuple[list, dict]:
@@ -69,12 +91,17 @@ def scenario_zoo(T: int, m: int) -> tuple[list, dict]:
     return scenarios, static_of
 
 
-def campaign_leaderboard(mini: bool) -> dict:
+def campaign_leaderboard(mini: bool, backends: list[str] | None = None) -> dict:
     m = 16
     T = 300 if mini else 1500
     prob = make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
+    # sketch_dim < d so the dp_sketch variant actually exercises sketch
+    # compression (k=8 at d=16 is a 2x fold; the default k=4096 > d would
+    # make the CountSketch lossless and silently measure the exact guard);
+    # the opts filter drops the knob for the dense/fused variants
     cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
-                       aggregator="byzantine_sgd", attack="sign_flip")
+                       aggregator="byzantine_sgd", attack="sign_flip",
+                       guard_opts=(("sketch_dim", 8),))
     scenarios, static_of = scenario_zoo(T, m)
     aggs = AGGREGATORS
     if mini:
@@ -87,12 +114,17 @@ def campaign_leaderboard(mini: bool) -> dict:
         aggs = ["mean", "krum", "byzantine_sgd"]
     else:
         alphas, seeds = [0.125, 0.25], range(8)
+    if backends is None:
+        backends = MINI_BACKENDS if mini else BACKENDS
 
     grid = expand_grid(scenarios, alphas, seeds)
-    result = run_campaign(prob, cfg, grid, aggs)
+    result = run_campaign(prob, cfg, grid, aggs, backends=backends)
     record = summarize_campaign(result, prob, cfg, static_of=static_of)
+    record["backend_axis"] = backend_axis_record(prob, cfg, grid, backends)
+    n_variants = len(result.stats)
     emit("scenarios/campaign", result.wall_s * 1e6,
-         f"runs={result.n_runs * len(aggs)},compile_s={result.compile_s:.1f}")
+         f"runs={result.n_runs * n_variants},backends={len(backends)},"
+         f"compile_s={result.compile_s:.1f}")
     for row in record["leaderboard"]:
         emit(
             f"scenarios/{row['scenario']}/a{row['alpha']}/{row['aggregator']}",
@@ -101,7 +133,9 @@ def campaign_leaderboard(mini: bool) -> dict:
             f"breaks={row['breaks']}",
         )
     for row in record["guard_bound"]:
-        emit(f"scenarios/bound/{row['scenario']}/a{row['alpha']}",
+        # one row per guard backend variant — the variant is part of the key
+        emit(f"scenarios/bound/{row['aggregator']}/{row['scenario']}"
+             f"/a{row['alpha']}",
              row["gap_med"] * 1e6,
              f"thm38_bound={row['bound']:.4f},within={row['within']},"
              f"alpha_ever={row['alpha_ever']:.3f}")
@@ -110,6 +144,52 @@ def campaign_leaderboard(mini: bool) -> dict:
              row["gap_dynamic"] * 1e6,
              f"static_gap={row['gap_static']:.5f},ratio={row['ratio']:.1f}")
     return record
+
+
+def backend_axis_record(prob, cfg, grid, backends: list[str]) -> dict:
+    """Per-backend record: measured steady-state campaign wall-clock (each
+    backend's guard-only campaign, compiled separately so the execution time
+    is attributable) + the roofline-model per-step steady-state wall-clock
+    at the m = 32, d = 2²⁰ headline shape on the target TPU.
+
+    On CPU the fused backend runs the Pallas *interpreter*, so its measured
+    numbers are not comparable across backends (``interpret`` is recorded);
+    the modeled numbers are the cross-backend comparison — bytes moved is
+    wall-clock for this memory-bound step, and the fused pipeline's 3-pass
+    sweep is strictly cheaper than the dense 6-pass reference.
+    """
+    ms, ds = MODEL_SHAPE["m"], MODEL_SHAPE["d"]
+    per_backend = {}
+    for be in backends:
+        timed = run_campaign(prob, cfg, grid, ["byzantine_sgd"],
+                             backends=[be])
+        cost = BACKEND_COSTS[be](ms, ds)
+        per_backend[be] = {
+            "campaign_wall_s": timed.wall_s,
+            "campaign_compile_s": timed.compile_s,
+            "campaign_runs": timed.n_runs,
+            "model_step_bytes": cost.step_bytes,
+            "model_steady_state_us": steady_state_us(cost),
+        }
+        emit(f"scenarios/backend/{be}", timed.wall_s * 1e6,
+             f"runs={timed.n_runs},"
+             f"model_step_us_m{ms}_d2e20={per_backend[be]['model_steady_state_us']:.0f}")
+    rec = {
+        "backends": backends,
+        "guard_opts": dict(cfg.guard_opts),
+        "model_shape": dict(MODEL_SHAPE, hw=TPU_V5E.name,
+                            hbm_bw=TPU_V5E.hbm_bw,
+                            source="repro.roofline.guard_cost"),
+        "measured_backend": jax.default_backend(),
+        "fused_runs_interpret": ops.interpret_mode(),
+        "per_backend": per_backend,
+    }
+    if "dense" in per_backend and "fused" in per_backend:
+        rec["fused_le_dense_model"] = bool(
+            per_backend["fused"]["model_steady_state_us"]
+            <= per_backend["dense"]["model_steady_state_us"]
+        )
+    return rec
 
 
 def matrix_wallclock(mini: bool, skip_looped: bool = False) -> dict:
@@ -147,8 +227,9 @@ def matrix_wallclock(mini: bool, skip_looped: bool = False) -> dict:
 
 
 def main(mini: bool = False, skip_looped: bool = False,
-         out_path: str = "BENCH_scenarios.json") -> dict:
-    record = campaign_leaderboard(mini)
+         out_path: str = "BENCH_scenarios.json",
+         backends: list[str] | None = None) -> dict:
+    record = campaign_leaderboard(mini, backends=backends)
     record["matrix6x6_wallclock"] = matrix_wallclock(mini, skip_looped)
     record["mini"] = mini
     write_report(record, out_path)
@@ -163,6 +244,11 @@ if __name__ == "__main__":
                     help="CI tier-2 shape: 5 scenarios x 2 seeds, small T")
     ap.add_argument("--skip-looped", action="store_true",
                     help="skip the slow per-cell Python-loop baseline")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated guard backends to sweep "
+                         f"(default: {','.join(MINI_BACKENDS)} for --mini, "
+                         f"{','.join(BACKENDS)} otherwise)")
     ap.add_argument("--out", default="BENCH_scenarios.json")
     args = ap.parse_args()
-    main(mini=args.mini, skip_looped=args.skip_looped, out_path=args.out)
+    main(mini=args.mini, skip_looped=args.skip_looped, out_path=args.out,
+         backends=args.backends.split(",") if args.backends else None)

@@ -73,6 +73,21 @@ def main() -> None:
             t = iters_to_eps_batch(res.stats[agg].gaps, eps)
             _emit_quantiles(f"table1/alpha{alpha}/{agg}", t)
 
+    # --- guard backends are Table-1-invariant (DESIGN.md §9): the dense,
+    # fused-Pallas, and distributed-sketch realizations of the same filter
+    # must land the same T-to-ε distribution (one campaign, backend axis;
+    # sketch_dim=8 < d so the sketch rows carry real compression noise) ---
+    cfg_b = cfg._replace(alpha=0.25, attack="sign_flip",
+                         guard_opts=(("sketch_dim", 8),))
+    grid = expand_grid([("sign_flip", scenario_static("sign_flip"))],
+                       [0.25], SEEDS)
+    res = run_campaign(prob, cfg_b, grid, ["byzantine_sgd"],
+                       return_gaps=True,
+                       backends=["dense", "fused", "dp_sketch"])
+    for name in sorted(res.stats):
+        t = iters_to_eps_batch(res.stats[name].gaps, eps)
+        _emit_quantiles(f"table1/backend/{name.partition('@')[2]}", t)
+
     # --- parallel speedup in m (Remark 1.2); m is static → one jit per m ---
     for m in [4, 8, 16, 32]:
         cfg_m = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,

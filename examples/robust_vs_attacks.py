@@ -4,11 +4,14 @@ Shows where each baseline breaks (Krum under ALIE, coordinate median under
 inner-product, mean under everything) and that ByzantineSGD holds across
 the board — the paper's Section 1.4 discussion, made empirical.
 
-The whole 6×6 matrix is ONE ``run_campaign`` call (a single jit(vmap) over
-the attack grid, aggregator axis unrolled in the same trace) instead of 36
-eagerly re-traced ``run_sgd`` calls; both wall-clocks are printed.  The
-``none`` column runs with the same α — Byzantine workers that play ``none``
-send their honest gradients, so it doubles as the clean baseline.
+The whole matrix is ONE ``run_campaign`` call (a single jit(vmap) over
+the attack grid, aggregator × guard-backend axes unrolled in the same
+trace) instead of eagerly re-traced per-cell ``run_sgd`` calls; both
+wall-clocks are printed.  The ``none`` column runs with the same α —
+Byzantine workers that play ``none`` send their honest gradients, so it
+doubles as the clean baseline.  The guard appears once per backend
+(``byzantine_sgd@dense`` / ``@fused``, DESIGN.md §9): identical filter
+decisions from two different pipelines is itself part of the picture.
 
     PYTHONPATH=src python examples/robust_vs_attacks.py
 """
@@ -23,6 +26,7 @@ from repro.scenarios import (
 
 AGGREGATORS = ["mean", "krum", "coordinate_median", "trimmed_mean",
                "geometric_median", "byzantine_sgd"]
+BACKENDS = ["dense", "fused"]
 ATTACKS = ["none", "sign_flip", "random_gaussian", "alie", "inner_product",
            "hidden_shift"]
 
@@ -33,21 +37,23 @@ def main():
                        aggregator="byzantine_sgd", attack="sign_flip")
     grid = expand_grid([(a, scenario_static(a)) for a in ATTACKS],
                        alphas=[cfg.alpha], seeds=[0])
-    result = run_campaign(prob, cfg, grid, AGGREGATORS)
+    result = run_campaign(prob, cfg, grid, AGGREGATORS, backends=BACKENDS)
     col = {e["scenario"]: i for i, e in enumerate(result.entries)}
+    variants = sorted(result.stats)
 
     print("suboptimality f(x̄)−f(x*) after T=2000, m=16, α=0.25\n")
-    print(f"{'':18s}" + "".join(f"{a:>16s}" for a in ATTACKS))
-    for agg in AGGREGATORS:
+    print(f"{'':22s}" + "".join(f"{a:>16s}" for a in ATTACKS))
+    for agg in variants:
         gaps = result.stats[agg].gap_avg
-        row = f"{agg:18s}"
+        row = f"{agg:22s}"
         for attack in ATTACKS:
             row += f"{float(gaps[col[attack]]):16.5f}"
         print(row)
     print("\n(μ-scale gaps = converged; ≥0.1 = broken by the attack)")
 
-    _, looped_s = run_campaign_looped(prob, cfg, grid, AGGREGATORS)
-    cells = len(AGGREGATORS) * len(ATTACKS)
+    _, looped_s = run_campaign_looped(prob, cfg, grid, AGGREGATORS,
+                                      backends=BACKENDS)
+    cells = len(variants) * len(ATTACKS)
     print(f"\nwall-clock, {cells} runs: "
           f"batched one-jit {result.wall_s:.2f}s "
           f"(+{result.compile_s:.1f}s compile, paid once) vs "

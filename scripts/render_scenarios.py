@@ -58,24 +58,51 @@ def render(rec: dict) -> str:
         lines.append("\n## ByzantineSGD vs the Theorem-3.8 bound\n")
         lines.append("(bound evaluated at the realized ever-Byzantine "
                      "fraction — churn corrupts more workers than the "
-                     "instantaneous α)\n")
-        lines.append("| scenario | α | α_ever | gap med | bound | within |")
-        lines.append("|---" * 6 + "|")
+                     "instantaneous α; one row per guard backend variant)\n")
+        lines.append("| guard | scenario | α | α_ever | gap med | bound | within |")
+        lines.append("|---" * 7 + "|")
         for g in rec["guard_bound"]:
             lines.append(
+                f"| {g.get('aggregator', 'byzantine_sgd')} "
                 f"| {g['scenario']} | {g['alpha']} | {g['alpha_ever']:.3f} "
                 f"| {g['gap_med']:.5f} | {g['bound']:.4f} "
                 f"| {'✓' if g['within'] else '✗'} |"
             )
 
     lines.append("\n## Detection latency (ByzantineSGD), steps to full filter\n")
-    lines.append("| scenario | α | p50 | p90 | detect rate |")
-    lines.append("|---" * 5 + "|")
+    lines.append("| guard | scenario | α | p50 | p90 | detect rate |")
+    lines.append("|---" * 6 + "|")
     for r in rec["leaderboard"]:
-        if r["aggregator"] != "byzantine_sgd":
+        if not r["aggregator"].startswith("byzantine_sgd"):
             continue
-        lines.append(f"| {r['scenario']} | {r['alpha']} | {r['detect_p50']} "
-                     f"| {r['detect_p90']} | {r['detect_rate']:.2f} |")
+        lines.append(f"| {r['aggregator']} | {r['scenario']} | {r['alpha']} "
+                     f"| {r['detect_p50']} | {r['detect_p90']} "
+                     f"| {r['detect_rate']:.2f} |")
+
+    ba = rec.get("backend_axis")
+    if ba:
+        shape = ba["model_shape"]
+        lines.append("\n## Guard-backend axis (DESIGN.md §9)\n")
+        lines.append(
+            f"measured on `{ba['measured_backend']}` "
+            f"(fused via Pallas interpreter: {ba['fused_runs_interpret']}); "
+            f"model = bytes/HBM-bandwidth on {shape['hw']} at "
+            f"m={shape['m']}, d={shape['d']}.\n"
+        )
+        lines.append("| backend | campaign wall s | runs | model step bytes "
+                     "| model steady-state µs |")
+        lines.append("|---" * 5 + "|")
+        for be, p in ba["per_backend"].items():
+            lines.append(
+                f"| {be} | {p['campaign_wall_s']:.2f} | {p['campaign_runs']} "
+                f"| {p['model_step_bytes']:,} "
+                f"| {p['model_steady_state_us']:.0f} |"
+            )
+        if "fused_le_dense_model" in ba:
+            lines.append(
+                f"\nfused ≤ dense at the headline shape (model): "
+                f"{'✓' if ba['fused_le_dense_model'] else '✗'}"
+            )
 
     wc = rec["wall_clock"]
     lines.append(

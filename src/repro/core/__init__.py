@@ -23,6 +23,11 @@ from repro.core.aggregators import (
     get_aggregator,
 )
 from repro.core.attacks import ATTACKS, apply_attack, get_attack
+from repro.core.guard_backends import (
+    guard_backend_names,
+    make_guard_backend,
+    register_guard_backend,
+)
 from repro.core.solver import ByzantineSGDSolver, SolverConfig, run_sgd
 from repro.core.epoch_solver import EpochSolverConfig, solve_strongly_convex
 from repro.core.lower_bound import (
@@ -47,6 +52,9 @@ __all__ = [
     "get_aggregator",
     "apply_attack",
     "get_attack",
+    "guard_backend_names",
+    "make_guard_backend",
+    "register_guard_backend",
     "ByzantineSGDSolver",
     "SolverConfig",
     "run_sgd",

@@ -210,6 +210,11 @@ class ByzantineGuard:
     updates ``gram_B`` incrementally, and never re-forms B Bᵀ — halving
     HBM traffic per guard step (DESIGN.md §5).  The default dense form
     is the correctness oracle the fused path is tested against.
+
+    The two forms are the ``dense`` / ``fused`` guard *backends* of the
+    solver and campaign runner (:mod:`repro.core.guard_backends`,
+    DESIGN.md §9) — select via ``SolverConfig.guard_backend`` instead of
+    constructing a guard directly when driving ``run_sgd``.
     """
 
     def __init__(self, cfg: GuardConfig, use_fused: bool = False,

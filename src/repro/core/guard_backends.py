@@ -1,0 +1,216 @@
+"""Guard-backend axis — one protocol, four guard realizations (DESIGN.md §9).
+
+``run_sgd``'s ``byzantine_sgd`` branch historically hard-coded the dense
+single-host :class:`~repro.core.byzantine_sgd.ByzantineGuard`, which meant
+every campaign and every Table-1 sweep exercised only the three-pass
+reference path: the fused Pallas pipeline (DESIGN.md §5) was tested at the
+``ByzantineGuard.step`` level but never driven through the scan, and the
+distributed ``exact``/``sketch`` guards of
+:mod:`repro.distributed.byzantine_dp` could not be swept against the
+Remark-2.3 adaptive adversaries at all.
+
+This module closes that gap with a tiny functional protocol.  A **guard
+backend** is a factory
+
+    ``factory(problem, cfg, **opts) -> (state0, step)``
+
+where ``step(state, grads, x, x1) -> (state', xi, n_alive, alive)`` consumes
+the flat ``(m, d)`` stacked worker gradients of the convex harness and
+returns the paper's filtered mean ξ_k.  ``state`` is an arbitrary pytree
+(scan-carried, vmap-able), so any backend drops into the solver's
+``lax.scan`` body and — because the campaign runner unrolls the backend axis
+statically next to the aggregator axis — into a one-jit campaign grid.
+
+Registered backends:
+
+==========  ================================================================
+``dense``   three-pass reference ``ByzantineGuard`` — the correctness oracle
+            (DESIGN.md §1 rule: never deleted when a faster path lands)
+``fused``   ``ByzantineGuard(use_fused=True)`` — the one-pass Pallas sweep +
+            incremental Gram + fused filtered-mean (DESIGN.md §5)
+``dp_exact``  the distributed exact-mode guard of ``byzantine_dp`` adapted
+            to the flat harness: an ``(m, d)`` gradient array is already a
+            valid one-leaf worker pytree, ``x``/``x1`` stand in for
+            params/anchor.  Preserves the incremental-Gram/resync semantics
+            (DESIGN.md §5) and, by default, the online auto-V calibration.
+``dp_sketch`` the CountSketch guard on the same adaptation — B-state and
+            cross-worker inner products in ``sketch_dim ≪ d`` dimensions,
+            thresholds widened by ``sketch_slack``.
+==========  ================================================================
+
+Per-backend knobs ride ``SolverConfig.guard_opts`` (a hashable tuple of
+``(key, value)`` pairs, same convention as ``attack_kwargs``): ``d_block`` /
+``gram_resync_every`` for ``fused``; ``auto_v`` / ``sketch_dim`` /
+``sketch_slack`` / ``incremental_gram`` / ``gram_resync_every`` /
+``low_precision_stats`` / ``v_ema`` for the ``dp_*`` backends.  One
+``guard_opts`` tuple configures a whole multi-backend sweep: each factory
+receives only the knobs it declares (a ``sketch_dim`` does not crash the
+``dense`` variant of the same campaign), while a knob *no* registered
+backend declares raises ``KeyError`` — typos fail loudly, cross-backend
+knobs drop silently by design.  ``dp_exact`` with ``auto_v=False`` must
+match ``dense`` to float tolerance — that is the oracle contract
+``tests/test_guard_backends.py`` pins end-to-end.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
+
+GuardBackendFactory = Callable  # (problem, cfg, **opts) -> (state0, step)
+
+_REGISTRY: dict[str, GuardBackendFactory] = {}
+
+
+def register_guard_backend(name: str):
+    """Decorator registering a backend factory under ``name``."""
+    def deco(factory: GuardBackendFactory) -> GuardBackendFactory:
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def guard_backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _declared_opts(factory: GuardBackendFactory) -> set[str]:
+    """Knob names a factory declares (everything past (problem, cfg))."""
+    sig = inspect.signature(factory)
+    return {
+        p.name for p in sig.parameters.values()
+        if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+        and p.name not in ("problem", "cfg")
+    }
+
+
+def make_guard_backend(name: str, problem, cfg):
+    """Instantiate backend ``name`` for (problem, cfg) — the solver's entry.
+
+    Returns ``(state0, step)`` with the step signature documented above.
+    ``cfg.guard_opts`` keys the factory does not declare are dropped (so a
+    single opts tuple serves every backend of a campaign sweep), but a key
+    unknown to *every* registered backend is a ``KeyError``.
+    """
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown guard backend {name!r}; have {guard_backend_names()}"
+        ) from None
+    opts = dict(cfg.guard_opts)
+    known = set().union(*(_declared_opts(f) for f in _REGISTRY.values()))
+    unknown = set(opts) - known
+    if unknown:
+        raise KeyError(
+            f"unknown guard_opts {sorted(unknown)}; "
+            f"known knobs: {sorted(known)}"
+        )
+    declared = _declared_opts(factory)
+    return factory(problem, cfg, **{k: v for k, v in opts.items()
+                                    if k in declared})
+
+
+# ---------------------------------------------------------------------------
+# dense / fused — the single-host ByzantineGuard pair
+# ---------------------------------------------------------------------------
+
+def _guard_config(problem, cfg) -> GuardConfig:
+    return GuardConfig(
+        m=cfg.m, T=cfg.T, V=problem.V, D=problem.D, delta=cfg.delta,
+        threshold_mode=cfg.threshold_mode, mean_over_alive=cfg.mean_over_alive,
+    )
+
+
+def _default_d_block(d: int) -> int:
+    # smallest lane-aligned strip covering d, capped at the kernel's
+    # VMEM-sized default — campaigns run at tiny d and should not pad to 2048
+    return max(128, min(2048, -(-d // 128) * 128))
+
+
+def _wrap_byzantine_guard(guard: ByzantineGuard, d: int):
+    state0 = guard.init(d)
+
+    def step(state, grads, x, x1):
+        state, xi, diag = guard.step(state, grads, x, x1)
+        return state, xi, diag["n_alive"], state.alive
+
+    return state0, step
+
+
+@register_guard_backend("dense")
+def _dense_backend(problem, cfg):
+    guard = ByzantineGuard(_guard_config(problem, cfg))
+    return _wrap_byzantine_guard(guard, problem.d)
+
+
+@register_guard_backend("fused")
+def _fused_backend(problem, cfg, d_block: int | None = None,
+                   gram_resync_every: int = 64):
+    guard = ByzantineGuard(
+        _guard_config(problem, cfg),
+        use_fused=True,
+        d_block=d_block if d_block is not None else _default_d_block(problem.d),
+        gram_resync_every=gram_resync_every,
+    )
+    return _wrap_byzantine_guard(guard, problem.d)
+
+
+# ---------------------------------------------------------------------------
+# dp_exact / dp_sketch — the distributed guard on the flat harness
+# ---------------------------------------------------------------------------
+
+def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
+                sketch_dim: int = 4096, sketch_slack: float = 1.5,
+                incremental_gram: bool = True, gram_resync_every: int = 64,
+                low_precision_stats: bool = False, v_ema: float = 0.9):
+    # imported here so the core layer has no import-time dependency on the
+    # distributed layer for users that never select a dp backend
+    from repro.distributed.byzantine_dp import (
+        DPGuardConfig,
+        guard_step,
+        init_guard_state,
+    )
+
+    dcfg = DPGuardConfig(
+        n_workers=cfg.m, T=cfg.T, V=problem.V, D=problem.D, delta=cfg.delta,
+        mode=mode, threshold_mode=cfg.threshold_mode,
+        mean_over_alive=cfg.mean_over_alive, auto_v=auto_v,
+        sketch_dim=sketch_dim, sketch_slack=sketch_slack,
+        incremental_gram=incremental_gram,
+        gram_resync_every=gram_resync_every,
+        low_precision_stats=low_precision_stats, v_ema=v_ema,
+    )
+    # flat harness: the "model" is the iterate itself, so params_like is a
+    # single (d,) leaf and the stacked (m, d) gradients are a one-leaf
+    # worker pytree — worker_vdot/worker_pair_gram consume them unchanged
+    state0 = init_guard_state(dcfg, jnp.zeros((problem.d,), jnp.float32))
+
+    def step(state, grads, x, x1):
+        state, xi, diag = guard_step(dcfg, state, grads, x, x1)
+        return state, xi, diag["n_alive"], state.alive
+
+    return state0, step
+
+
+@register_guard_backend("dp_exact")
+def _dp_exact_backend(problem, cfg, **opts):
+    return _dp_backend(problem, cfg, "exact", **opts)
+
+
+@register_guard_backend("dp_sketch")
+def _dp_sketch_backend(problem, cfg, **opts):
+    return _dp_backend(problem, cfg, "sketch", **opts)
+
+
+# the dp wrappers forward **opts to _dp_backend, whose signature is the
+# real knob declaration — advertise it for the opts filter
+_dp_exact_backend.__signature__ = _dp_sketch_backend.__signature__ = (
+    inspect.Signature(
+        [p for p in inspect.signature(_dp_backend).parameters.values()
+         if p.name != "mode"]
+    )
+)

@@ -15,6 +15,7 @@ Table-1 benchmarks sweep.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Callable, NamedTuple
 
 import jax
@@ -22,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
-from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
+from repro.core.guard_backends import make_guard_backend
 
 
 class Problem(NamedTuple):
@@ -57,15 +58,26 @@ class SolverConfig(NamedTuple):
     threshold_mode: str = "anytime"
     krum_f: int | None = None   # override Krum's f (defaults to ⌈αm⌉)
     trim_fraction: float | None = None  # defaults to α
+    guard_backend: str = "dense"  # byzantine_sgd realization (DESIGN.md §9):
+    #                               'dense' | 'fused' | 'dp_exact' | 'dp_sketch'
+    guard_opts: tuple = ()      # backend knobs as (key, value) pairs (hashable)
 
     @property
     def n_byzantine(self) -> int:
         return int(self.alpha * self.m)
 
+    @property
+    def krum_f_default(self) -> int:
+        """⌈αm⌉ — Krum's f must *cover* the Byzantine count, so it rounds up
+        (n_byzantine floors: the adversary corrupts whole workers).  The tiny
+        epsilon guards against f32 grid alphas landing just above an integer.
+        """
+        return max(math.ceil(self.alpha * self.m - 1e-9), 1)
+
 
 class SolverResult(NamedTuple):
     x_final: jax.Array          # last iterate
-    x_avg: jax.Array            # (1/T) Σ x_{k+1}  (Theorem 3.8 average)
+    x_avg: jax.Array            # (1/T) Σ_{k≤T} x_k  (Theorem 3.8 average)
     gaps: jax.Array             # (T,) f(x_k) − f(x*)
     n_alive: jax.Array          # (T,) |good_k| (m for stateless aggregators)
     byz_mask: jax.Array         # (m,) workers that were *ever* Byzantine
@@ -83,25 +95,20 @@ def _byz_rank(key: jax.Array, m: int) -> jax.Array:
 
 
 def _make_aggregator(problem: Problem, cfg: SolverConfig):
-    """Returns (init_state, step(state, grads, x, x1) -> (state, xi, n_alive))."""
+    """Returns (init_state, step(state, grads, x, x1) -> (state, xi, n_alive, alive)).
+
+    ``byzantine_sgd`` dispatches through the guard-backend registry
+    (:mod:`repro.core.guard_backends`, DESIGN.md §9): ``cfg.guard_backend``
+    selects dense / fused / dp_exact / dp_sketch, all behind the same step
+    signature, so campaigns sweep guard realizations like any other axis.
+    """
     name = cfg.aggregator
     if name == "byzantine_sgd":
-        gcfg = GuardConfig(
-            m=cfg.m, T=cfg.T, V=problem.V, D=problem.D, delta=cfg.delta,
-            threshold_mode=cfg.threshold_mode, mean_over_alive=cfg.mean_over_alive,
-        )
-        guard = ByzantineGuard(gcfg)
-        state0 = guard.init(problem.d)
-
-        def step(state, grads, x, x1):
-            state, xi, diag = guard.step(state, grads, x, x1)
-            return state, xi, diag["n_alive"], state.alive
-
-        return state0, step
+        return make_guard_backend(cfg.guard_backend, problem, cfg)
 
     kwargs = {}
     if name in ("krum", "multi_krum"):
-        kwargs["n_byzantine"] = cfg.krum_f if cfg.krum_f is not None else max(cfg.n_byzantine, 1)
+        kwargs["n_byzantine"] = cfg.krum_f if cfg.krum_f is not None else cfg.krum_f_default
     if name == "trimmed_mean":
         tf = cfg.trim_fraction if cfg.trim_fraction is not None else max(cfg.alpha, 1.0 / cfg.m)
         kwargs["trim_fraction"] = tf
@@ -185,8 +192,11 @@ def run_sgd(
         ever_byz = ever_byz | mask_k
         any_good_filtered = any_good_filtered | jnp.any((~alive) & (~ever_byz))
         fb = (xi, alive, jnp.asarray(n_alive, jnp.int32))
+        # Theorem-3.8 average is over the iterates the gradients were *taken
+        # at*: x̄ = (1/T) Σ_{k≤T} x_k — accumulate x (= x_k), not x_new
+        # (= x_{k+1}), or the sum runs x_2…x_{T+1} and excludes x_1
         return (
-            (x_new, agg_state, adv_state, x_sum + x_new, ever_byz,
+            (x_new, agg_state, adv_state, x_sum + x, ever_byz,
              any_good_filtered, fb, rng),
             (gap, n_alive),
         )

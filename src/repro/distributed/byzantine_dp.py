@@ -30,10 +30,21 @@ Two guard modes (DESIGN.md §3):
   slack factor to absorb sketch noise.
 
 V (the Assumption-2.2 deviation bound) is rarely known for neural nets;
-``auto_v`` calibrates it online as an EMA of the median pairwise distance
-between fresh worker gradients (good workers concentrate, so the median
-pairwise distance ≈ 2·(typical deviation); Byzantine rows cannot inflate a
-median while α < 1/2).
+``auto_v`` calibrates it online as an EMA of the **25th percentile** of
+pairwise distances between fresh worker gradients (DESIGN.md §3): good–good
+pairs are a (1 − α)² ≥ 25% fraction of all pairs whenever α < 1/2, so the
+25th percentile is always witnessed by an honest pair across the paper's
+*entire* α < 1/2 regime.  The plain median is not: attacker-involved pairs
+outnumber honest ones once 1 − (1 − α)² > 1/2, i.e. α > 1 − 1/√2 ≈ 0.29 —
+safe at α = 0.25, inflatable well before the breakdown point.  Good
+workers concentrate, so the chosen quantile ≈ 2·(typical deviation) and
+halving it estimates V.
+
+Both guard modes also run on the *flat* (m, d) convex harness as guard
+backends ``dp_exact`` / ``dp_sketch`` (:mod:`repro.core.guard_backends`,
+DESIGN.md §9): a stacked gradient array is a one-leaf worker pytree and
+the iterate/anchor stand in for params, so the same ``guard_step`` is
+sweepable under the scenario campaigns with no adaptation layer.
 """
 from __future__ import annotations
 
@@ -246,10 +257,13 @@ def _calibrate_v(cfg: DPGuardConfig, gram_g: jax.Array, v_prev: jax.Array) -> ja
     d2 = pairwise_sq_dists_from_gram(gram_g)
     W = d2.shape[0]
     off = d2[jnp.triu_indices(W, k=1)]
-    # good-good pairs are a (1-α)² ≥ 25% fraction of all pairs, so the 25th
-    # percentile of pairwise distances is a Byzantine-proof estimate of the
-    # honest deviation scale (the median can be inflated by attacker pairs:
-    # at α=0.25, 13 of 28 pairs involve an attacker)
+    # Invariant behind the 0.25 quantile (NOT the median): for α < 1/2,
+    # good-good pairs are a (1-α)² > (1/2)² = 25% fraction of all pairs, so
+    # the 25th percentile is always witnessed by an honest pair — a
+    # Byzantine-proof estimate of the honest deviation scale over the whole
+    # α < 1/2 regime.  The median only survives attacker-pair fractions
+    # below 1/2, which fails once α > 1−1/√2 ≈ 0.29 (e.g. at α=0.375 with
+    # m=8, 18 of 28 pairs involve an attacker and the median is theirs).
     v_now = jnp.sqrt(jnp.quantile(off, 0.25)) * 0.5
     v_new = jnp.where(v_prev > 0, cfg.v_ema * v_prev + (1 - cfg.v_ema) * v_now, v_now)
     return jnp.maximum(v_new, 1e-12)

@@ -29,10 +29,26 @@ nothing re-reads B):
     ─────────────────────────── step total        4·m·d·e   (1.75× less)
 
 ξ cannot join the sweep: good_k depends on the Grams the sweep produces.
+
+The distributed guard modes (DESIGN.md §3, swept as guard *backends* on the
+flat harness — DESIGN.md §9) follow the same pass-count accounting:
+
+    dp_exact (incremental Gram): A (read g) + B += g (read B, read g,
+    write B) + g gᵀ (read g) + cross B gᵀ (read B, read g)   7·m·d·e
+    dp_sketch: A (read g) + mean-center (read g ×2) + fused
+    sketch/norms fold (read g); all B-side work is O(m·k ≪ m·d)   4·m·d·e
+
+``BACKEND_COSTS`` maps every registered guard-backend name to its model,
+and :func:`steady_state_us` converts bytes to the bandwidth-bound
+steady-state wall-clock on the target hardware — the per-backend number
+``benchmarks/bench_scenarios.py`` records at the m = 32, d = 2²⁰ headline
+shape.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
+
+from repro.roofline.hw import TPU_V5E, HwSpec
 
 
 class GuardStepCost(NamedTuple):
@@ -65,3 +81,44 @@ def fused_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
         xi_bytes=1 * mde,
         flops=2 * m * m * d * 2 + 2 * m * d,   # same math, fewer bytes
     )
+
+
+def dp_exact_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
+    """Distributed exact guard with incremental Gram: the B Bᵀ re-contraction
+    is gone, but the cross term B gᵀ re-reads both operands — 7 m·d passes.
+    (Its win is *collective* volume, not local HBM traffic: B shards never
+    travel; see byzantine_dp.)"""
+    mde = m * d * elem_bytes
+    return GuardStepCost(
+        stats_bytes=7 * mde,
+        xi_bytes=1 * mde,
+        flops=2 * m * m * d * 2 + 2 * m * d,
+    )
+
+
+def dp_sketch_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
+    """CountSketch guard: the only O(m·d) passes are the A dot, the two-pass
+    mean-centering, and the fused sketch/norm fold; every Gram contraction
+    runs in sketch space (O(m·k), dropped here as k ≪ d)."""
+    mde = m * d * elem_bytes
+    return GuardStepCost(
+        stats_bytes=4 * mde,
+        xi_bytes=1 * mde,
+        flops=2 * m * d * 3,   # dots + fold; Grams are O(m²k) — negligible
+    )
+
+
+# guard-backend name (repro.core.guard_backends) → per-step cost model
+BACKEND_COSTS = {
+    "dense": dense_guard_cost,
+    "fused": fused_guard_cost,
+    "dp_exact": dp_exact_guard_cost,
+    "dp_sketch": dp_sketch_guard_cost,
+}
+
+
+def steady_state_us(cost: GuardStepCost, hw: HwSpec = TPU_V5E) -> float:
+    """Bandwidth-bound steady-state wall-clock of one guard step (µs): the
+    guard's arithmetic intensity sits far under the ridge point on every
+    realistic shape, so bytes / HBM bandwidth *is* the wall-clock model."""
+    return cost.step_bytes / hw.hbm_bw * 1e6

@@ -23,9 +23,11 @@ from repro.scenarios.adversary import (
     attack_id,
 )
 from repro.scenarios.campaign import (
+    GUARD_AGGREGATOR,
     CampaignResult,
     RunStats,
     build_campaign_fn,
+    expand_variants,
     run_campaign,
     run_campaign_looped,
 )
@@ -54,6 +56,7 @@ __all__ = [
     "AdvState",
     "CampaignGrid",
     "CampaignResult",
+    "GUARD_AGGREGATOR",
     "NEVER",
     "RunStats",
     "Scenario",
@@ -62,6 +65,7 @@ __all__ = [
     "build_campaign_fn",
     "degraded_pairs",
     "expand_grid",
+    "expand_variants",
     "make_scenario",
     "run_campaign",
     "run_campaign_looped",

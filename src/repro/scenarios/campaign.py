@@ -13,6 +13,14 @@ Per-run summaries (gap of the averaged iterate, detection latency, …) are
 computed in-graph so the host transfer is O(N), not O(N·T); pass
 ``return_gaps=True`` when the full (N, T) gap traces are needed (e.g. the
 multi-seed iterations-to-ε quantiles of ``bench_table1``).
+
+**Guard-backend axis** (DESIGN.md §9).  Next to the aggregator axis the
+campaign sweeps guard *realizations*: pass ``backends=("dense", "fused",
+"dp_sketch")`` and every ``byzantine_sgd`` entry expands into one variant
+per backend, keyed ``"byzantine_sgd@<backend>"`` in the stats dict — still
+unrolled inside the same single trace, so one jit produces the
+dense-vs-fused-vs-sketch leaderboard.  Explicit ``"byzantine_sgd@fused"``
+strings in ``aggregators`` are honored as-is.
 """
 from __future__ import annotations
 
@@ -68,20 +76,55 @@ def _summarize(problem: Problem, cfg: SolverConfig, res, return_gaps: bool):
     )
 
 
+GUARD_AGGREGATOR = "byzantine_sgd"
+
+
+def expand_variants(
+    base_cfg: SolverConfig,
+    aggregators: Sequence[str],
+    backends: Sequence[str] | None = None,
+) -> dict[str, SolverConfig]:
+    """Variant name → SolverConfig for the (aggregator × guard-backend) axes.
+
+    ``"byzantine_sgd"`` expands to one ``"byzantine_sgd@<backend>"`` variant
+    per entry of ``backends`` (when given); ``"agg@backend"`` spellings pass
+    through verbatim; stateless aggregators ignore the backend axis.
+    """
+    cfgs: dict[str, SolverConfig] = {}
+    for name in aggregators:
+        agg, _, be = name.partition("@")
+        if be:
+            if agg != GUARD_AGGREGATOR:
+                raise ValueError(
+                    f"{name!r}: only {GUARD_AGGREGATOR!r} has guard backends"
+                )
+            cfgs[name] = base_cfg._replace(aggregator=agg, guard_backend=be)
+        elif agg == GUARD_AGGREGATOR and backends:
+            for b in backends:
+                cfgs[f"{agg}@{b}"] = base_cfg._replace(
+                    aggregator=agg, guard_backend=b
+                )
+        else:
+            cfgs[name] = base_cfg._replace(aggregator=agg)
+    return cfgs
+
+
 def build_campaign_fn(
     problem: Problem,
     base_cfg: SolverConfig,
     aggregators: Sequence[str],
     return_gaps: bool = False,
+    backends: Sequence[str] | None = None,
 ):
-    """The jittable (scenarios, alpha, seeds) → {agg: RunStats} function.
+    """The jittable (scenarios, alpha, seeds) → {variant: RunStats} function.
 
     ``base_cfg`` supplies everything static: m, T, η, thresholds, and the
     *nominal* α that sizes Krum's f and the trimmed-mean fraction (baselines
     are configured for the nominal fraction; the realized per-run fraction
-    is a grid axis the adversary owns).
+    is a grid axis the adversary owns).  ``backends`` expands the guard
+    aggregator across guard realizations (see :func:`expand_variants`).
     """
-    cfgs = {name: base_cfg._replace(aggregator=name) for name in aggregators}
+    cfgs = expand_variants(base_cfg, aggregators, backends)
 
     def campaign(scenarios, alpha, seeds):
         out = {}
@@ -104,14 +147,17 @@ def run_campaign(
     grid: CampaignGrid,
     aggregators: Sequence[str],
     return_gaps: bool = False,
+    backends: Sequence[str] | None = None,
 ) -> CampaignResult:
-    """Execute the full grid for every aggregator under one jit.
+    """Execute the full grid for every (aggregator × backend) variant under
+    one jit.
 
     Trace + compile are paid once for the whole campaign and measured
     separately via AOT lowering (``compile_s``); ``wall_s`` is the pure
-    execution of all ``len(aggregators) × grid.n_runs`` runs.
+    execution of all ``n_variants × grid.n_runs`` runs.
     """
-    fn = jax.jit(build_campaign_fn(problem, base_cfg, aggregators, return_gaps))
+    fn = jax.jit(build_campaign_fn(problem, base_cfg, aggregators,
+                                   return_gaps, backends))
     t0 = time.perf_counter()
     compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
     t1 = time.perf_counter()
@@ -131,17 +177,18 @@ def run_campaign_looped(
     base_cfg: SolverConfig,
     grid: CampaignGrid,
     aggregators: Sequence[str],
+    backends: Sequence[str] | None = None,
 ) -> tuple[dict[str, list[float]], float]:
     """The pre-campaign baseline: one eager ``run_sgd`` per grid row per
-    aggregator, re-tracing the scan every call — exactly how the sweeps in
-    ``examples/`` and ``benchmarks/`` used to run.  Returns per-aggregator
+    variant, re-tracing the scan every call — exactly how the sweeps in
+    ``examples/`` and ``benchmarks/`` used to run.  Returns per-variant
     gap lists and total wall-clock, for the batched-vs-looped comparison
     recorded in ``BENCH_scenarios.json``."""
     t0 = time.perf_counter()
-    gaps: dict[str, list[float]] = {name: [] for name in aggregators}
+    cfgs = expand_variants(base_cfg, aggregators, backends)
+    gaps: dict[str, list[float]] = {name: [] for name in cfgs}
     f_star = problem.f(problem.x_star)
-    for name in aggregators:
-        cfg = base_cfg._replace(aggregator=name)
+    for name, cfg in cfgs.items():
         for i in range(grid.n_runs):
             scn = jax.tree.map(lambda x, i=i: x[i], grid.scenarios)
             adv = ScenarioAdversary(scenario=scn, alpha=grid.alpha[i])

@@ -110,18 +110,24 @@ def summarize_campaign(
             table.append(row)
             med[(scn, alpha, agg)] = row["gap_med"]
 
+    # every guard variant ("byzantine_sgd" or "byzantine_sgd@<backend>")
+    # gets its own Theorem-3.8 bound check — the bound is realization-
+    # agnostic, so a backend that violates it while dense holds is a bug
+    guard_keys = [a for a in aggregators
+                  if a == guard_name or a.startswith(guard_name + "@")]
     guard_bound = []
-    if guard_name in result.stats:
-        st = result.stats[guard_name]
+    for gk in guard_keys:
+        st = result.stats[gk]
         for (scn, alpha), idx in sorted(groups.items()):
             alpha_ever = float(
                 np.asarray(st.n_byz_ever)[idx].max() / base_cfg.m
             )
             bound = theorem38_bound(problem, base_cfg, alpha_ever)
-            gap_med = med[(scn, alpha, guard_name)]
+            gap_med = med[(scn, alpha, gk)]
             guard_bound.append({
                 "scenario": scn,
                 "alpha": alpha,
+                "aggregator": gk,
                 "alpha_ever": alpha_ever,
                 "bound": bound,
                 "gap_med": gap_med,

@@ -1,0 +1,215 @@
+"""Guard-backend axis (DESIGN.md §9): end-to-end parity through the solver
+scan and the campaign runner.
+
+PR 1 tested the fused pipeline only at the ``ByzantineGuard.step`` level;
+these tests drive every registered backend through ``run_sgd`` (multi-step
+attack runs, the scan carrying each backend's own state pytree) and through
+a vmapped one-jit campaign, pinning the oracle contracts:
+
+* ``fused`` ≡ ``dense`` to float tolerance over a whole attacked run;
+* ``dp_exact`` (``auto_v=False``) ≡ ``dense`` on the flat harness — the
+  distributed guard is the same filter, produced from Gram contractions;
+* ``dp_sketch`` makes the same filter decisions on clearly-separated
+  attacks and converges under them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guard_backends import guard_backend_names, make_guard_backend
+from repro.core.solver import SolverConfig, run_sgd
+from repro.data.problems import make_quadratic_problem
+from repro.scenarios import (
+    expand_grid,
+    expand_variants,
+    run_campaign,
+    scenario_churn,
+    scenario_static,
+    summarize_campaign,
+)
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=1)
+
+
+def _cfg(**kw):
+    base = dict(m=16, T=60, eta=0.05, alpha=0.25,
+                aggregator="byzantine_sgd", attack="sign_flip")
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+class TestRegistry:
+    def test_all_four_backends_registered(self):
+        assert set(guard_backend_names()) >= {
+            "dense", "fused", "dp_exact", "dp_sketch"
+        }
+
+    def test_unknown_backend_raises(self, quad):
+        with pytest.raises(KeyError, match="unknown guard backend"):
+            make_guard_backend("nope", quad, _cfg(guard_backend="nope"))
+
+    def test_shared_opts_filtered_per_backend(self, quad):
+        """One guard_opts tuple serves a multi-backend sweep: knobs a
+        backend doesn't declare are dropped (sketch_dim must not crash
+        dense/fused), while a knob unknown to every backend raises."""
+        cfg = _cfg(guard_opts=(("sketch_dim", 256), ("auto_v", False),
+                               ("gram_resync_every", 2)))
+        for name in ["dense", "fused", "dp_exact", "dp_sketch"]:
+            state0, step = make_guard_backend(name, quad, cfg)
+            assert step is not None, name
+        with pytest.raises(KeyError, match="unknown guard_opts"):
+            make_guard_backend(
+                "dense", quad, _cfg(guard_opts=(("sketchdim", 1),))
+            )
+
+    def test_backend_step_contract(self, quad):
+        """Every backend honors (state, grads, x, x1) -> (state, ξ, n, alive)."""
+        cfg = _cfg()
+        grads = 0.1 + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(0), (cfg.m, quad.d))
+        x1 = jnp.zeros((quad.d,))
+        for name in guard_backend_names():
+            state0, step = make_guard_backend(name, quad, cfg)
+            state, xi, n_alive, alive = step(state0, grads, x1, x1)
+            assert xi.shape == (quad.d,), name
+            assert alive.shape == (cfg.m,) and alive.dtype == bool, name
+            assert int(n_alive) == cfg.m, name  # honest step filters nobody
+
+
+class TestEndToEndParity:
+    @pytest.mark.parametrize("attack", ["sign_flip", "alie"])
+    def test_fused_matches_dense_through_scan(self, quad, attack):
+        """The fused Pallas pipeline must reproduce the dense trajectory
+        through a full multi-step attacked run — scan-carried incremental
+        Gram, resync cond, and fused filtered-mean included."""
+        key = jax.random.PRNGKey(5)
+        res_d = run_sgd(quad, _cfg(attack=attack, guard_backend="dense"), key)
+        res_f = run_sgd(quad, _cfg(attack=attack, guard_backend="fused"), key)
+        np.testing.assert_array_equal(np.asarray(res_d.byz_mask),
+                                      np.asarray(res_f.byz_mask))
+        np.testing.assert_array_equal(np.asarray(res_d.final_alive),
+                                      np.asarray(res_f.final_alive))
+        np.testing.assert_allclose(np.asarray(res_f.gaps),
+                                   np.asarray(res_d.gaps),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res_f.x_avg),
+                                   np.asarray(res_d.x_avg),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_dp_exact_matches_dense_oracle(self, quad):
+        """The distributed exact guard on the flat harness IS the dense
+        filter (auto_v off, V known): identical filter decisions, matching
+        trajectories."""
+        key = jax.random.PRNGKey(7)
+        res_d = run_sgd(quad, _cfg(guard_backend="dense"), key)
+        res_e = run_sgd(
+            quad,
+            _cfg(guard_backend="dp_exact", guard_opts=(("auto_v", False),)),
+            key,
+        )
+        np.testing.assert_array_equal(np.asarray(res_d.final_alive),
+                                      np.asarray(res_e.final_alive))
+        np.testing.assert_allclose(np.asarray(res_e.gaps),
+                                   np.asarray(res_d.gaps),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_dp_exact_recompute_gram_also_matches(self, quad):
+        """incremental_gram=False is the drift oracle — same answer."""
+        key = jax.random.PRNGKey(7)
+        res_i = run_sgd(
+            quad,
+            _cfg(guard_backend="dp_exact", guard_opts=(("auto_v", False),)),
+            key,
+        )
+        res_r = run_sgd(
+            quad,
+            _cfg(guard_backend="dp_exact",
+                 guard_opts=(("auto_v", False), ("incremental_gram", False))),
+            key,
+        )
+        np.testing.assert_allclose(np.asarray(res_i.gaps),
+                                   np.asarray(res_r.gaps),
+                                   rtol=1e-5, atol=1e-7)
+
+    @pytest.mark.parametrize("backend,opts", [
+        ("dp_sketch", ()),
+        ("dp_sketch", (("auto_v", False),)),
+        # k=8 < d=16: real CountSketch compression, not the lossless
+        # k > d degenerate case the default sketch_dim gives at tiny d
+        ("dp_sketch", (("sketch_dim", 8),)),
+    ])
+    def test_dp_sketch_filters_and_converges(self, quad, backend, opts):
+        """The sketch guard (auto-V on or off, with and without genuine
+        compression) must drop the sign-flippers and converge on the flat
+        harness."""
+        cfg = _cfg(T=200, guard_backend=backend, guard_opts=opts)
+        res = run_sgd(quad, cfg, jax.random.PRNGKey(2))
+        n_byz = int(np.asarray(res.byz_mask).sum())
+        assert int(res.n_alive[-1]) == cfg.m - n_byz
+        assert not bool(res.ever_filtered_good)
+        gap = float(quad.f(res.x_avg) - quad.f(quad.x_star))
+        assert gap < 0.1, gap
+
+
+class TestCampaignBackendAxis:
+    def test_backend_axis_expands_guard_only(self):
+        cfgs = expand_variants(_cfg(), ["mean", "byzantine_sgd"],
+                               backends=["dense", "fused"])
+        assert set(cfgs) == {"mean", "byzantine_sgd@dense",
+                             "byzantine_sgd@fused"}
+        assert cfgs["byzantine_sgd@fused"].guard_backend == "fused"
+        assert cfgs["mean"].aggregator == "mean"
+
+    def test_explicit_at_spelling_and_bad_agg(self):
+        cfgs = expand_variants(_cfg(), ["byzantine_sgd@dp_sketch"])
+        assert cfgs["byzantine_sgd@dp_sketch"].guard_backend == "dp_sketch"
+        with pytest.raises(ValueError, match="guard backends"):
+            expand_variants(_cfg(), ["krum@fused"])
+
+    def test_one_campaign_sweeps_three_backends(self, quad):
+        """One run_campaign call, three guard realizations + a baseline,
+        under a dynamic (churn) and a static scenario — the stats keys carry
+        the backend, dense/fused agree run-for-run, and the report grows a
+        bound-check row per backend variant."""
+        cfg = _cfg(T=50)
+        grid = expand_grid(
+            [("sf", scenario_static("sign_flip")),
+             ("churn", scenario_churn("sign_flip", period=25, stride=4))],
+            alphas=[0.25], seeds=[0],
+        )
+        result = run_campaign(quad, cfg, grid, ["mean", "byzantine_sgd"],
+                              backends=["dense", "fused", "dp_sketch"])
+        assert set(result.stats) == {
+            "mean", "byzantine_sgd@dense", "byzantine_sgd@fused",
+            "byzantine_sgd@dp_sketch",
+        }
+        np.testing.assert_allclose(
+            np.asarray(result.stats["byzantine_sgd@dense"].gap_avg),
+            np.asarray(result.stats["byzantine_sgd@fused"].gap_avg),
+            rtol=1e-4, atol=1e-7,
+        )
+        rec = summarize_campaign(result, quad, cfg)
+        bound_aggs = {r["aggregator"] for r in rec["guard_bound"]}
+        assert bound_aggs == {"byzantine_sgd@dense", "byzantine_sgd@fused",
+                              "byzantine_sgd@dp_sketch"}
+
+    def test_campaign_matches_eager_per_backend(self, quad):
+        """Vmapped campaign rows reproduce eager run_sgd for a non-dense
+        backend (the same contract TestCampaign pins for dense)."""
+        from repro.scenarios import ScenarioAdversary
+
+        cfg = _cfg(T=40, guard_backend="dp_sketch")
+        scn = scenario_static("sign_flip")
+        grid = expand_grid([("sf", scn)], alphas=[0.25], seeds=[0, 1])
+        result = run_campaign(quad, cfg, grid, ["byzantine_sgd@dp_sketch"])
+        for i, e in enumerate(result.entries):
+            adv = ScenarioAdversary(scenario=scn, alpha=jnp.float32(e["alpha"]))
+            res = run_sgd(quad, cfg, jax.random.PRNGKey(e["seed"]),
+                          adversary=adv)
+            gap = float(quad.f(res.x_avg) - quad.f(quad.x_star))
+            got = float(result.stats["byzantine_sgd@dp_sketch"].gap_avg[i])
+            assert got == pytest.approx(gap, rel=1e-5), e

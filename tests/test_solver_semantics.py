@@ -1,0 +1,84 @@
+"""Filter-semantics regression pins: Krum's ⌈αm⌉ default and the
+Theorem-3.8 iterate average.
+
+Two long-standing off-by-ones, each pinned at an input where the right and
+wrong conventions actually differ:
+
+* Krum's default f floored (``int(α·m)``) while its contract says ⌈αm⌉ —
+  at m = 10, α = 0.25 the floor under-counts the Byzantine set a robust f
+  must cover;
+* ``x_avg`` accumulated x₂…x_{T+1}, excluding x₁ — on a 2-step run the two
+  conventions disagree by (x₁ − x₃)/2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.solver import SolverConfig, run_sgd
+from repro.data.problems import make_quadratic_problem
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=1)
+
+
+class TestKrumDefaultF:
+    def test_ceil_at_non_integer_alpha_m(self):
+        """m=10, α=0.25: α·m = 2.5 → the Krum default must be ⌈2.5⌉ = 3,
+        covering the realized Byzantine count, not ⌊2.5⌋ = 2."""
+        cfg = SolverConfig(m=10, T=10, eta=0.1, alpha=0.25, aggregator="krum")
+        assert cfg.krum_f_default == 3
+        assert cfg.n_byzantine == 2  # the mask still floors (whole workers)
+
+    @pytest.mark.parametrize("m,alpha,want", [
+        (16, 0.25, 4),   # integer α·m: ceil == floor
+        (16, 0.0, 1),    # floored at 1 — Krum needs f ≥ 1
+        (8, 0.3, 3),     # 2.4 → 3
+        (20, 0.45, 9),   # 9.0 exactly (f32-safe: no spurious round-up)
+    ])
+    def test_ceil_values(self, m, alpha, want):
+        cfg = SolverConfig(m=m, T=10, eta=0.1, alpha=alpha, aggregator="krum")
+        assert cfg.krum_f_default == want
+
+    def test_krum_f_override_still_wins(self, quad):
+        """cfg.krum_f bypasses the default — both runs must execute."""
+        key = jax.random.PRNGKey(0)
+        cfg = SolverConfig(m=10, T=20, eta=0.05, alpha=0.25,
+                           aggregator="krum", attack="sign_flip")
+        res_default = run_sgd(quad, cfg, key)
+        res_f2 = run_sgd(quad, cfg._replace(krum_f=2), key)
+        assert np.isfinite(np.asarray(res_default.gaps)).all()
+        assert np.isfinite(np.asarray(res_f2.gaps)).all()
+        # f changes the neighbour count, so the selections genuinely differ
+        assert not np.allclose(np.asarray(res_default.gaps),
+                               np.asarray(res_f2.gaps))
+
+
+class TestIterateAverage:
+    def _cfg(self, T):
+        return SolverConfig(m=8, T=T, eta=0.2, alpha=0.0,
+                            aggregator="mean", attack="none")
+
+    def test_x_avg_is_mean_of_first_T_iterates(self, quad):
+        """Two-step run: x̄ = (x₁ + x₂)/2 per the paper's (1/T)Σ_{k≤T} x_k.
+        x₂ is observable as the T=1 run's final iterate (identical RNG
+        stream for the shared prefix)."""
+        key = jax.random.PRNGKey(3)
+        x2 = run_sgd(quad, self._cfg(1), key).x_final
+        res = run_sgd(quad, self._cfg(2), key)
+        want = (quad.x1 + x2) / 2.0
+        np.testing.assert_allclose(np.asarray(res.x_avg), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+        # the old convention — (x₂ + x₃)/2 — must NOT match
+        wrong = (x2 + res.x_final) / 2.0
+        assert not np.allclose(np.asarray(res.x_avg), np.asarray(wrong),
+                               rtol=1e-6)
+
+    def test_single_step_average_is_x1(self, quad):
+        """T=1: the average of {x₁} is x₁ — the gradient at x₁ has not yet
+        entered any averaged iterate."""
+        res = run_sgd(quad, self._cfg(1), jax.random.PRNGKey(0))
+        np.testing.assert_allclose(np.asarray(res.x_avg),
+                                   np.asarray(quad.x1), rtol=1e-6)
