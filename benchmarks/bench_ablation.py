@@ -18,8 +18,7 @@ from benchmarks.common import emit
 from repro.core.solver import SolverConfig, run_sgd
 from repro.data.problems import make_quadratic_problem
 from repro.data.synthetic import SyntheticTokens, make_worker_batch
-from repro.distributed.byzantine_dp import DPGuardConfig
-from repro.distributed.trainer import build_train_step, init_train_state
+from repro.distributed.trainer import build_train_step, init_train_state, rank_from_mask
 from repro.models import build_model
 from repro.optim import adamw
 from repro.configs import get_config
@@ -31,20 +30,22 @@ def sketch_dim_ablation() -> None:
     W, steps = 8, 25
     stream = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32)
     opt = adamw(3e-3, grad_clip=1.0)
-    byz = jnp.arange(W) < 2
-    for mode, k in [("exact", 0), ("sketch", 256), ("sketch", 1024), ("sketch", 4096)]:
-        dp = DPGuardConfig(n_workers=W, T=steps, mode=mode,
-                           sketch_dim=max(k, 1), auto_v=True)
-        ts = jax.jit(build_train_step(model, opt, dp, aggregator="byzantine_sgd",
-                                      attack="sign_flip"))
-        state = init_train_state(model, opt, dp, jax.random.PRNGKey(0))
+    rank = rank_from_mask(jnp.arange(W) < 2)
+    for backend, k in [("dp_exact", 0), ("dp_sketch", 256),
+                       ("dp_sketch", 1024), ("dp_sketch", 4096)]:
+        scfg = SolverConfig(m=W, T=steps, eta=3e-3, alpha=0.25,
+                            aggregator="byzantine_sgd", attack="sign_flip",
+                            mean_over_alive=True, guard_backend=backend,
+                            guard_opts=(("sketch_dim", max(k, 1)),))
+        ts = jax.jit(build_train_step(model, opt, scfg))
+        state = init_train_state(model, opt, scfg, jax.random.PRNGKey(0))
         detect = -1
         for i in range(steps):
             batch = make_worker_batch(stream, W, 2, jnp.asarray(i))
-            state, m = ts(state, batch, byz, jax.random.PRNGKey(i))
+            state, m = ts(state, batch, rank, jax.random.PRNGKey(i))
             if detect < 0 and int(m["byz_alive"]) == 0:
                 detect = i + 1
-        emit(f"ablation/sketch_dim/{mode}{k}", float(detect),
+        emit(f"ablation/sketch_dim/{backend}{k}", float(detect),
              f"detect_step={detect},loss={float(m['loss_good_workers']):.4f},"
              f"good_filtered={int(m['good_filtered'])}")
 

@@ -5,6 +5,7 @@
   filtering    — Claim 3.5 detection latency / false-positive behaviour
   lower_bound  — Theorems 5.4/5.5 distinguishing-success curves
   scenarios    — dynamic-adversary campaigns (one-jit grid) → BENCH_scenarios.json
+  train        — scan-vs-loop driver wall-clock + LM train campaigns → BENCH_train.json
   roofline     — deliverable (g) table from the dry-run records
 
 Prints ``name,us_per_call,derived`` CSV.  Select suites with
@@ -14,7 +15,7 @@ import sys
 
 
 SUITES = ["table1", "aggregators", "filtering", "lower_bound", "ablation",
-          "scenarios", "roofline"]
+          "scenarios", "train", "roofline"]
 
 
 def main() -> None:

@@ -23,6 +23,14 @@ def main():
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=0.25)
     ap.add_argument("--attack", default="sign_flip")
+    ap.add_argument("--guard-backend", default="dp_exact",
+                    choices=["dp_exact", "dp_sketch", "dense", "fused"])
+    ap.add_argument("--guard-v", type=float, default=0.0,
+                    help="explicit Assumption-2.2 V; required (> 0) for "
+                         "dense/fused, which have no online auto-V")
+    ap.add_argument("--scenario", default=None,
+                    choices=["static", "lie_low", "churn", "adaptive",
+                             "coalition"])
     ap.add_argument("--d-model", type=int, default=512)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/byz_lm_ckpt")
@@ -33,7 +41,8 @@ def main():
         "internlm2-1.8b", reduced=True, d_model=args.d_model,
         workers=args.workers, per_worker_batch=2, seq_len=args.seq_len,
         steps=args.steps, alpha=args.alpha, attack=args.attack,
-        aggregator="byzantine_sgd", guard_mode="exact", lr=3e-3,
+        aggregator="byzantine_sgd", guard_backend=args.guard_backend,
+        guard_v=args.guard_v, scenario=args.scenario, lr=3e-3,
         ckpt_dir=args.ckpt_dir, log_every=10,
     )
     first, last = hist[0], hist[-1]

@@ -1,0 +1,73 @@
+"""Render ``BENCH_train.json`` (produced by ``python -m benchmarks.bench_train``)
+as markdown tables: the scan-vs-loop driver wall-clock and the LM train
+campaign leaderboard (DESIGN.md §10).
+
+    PYTHONPATH=src python scripts/render_train.py [BENCH_train.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(rec: dict) -> str:
+    lines = []
+    dw = rec.get("driver_wallclock")
+    if dw:
+        lines.append("## Train driver — chunked scan vs per-step loop\n")
+        lines.append(
+            f"{dw['arch']} reduced (d_model={dw['d_model']}), "
+            f"{dw['workers']} workers, guard `{dw['guard_backend']}`, "
+            f"measured on `{dw['backend']}` (steady state, first call "
+            "excluded).\n"
+        )
+        lines.append("| driver | steady-state µs/step | first call s |")
+        lines.append("|---|---|---|")
+        lines.append(f"| loop (per-step dispatch + per-metric transfer) "
+                     f"| {dw['loop_steady_state_us_per_step']:.0f} "
+                     f"| {dw['loop_first_call_s']:.1f} |")
+        lines.append(f"| scan (chunk={dw['chunk']}, on-device data) "
+                     f"| {dw['scan_steady_state_us_per_step']:.0f} "
+                     f"| {dw['scan_first_call_s']:.1f} |")
+        lines.append(
+            f"\nscan speedup: {dw['scan_speedup']:.2f}x "
+            f"(scan ≤ loop: {'✓' if dw['scan_le_loop'] else '✗'})"
+        )
+
+    camp = rec.get("campaign")
+    if camp:
+        cfg = camp["config"]
+        lines.append("\n## LM train campaign — one jit over the "
+                     "(scenario × α × seed) grid\n")
+        lines.append(
+            f"{camp['arch']} reduced, m={cfg['m']}, {cfg['steps']} steps, "
+            f"{camp['n_runs_per_variant']} runs per variant; "
+            f"wall {camp['wall_clock']['batched_s']:.2f}s "
+            f"(+{camp['wall_clock']['compile_s']:.1f}s compile) for "
+            f"{camp['wall_clock']['runs_total']} runs.\n"
+        )
+        lines.append("| scenario | α | variant | loss first→final (med) "
+                     "| alive_T | byz alive | good filtered |")
+        lines.append("|---" * 7 + "|")
+        for r in camp["leaderboard"]:
+            lines.append(
+                f"| {r['scenario']} | {r['alpha']} | {r['variant']} "
+                f"| {r['loss_first_med']:.3f}→{r['loss_final_med']:.3f} "
+                f"| {r['n_alive_final_min']} "
+                f"| {r['byz_alive_final_max']} "
+                f"| {'**yes**' if r['ever_filtered_good'] else 'no'} |"
+            )
+    if rec.get("note"):
+        lines.append(f"\n_{rec['note']}_")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_train.json"
+    with open(path) as f:
+        rec = json.load(f)
+    print(render(rec))
+
+
+if __name__ == "__main__":
+    main()

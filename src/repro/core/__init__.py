@@ -28,7 +28,20 @@ from repro.core.guard_backends import (
     make_guard_backend,
     register_guard_backend,
 )
-from repro.core.solver import ByzantineSGDSolver, SolverConfig, run_sgd
+from repro.core.solver import (
+    ByzantineSGDSolver,
+    SolverConfig,
+    byz_rank,
+    ceil_byzantine_count,
+    make_aggregator,
+    run_sgd,
+)
+from repro.core.tree_harness import (
+    FlatSpec,
+    TreeHarness,
+    VectorModel,
+    params_harness,
+)
 from repro.core.epoch_solver import EpochSolverConfig, solve_strongly_convex
 from repro.core.lower_bound import (
     distinguishing_experiment_linear,
@@ -57,7 +70,14 @@ __all__ = [
     "register_guard_backend",
     "ByzantineSGDSolver",
     "SolverConfig",
+    "byz_rank",
+    "ceil_byzantine_count",
+    "make_aggregator",
     "run_sgd",
+    "FlatSpec",
+    "TreeHarness",
+    "VectorModel",
+    "params_harness",
     "EpochSolverConfig",
     "solve_strongly_convex",
     "distinguishing_experiment_linear",

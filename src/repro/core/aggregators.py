@@ -38,9 +38,12 @@ def aggregate_coordinate_median(grads: jax.Array) -> jax.Array:
 
 def aggregate_trimmed_mean(grads: jax.Array, trim_fraction: float = 0.1) -> jax.Array:
     """Coordinate-wise β-trimmed mean: drop the β·m largest and smallest
-    entries per coordinate, average the rest (Yin et al., trimmed-mean-GD)."""
+    entries per coordinate, average the rest (Yin et al., trimmed-mean-GD).
+    The epsilon keeps an exactly-integral β·m from flooring one short under
+    f32/f64 division (0.3 · 10 → 2.999…), so ceil-convention fractions
+    (``ceil_byzantine_count(α, m) / m``) trim the intended count."""
     m = grads.shape[0]
-    b = int(trim_fraction * m)
+    b = int(trim_fraction * m + 1e-9)
     if 2 * b >= m:
         raise ValueError(f"trim_fraction {trim_fraction} trims everything for m={m}")
     s = jnp.sort(grads, axis=0)

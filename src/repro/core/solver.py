@@ -45,6 +45,18 @@ class Problem(NamedTuple):
     sigma: float = 0.0  # strong convexity (0 = merely convex)
 
 
+def ceil_byzantine_count(alpha: float, m: int) -> int:
+    """max(⌈αm⌉, 1) — the *covering* Byzantine count.
+
+    Defense parameters (Krum's f, trimmed-mean's b, the trainer's baseline
+    sizing) must round **up** so they cover the corrupted set, while the
+    adversary's realized count floors (whole workers are corrupted —
+    :attr:`SolverConfig.n_byzantine`).  The tiny epsilon guards against f32
+    grid alphas landing just above an integer.
+    """
+    return max(math.ceil(alpha * m - 1e-9), 1)
+
+
 class SolverConfig(NamedTuple):
     m: int                      # number of workers
     T: int                      # iterations
@@ -69,10 +81,10 @@ class SolverConfig(NamedTuple):
     @property
     def krum_f_default(self) -> int:
         """⌈αm⌉ — Krum's f must *cover* the Byzantine count, so it rounds up
-        (n_byzantine floors: the adversary corrupts whole workers).  The tiny
-        epsilon guards against f32 grid alphas landing just above an integer.
+        (n_byzantine floors: the adversary corrupts whole workers).  Shared
+        convention: :func:`ceil_byzantine_count`.
         """
-        return max(math.ceil(self.alpha * self.m - 1e-9), 1)
+        return ceil_byzantine_count(self.alpha, self.m)
 
 
 class SolverResult(NamedTuple):
@@ -85,22 +97,32 @@ class SolverResult(NamedTuple):
     final_alive: jax.Array      # (m,) bool
 
 
-def _byz_rank(key: jax.Array, m: int) -> jax.Array:
+def byz_rank(key: jax.Array, m: int) -> jax.Array:
     """Random per-worker rank; worker w is Byzantine iff rank[w] < n_byz.
     (``argsort(perm)[w]`` is w's position in ``perm``, so ``rank < n_byz``
     equals the historical ``isin(arange(m), perm[:n_byz])`` bit-for-bit.)
     Scenario adversaries re-derive a *per-step* mask from the same rank
-    (churn/late-join schedules — repro.scenarios.adversary)."""
+    (churn/late-join schedules — repro.scenarios.adversary); the LM trainer
+    consumes the identical rank convention (DESIGN.md §10)."""
     return jnp.argsort(jax.random.permutation(key, m))
 
 
-def _make_aggregator(problem: Problem, cfg: SolverConfig):
+_byz_rank = byz_rank  # historical name
+
+
+def make_aggregator(problem, cfg: SolverConfig):
     """Returns (init_state, step(state, grads, x, x1) -> (state, xi, n_alive, alive)).
 
     ``byzantine_sgd`` dispatches through the guard-backend registry
     (:mod:`repro.core.guard_backends`, DESIGN.md §9): ``cfg.guard_backend``
     selects dense / fused / dp_exact / dp_sketch, all behind the same step
     signature, so campaigns sweep guard realizations like any other axis.
+
+    ``problem`` only needs ``d`` / ``V`` / ``D`` — a full :class:`Problem`
+    or the :class:`repro.core.tree_harness.FlatSpec` the LM trainer builds
+    from its ravelled parameter tree (DESIGN.md §10) both qualify, which is
+    what makes this the *single* aggregation entry point for the flat
+    harness and for model training.
     """
     name = cfg.aggregator
     if name == "byzantine_sgd":
@@ -110,7 +132,12 @@ def _make_aggregator(problem: Problem, cfg: SolverConfig):
     if name in ("krum", "multi_krum"):
         kwargs["n_byzantine"] = cfg.krum_f if cfg.krum_f is not None else cfg.krum_f_default
     if name == "trimmed_mean":
-        tf = cfg.trim_fraction if cfg.trim_fraction is not None else max(cfg.alpha, 1.0 / cfg.m)
+        # default: the ceil convention (cover ⌈αm⌉ per side), capped so a
+        # near-1/2 α leaves at least one survivor; identical to the old
+        # max(α, 1/m) whenever αm is integral
+        tf = (cfg.trim_fraction if cfg.trim_fraction is not None
+              else min(ceil_byzantine_count(cfg.alpha, cfg.m),
+                       (cfg.m - 1) // 2) / cfg.m)
         kwargs["trim_fraction"] = tf
     fn = agg_lib.get_aggregator(name, **kwargs)
 
@@ -148,7 +175,7 @@ def run_sgd(
     Remark-2.3 adversary may observe.
     """
     key, mask_key = jax.random.split(key)
-    rank = _byz_rank(mask_key, cfg.m)
+    rank = byz_rank(mask_key, cfg.m)
     if adversary is None:
         static_mask = rank < cfg.n_byzantine
         attack_fn = attack_lib.get_attack(cfg.attack)
@@ -156,7 +183,7 @@ def run_sgd(
         adv_state0: object = jnp.zeros(())
     else:
         adv_state0 = adversary.init_state(cfg.m, problem.d)
-    agg_state0, agg_step = _make_aggregator(problem, cfg)
+    agg_state0, agg_step = make_aggregator(problem, cfg)
     x1 = problem.x1.astype(jnp.float32)
 
     def body(carry, k):

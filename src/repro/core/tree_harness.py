@@ -1,0 +1,145 @@
+"""Pytree ⇄ flat-harness adapter — one guard axis from vectors to models
+(DESIGN.md §10).
+
+The paper's guard is defined on worker gradient *vectors*; every backend in
+:mod:`repro.core.guard_backends` therefore consumes the flat ``(m, d)``
+stacked view, and the LM trainer historically kept its own parallel pytree
+implementation of the same filter.  :class:`TreeHarness` collapses the two
+stacks: it presents per-worker gradient *pytrees* (leaves with leading
+worker axis ``W``) as the flat ``(W, d)`` matrix the backends, the attack
+zoo, and the scenario adversaries already understand, and maps the filtered
+mean ξ back into a parameter-shaped update.
+
+Three properties make the adapter exact rather than approximate:
+
+* **zero padding** — ``d`` is padded up to a lane multiple (default 128),
+  which keeps Pallas block shapes and mesh shardings divisible; padded
+  coordinates are identically zero in every row, so Gram matrices, norms,
+  inner products — and therefore every filter decision — are unchanged;
+* **fixed leaf order** — ravel/unravel use the template's flattened leaf
+  order, so ``unravel(ravel(t)) == t`` bit-for-bit (round-trip property
+  test in ``tests/test_tree_harness.py``);
+* **dtype discipline** — ravelling promotes to the widest leaf float dtype
+  (f32 for the reduced configs; bf16 survives when every leaf is bf16, so
+  the ``low_precision_stats`` lever still means something), and unravel
+  casts each slice back to its template leaf dtype.
+
+:class:`FlatSpec` duck-types the ``problem`` argument of the guard-backend
+factories (they read only ``d`` / ``V`` / ``D``), so
+``make_aggregator(FlatSpec(harness.d, V, D), cfg)`` instantiates any
+registered backend — or any stateless baseline — for the training path with
+no trainer-specific wiring.
+
+:class:`VectorModel` wraps a convex :class:`~repro.core.solver.Problem` in
+the minimal LanguageModel surface ``build_train_step`` needs (``init`` +
+``loss_fn``); it is how the flat-vs-pytree parity tests drive the *trainer*
+with the *solver's* exact gradient stream.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+LANE = 128  # TPU lane width; default ravel padding multiple
+
+
+class FlatSpec(NamedTuple):
+    """The guard-backend factories' view of a problem: dimension and the
+    Assumption-2.2 constants.  ``V = 0`` means "unknown — calibrate online"
+    and is only meaningful for the auto-V-capable ``dp_*`` backends."""
+
+    d: int
+    V: float = 0.0
+    D: float = 10.0
+
+
+class TreeHarness:
+    """Ravel/unravel between a parameter-shaped pytree and the flat ``(d,)``
+    (or worker-stacked ``(W, d)``) view, with lane padding.
+
+    Built once from a template tree (concrete arrays *or*
+    ``ShapeDtypeStruct``s — only shapes/dtypes are read), then used inside
+    jitted code: all metadata is static Python.
+    """
+
+    def __init__(self, template: PyTree, pad_to: int = LANE):
+        leaves, self.treedef = jax.tree_util.tree_flatten(template)
+        self.shapes = tuple(tuple(l.shape) for l in leaves)
+        self.dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+        self.sizes = tuple(int(np.prod(s)) for s in self.shapes)
+        self.d_raw = int(sum(self.sizes))
+        pad_to = max(int(pad_to), 1)
+        self.d = -(-self.d_raw // pad_to) * pad_to
+        floats = [dt for dt in self.dtypes if jnp.issubdtype(dt, jnp.floating)]
+        self.flat_dtype = jnp.result_type(*floats) if floats else jnp.dtype(jnp.float32)
+
+    # -- tree → flat ---------------------------------------------------------
+
+    def ravel(self, tree: PyTree) -> jax.Array:
+        """(d,) flat view of a parameter-shaped tree (zero-padded)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(self.flat_dtype) for l in leaves]
+        )
+        pad = self.d - self.d_raw
+        return jnp.pad(flat, (0, pad)) if pad else flat
+
+    def ravel_workers(self, tree: PyTree) -> jax.Array:
+        """(W, d) flat view of a worker-stacked tree (leaves lead with W)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        W = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(W, -1).astype(self.flat_dtype) for l in leaves], axis=1
+        )
+        pad = self.d - self.d_raw
+        return jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat
+
+    # -- flat → tree ---------------------------------------------------------
+
+    def unravel(self, vec: jax.Array) -> PyTree:
+        """Parameter-shaped tree from a (d,) flat vector (padding dropped,
+        leaves cast back to their template dtypes)."""
+        out, ofs = [], 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            out.append(vec[ofs: ofs + size].reshape(shape).astype(dtype))
+            ofs += size
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+def params_harness(model, pad_to: int = LANE) -> TreeHarness:
+    """Harness over a model's parameter tree, built shape-only (no init)."""
+    abstract = jax.eval_shape(
+        model.init, jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    return TreeHarness(abstract, pad_to=pad_to)
+
+
+class VectorModel:
+    """A convex :class:`~repro.core.solver.Problem` wearing the minimal
+    model interface ``build_train_step`` consumes.
+
+    Params are the single-leaf tree ``{"x": (d,)}`` (the iterate) and each
+    per-worker batch carries a ``noise`` vector, so the per-worker gradient
+    is exactly ``∇f(x) + noise`` — the solver's additive-noise stochastic
+    gradient.  Feeding the *same* noise stream run_sgd's key chain would
+    draw makes the trainer and the flat harness bit-comparable; that is the
+    parity contract ``tests/test_tree_harness.py`` pins for the ``dense``,
+    ``fused`` and ``dp_exact`` backends.
+    """
+
+    def __init__(self, problem):
+        self.problem = problem
+
+    def init(self, key: jax.Array) -> PyTree:
+        del key  # the paper's x₁ is deterministic
+        return {"x": self.problem.x1.astype(jnp.float32)}
+
+    def loss_fn(self, params: PyTree, tb: dict):
+        x = params["x"]
+        # ⟨noise, x⟩ has gradient `noise`: grad(loss) = ∇f(x) + noise
+        return self.problem.f(x) + jnp.vdot(tb["noise"][0], x), {}

@@ -44,7 +44,13 @@ Both guard modes also run on the *flat* (m, d) convex harness as guard
 backends ``dp_exact`` / ``dp_sketch`` (:mod:`repro.core.guard_backends`,
 DESIGN.md §9): a stacked gradient array is a one-leaf worker pytree and
 the iterate/anchor stand in for params, so the same ``guard_step`` is
-sweepable under the scenario campaigns with no adaptation layer.
+sweepable under the scenario campaigns with no adaptation layer.  Since
+the §10 unification the **trainer drives the same flat view**: LM
+training ravels its gradient pytrees through
+:mod:`repro.core.tree_harness` and selects these modes as the
+``dp_exact`` / ``dp_sketch`` backends of ``SolverConfig.guard_backend``
+(the pytree ``guard_step`` path below remains the mesh-sharded
+realization the leaf-wise contractions were written for).
 """
 from __future__ import annotations
 
@@ -251,20 +257,33 @@ def init_guard_state(cfg: DPGuardConfig, params_like: PyTree) -> DPGuardState:
     )
 
 
-def _calibrate_v(cfg: DPGuardConfig, gram_g: jax.Array, v_prev: jax.Array) -> jax.Array:
-    if not cfg.auto_v:
-        return jnp.asarray(cfg.V, jnp.float32)
+def v_from_gram(gram_g: jax.Array) -> jax.Array:
+    """The Assumption-2.2 scale convention: half the 25th-percentile
+    pairwise distance from a fresh-gradient Gram.
+
+    Invariant behind the 0.25 quantile (NOT the median): for α < 1/2,
+    good-good pairs are a (1-α)² > (1/2)² = 25% fraction of all pairs, so
+    the 25th percentile is always witnessed by an honest pair — a
+    Byzantine-proof estimate of the honest deviation scale over the whole
+    α < 1/2 regime.  The median only survives attacker-pair fractions
+    below 1/2, which fails once α > 1−1/√2 ≈ 0.29 (e.g. at α=0.375 with
+    m=8, 18 of 28 pairs involve an attacker and the median is theirs).
+
+    Single source of the convention: the guards' auto-V calibration below
+    and the trainer's adversary ``ctx["V"]`` estimate (DESIGN.md §10) both
+    call this, so the attack magnitudes always probe the same radius the
+    filter enforces.
+    """
     d2 = pairwise_sq_dists_from_gram(gram_g)
     W = d2.shape[0]
     off = d2[jnp.triu_indices(W, k=1)]
-    # Invariant behind the 0.25 quantile (NOT the median): for α < 1/2,
-    # good-good pairs are a (1-α)² > (1/2)² = 25% fraction of all pairs, so
-    # the 25th percentile is always witnessed by an honest pair — a
-    # Byzantine-proof estimate of the honest deviation scale over the whole
-    # α < 1/2 regime.  The median only survives attacker-pair fractions
-    # below 1/2, which fails once α > 1−1/√2 ≈ 0.29 (e.g. at α=0.375 with
-    # m=8, 18 of 28 pairs involve an attacker and the median is theirs).
-    v_now = jnp.sqrt(jnp.quantile(off, 0.25)) * 0.5
+    return jnp.sqrt(jnp.quantile(off, 0.25)) * 0.5
+
+
+def _calibrate_v(cfg: DPGuardConfig, gram_g: jax.Array, v_prev: jax.Array) -> jax.Array:
+    if not cfg.auto_v:
+        return jnp.asarray(cfg.V, jnp.float32)
+    v_now = v_from_gram(gram_g)
     v_new = jnp.where(v_prev > 0, cfg.v_ema * v_prev + (1 - cfg.v_ema) * v_now, v_now)
     return jnp.maximum(v_new, 1e-12)
 

@@ -36,6 +36,10 @@ LOGICAL_RULES_SINGLE_POD: dict[str, Any] = {
     "embed_table": None,      # never FSDP'd: scatter-add gradient (see model.py)
     "act_seq": "model",       # sequence parallelism for the residual stream
     "act_embed": None,
+    # the tree-harness flat parameter axis (DESIGN.md §10): ravelled (W, d)
+    # guard state / anchors shard d over the model axis (d is lane-padded,
+    # so divisibility holds whenever the model axis divides 128)
+    "flat_grad": "model",
     "cache_seq": "model",     # decode KV caches shard over seq when batch is small
     "conv": None,
     "state": None,

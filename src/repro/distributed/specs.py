@@ -15,8 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig
-from repro.distributed.byzantine_dp import DPGuardConfig
+from repro.configs.base import InputShape
 from repro.distributed.sharding import logical_to_spec, use_logical_rules, param_pspecs
 from repro.models.model import LanguageModel
 
@@ -81,19 +80,62 @@ def cache_specs(cache_abstract: PyTree, rules: dict, mesh: Mesh) -> PyTree:
 # train-state specs
 # ---------------------------------------------------------------------------
 
+def _flat_state_specs(abstract: PyTree, W: int, rules: dict, mesh: Mesh) -> PyTree:
+    """ShapeDtypeStructs-with-shardings for a tree-harness-era state pytree
+    (guard backends + adversary/feedback leaves, DESIGN.md §10), by shape:
+
+    * (W,)     — per-worker scalars: worker axes ('pod','data')
+    * (W, W)   — filter-sized Grams: replicated
+    * (W, d)   — the flat B martingale / sketch: worker × flat_grad('model')
+    * (d,)     — flat anchors/feedback vectors: flat_grad('model')
+    * ()       — replicated
+    """
+    def one(a):
+        shape = tuple(a.shape)
+        if shape == ():
+            spec = P()
+        elif shape == (W,):
+            spec = _logical(("worker",), shape, rules, mesh)
+        elif shape == (W, W):
+            spec = P()
+        elif len(shape) == 2 and shape[0] == W:
+            spec = _logical(("worker", "flat_grad"), shape, rules, mesh)
+        elif len(shape) == 1:
+            spec = _logical(("flat_grad",), shape, rules, mesh)
+        else:
+            spec = P(*([None] * len(shape)))
+        return _sds(shape, a.dtype, mesh, spec)
+
+    return jax.tree_util.tree_map(one, abstract)
+
+
 def make_train_specs(
     model: LanguageModel,
-    dp_cfg: DPGuardConfig,
+    cfg: "SolverConfig",
     optimizer_kind: str,
     shape: InputShape,
     rules: dict,
     mesh: Mesh,
+    V: float = 0.0,
+    D: float = 10.0,
+    adversary=None,
 ):
-    """(state_sds, batch_sds, byz_sds, rng_sds) ShapeDtypeStruct trees with
-    shardings for AOT-lowering ``train_step``."""
-    cfg = model.cfg
-    pdt = jnp.dtype(cfg.param_dtype)
-    W = dp_cfg.n_workers
+    """(state_sds, batch_sds, rank_sds, rng_sds) ShapeDtypeStruct trees with
+    shardings for AOT-lowering ``train_step``.
+
+    ``cfg`` is the trainer's :class:`repro.core.solver.SolverConfig`
+    (``guard_backend`` selects the aggregation realization); the guard /
+    adversary / feedback leaves of :class:`repro.distributed.trainer.TrainState`
+    are derived by ``eval_shape`` over the *same* factories the trainer
+    uses, so the specs can never drift from the real state structure.
+    """
+    from repro.core.solver import make_aggregator
+    from repro.core.tree_harness import FlatSpec, params_harness
+    from repro.distributed.trainer import TrainState
+
+    mcfg = model.cfg
+    pdt = jnp.dtype(mcfg.param_dtype)
+    W = cfg.m
     assert shape.global_batch % W == 0, (shape.global_batch, W)
     b = shape.global_batch // W
 
@@ -116,37 +158,32 @@ def make_train_specs(
     else:
         opt_sds = {}
 
-    worker_spec = _logical(("worker",), (W,), rules, mesh)
-    if dp_cfg.mode == "sketch":
-        b_sds = _sds((W, dp_cfg.sketch_dim), jnp.float32, mesh,
-                     _logical(("worker", None), (W, dp_cfg.sketch_dim), rules, mesh))
-    else:
-        def exact_leaf(d, s):
-            spec = _logical(("worker",) + tuple(d.axes), (W, *d.shape), rules, mesh)
-            return _sds((W, *d.shape), jnp.float32, mesh, spec)
-        b_sds = jax.tree_util.tree_map(
-            exact_leaf, model.defs, pspecs,
-            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"),
-        )
-
-    guard_sds = dict(
-        A=_sds((W,), jnp.float32, mesh, worker_spec),
-        B=b_sds,
-        alive=_sds((W,), jnp.bool_, mesh, worker_spec),
-        k=_sds((), jnp.int32, mesh, P()),
-        v_est=_sds((), jnp.float32, mesh, P()),
-        # (W, W) is filter-sized, not model-sized — replicate it
-        gram_B=_sds((W, W), jnp.float32, mesh, P()),
+    harness = params_harness(model)
+    fspec = FlatSpec(harness.d, V, D)
+    guard_abs = jax.eval_shape(lambda: make_aggregator(fspec, cfg)[0])
+    guard_sds = _flat_state_specs(guard_abs, W, rules, mesh)
+    # adversary memory mirrors init_train_state: AdvState pytree under a
+    # scenario adversary, a scalar zero on the static path — derived from
+    # the same init so scenario runs lower against matching specs
+    adv_abs = jax.eval_shape(
+        (lambda: adversary.init_state(W, harness.d)) if adversary is not None
+        else (lambda: jnp.zeros(()))
     )
-    from repro.distributed.byzantine_dp import DPGuardState
-    from repro.distributed.trainer import TrainState
+    adv_sds = _flat_state_specs(adv_abs, W, rules, mesh)
 
+    worker_spec = _logical(("worker",), (W,), rules, mesh)
+    flat_spec = _logical(("flat_grad",), (harness.d,), rules, mesh)
     state_sds = TrainState(
         params=params_sds,
         opt_state=opt_sds,
-        guard=DPGuardState(**guard_sds),
-        anchor=params_sds,
+        guard=guard_sds,
+        anchor=_sds((harness.d,), harness.flat_dtype, mesh, flat_spec),
         step=_sds((), jnp.int32, mesh, P()),
+        ever_byz=_sds((W,), jnp.bool_, mesh, worker_spec),
+        adv=adv_sds,
+        prev_xi=_sds((harness.d,), harness.flat_dtype, mesh, flat_spec),
+        prev_alive=_sds((W,), jnp.bool_, mesh, worker_spec),
+        prev_n_alive=_sds((), jnp.int32, mesh, P()),
     )
 
     batch_spec = _logical(("worker", None, None), (W, b, shape.seq_len), rules, mesh)
@@ -154,15 +191,15 @@ def make_train_specs(
         "tokens": _sds((W, b, shape.seq_len), jnp.int32, mesh, batch_spec),
         "labels": _sds((W, b, shape.seq_len), jnp.int32, mesh, batch_spec),
     }
-    if cfg.frontend != "none":
-        fshape = (W, b, cfg.frontend_seq if not cfg.enc_dec else cfg.enc_seq_len, cfg.frontend_dim)
+    if mcfg.frontend != "none":
+        fshape = (W, b, mcfg.frontend_seq if not mcfg.enc_dec else mcfg.enc_seq_len, mcfg.frontend_dim)
         batch_sds["frontend"] = _sds(
-            fshape, jnp.dtype(cfg.activation_dtype), mesh,
+            fshape, jnp.dtype(mcfg.activation_dtype), mesh,
             _logical(("worker", None, None, None), fshape, rules, mesh),
         )
-    byz_sds = _sds((W,), jnp.bool_, mesh, worker_spec)
+    rank_sds = _sds((W,), jnp.int32, mesh, worker_spec)
     rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=_ns(mesh, P()))
-    return state_sds, batch_sds, byz_sds, rng_sds
+    return state_sds, batch_sds, rank_sds, rng_sds
 
 
 # ---------------------------------------------------------------------------

@@ -1,37 +1,58 @@
-"""Distributed training step: per-worker grads → Byzantine guard → optimizer.
+"""Distributed training step: per-worker grads → guard backend → optimizer
+(DESIGN.md §10).
 
 ``build_train_step`` returns a pure function suitable for ``jax.jit`` with
 mesh shardings:
 
-    state' , metrics = train_step(state, batch, byz_mask, rng)
+    state', metrics = train_step(state, batch, byz_rank, key)
 
 * ``batch`` leaves are (W, per_worker_batch, ...) with W sharded over the
   mesh's worker axes ('pod','data').
 * per-worker gradients come from vmap-of-grad: XLA partitions the vmap over
   the data axis, so each data slice computes exactly its own worker's
   gradient (params replicated over data, tensor-sharded over model).
-* ``byz_mask`` marks simulated Byzantine workers; ``attack`` corrupts their
-  gradient trees *after* honest computation (Remark 2.3 adversary).
-* aggregation is pluggable: the paper's guard (stateful) or any stateless
-  baseline (mean / coordinate median / trimmed mean / Krum) applied across
-  the worker axis — the Table-1 comparison at LM scale.
+* the gradient pytree is presented to the aggregation layer through the
+  **tree harness** (:mod:`repro.core.tree_harness`): ravelled to the flat
+  ``(W, d)`` stacked view every guard backend, attack, and scenario
+  adversary of the convex harness already consumes, with ξ unravelled back
+  into a parameter-shaped update.  There is no trainer-specific guard
+  implementation — ``SolverConfig.guard_backend`` selects ``dense`` /
+  ``fused`` / ``dp_exact`` / ``dp_sketch`` exactly as ``run_sgd`` does, and
+  stateless baselines (mean / coordinate median / trimmed mean / Krum /
+  geometric median) come from the same :func:`repro.core.solver.make_aggregator`
+  with Krum's f sized by the shared ⌈αm⌉ convention
+  (:func:`repro.core.solver.ceil_byzantine_count`).
+* ``byz_rank`` is the (W,) int32 per-worker rank (worker w is Byzantine iff
+  its rank is below the realized count — :func:`repro.core.solver.byz_rank`);
+  scenario adversaries re-derive a *per-step* mask from it (churn, late
+  join), static attacks evaluate it once.
+* the adversary is either the static ``cfg.attack`` from the flat zoo or a
+  :class:`repro.scenarios.adversary.ScenarioAdversary` (duck-typed — any
+  object with ``mask_at`` / ``init_state`` / ``attack`` / ``update_state``),
+  whose ``AdvState`` is carried in :class:`TrainState` next to the guard
+  state, with the Remark-2.3 feedback (previous ξ, alive, n_alive) fed to
+  every attack's ``ctx``.
+
+Training-specific ``ctx`` semantics (the solver knows the true gradient;
+the trainer cannot): ``ctx["true_grad"]`` is the omniscient adversary's
+best estimate — the mean of the *honest* rows of the current flat gradient
+matrix — and ``ctx["V"]`` is the explicit ``V`` when given, else an
+instantaneous estimate from the pre-attack (all-honest) gradient spread
+(half the 25th-percentile pairwise distance, the dp guards' auto-V
+convention) — computed for *every* aggregator, so V-scaled attacks hit
+stateless baselines too, not only the calibrating guards.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.byzantine_dp import (
-    DPGuardConfig,
-    DPGuardState,
-    apply_tree_attack,
-    guard_step,
-    init_guard_state,
-    worker_cross_gram,
-)
+from repro.core import attacks as attack_lib
+from repro.core.solver import SolverConfig, make_aggregator
+from repro.core.tree_harness import FlatSpec, params_harness
+from repro.distributed.byzantine_dp import v_from_gram
 from repro.models.model import LanguageModel
 from repro.optim.optimizers import Optimizer
 from repro.utils import tree_add
@@ -40,53 +61,77 @@ PyTree = Any
 
 
 class TrainState(NamedTuple):
+    """Everything one training run carries across steps — and everything a
+    checkpoint must round-trip for resume-equals-uninterrupted (params AND
+    optimizer moments AND guard martingales AND the anchor AND the
+    adversary/feedback memory)."""
+
     params: PyTree
     opt_state: PyTree
-    guard: DPGuardState
-    anchor: PyTree            # x_1 for the A-statistic
-    step: jax.Array
+    guard: PyTree             # backend-specific aggregator state (scan-carried)
+    anchor: jax.Array         # (d,) flat x₁ — the A-statistic reference point
+    step: jax.Array           # () int32
+    ever_byz: jax.Array       # (W,) bool — workers that were *ever* Byzantine
+    adv: PyTree               # adversary memory (scalar zero when static)
+    prev_xi: jax.Array        # (d,) ξ_{k-1} — Remark-2.3 feedback
+    prev_alive: jax.Array     # (W,) bool — good_{k-1}
+    prev_n_alive: jax.Array   # () int32
+
+
+def rank_from_mask(mask: jax.Array) -> jax.Array:
+    """(W,) int32 rank with the mask's Byzantine workers ranked first, so
+    ``rank < sum(mask)`` reproduces ``mask`` — the bridge from the
+    historical bool-mask API to the rank convention."""
+    return jnp.argsort(jnp.argsort(~mask)).astype(jnp.int32)
+
+
+def _estimate_v(flat: jax.Array) -> jax.Array:
+    """Instantaneous Assumption-2.2 scale from the *pre-attack* (all-honest)
+    gradient rows — the guards' own :func:`v_from_gram` convention, so it is
+    computable for every aggregator (the omniscient Remark-2.3 adversary can
+    always measure the honest spread itself) and can never diverge from the
+    radius the auto-V guards enforce."""
+    return jnp.maximum(v_from_gram(flat @ flat.T), 1e-12)
+
+
+def _validate(cfg: SolverConfig, V: float) -> None:
+    if (cfg.aggregator == "byzantine_sgd"
+            and cfg.guard_backend in ("dense", "fused") and V <= 0):
+        raise ValueError(
+            f"guard backend {cfg.guard_backend!r} has no online auto-V; "
+            "pass an explicit V (Assumption-2.2 deviation bound) or select "
+            "an auto-V-capable backend (dp_exact / dp_sketch)"
+        )
 
 
 def init_train_state(
-    model: LanguageModel, optimizer: Optimizer, dp_cfg: DPGuardConfig, key: jax.Array,
+    model: LanguageModel,
+    optimizer: Optimizer,
+    cfg: SolverConfig,
+    key: jax.Array,
+    *,
+    V: float = 0.0,
+    D: float = 10.0,
+    adversary=None,
 ) -> TrainState:
+    _validate(cfg, V)
+    harness = params_harness(model)
     params = model.init(key)
+    guard0, _ = make_aggregator(FlatSpec(harness.d, V, D), cfg)
+    adv0 = (adversary.init_state(cfg.m, harness.d) if adversary is not None
+            else jnp.zeros(()))
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),
-        guard=init_guard_state(dp_cfg, params),
-        anchor=jax.tree_util.tree_map(jnp.copy, params),
+        guard=guard0,
+        anchor=harness.ravel(params),
         step=jnp.zeros((), jnp.int32),
+        ever_byz=jnp.zeros((cfg.m,), bool),
+        adv=adv0,
+        prev_xi=jnp.zeros((harness.d,), harness.flat_dtype),
+        prev_alive=jnp.ones((cfg.m,), bool),
+        prev_n_alive=jnp.asarray(cfg.m, jnp.int32),
     )
-
-
-# ---------------------------------------------------------------------------
-# stateless baselines across the worker axis
-# ---------------------------------------------------------------------------
-
-def aggregate_baseline(name: str, grads_w: PyTree, n_byzantine: int) -> PyTree:
-    if name == "mean":
-        return jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), grads_w)
-    if name == "coordinate_median":
-        return jax.tree_util.tree_map(lambda g: jnp.median(g, axis=0), grads_w)
-    if name == "trimmed_mean":
-        def one(g):
-            W = g.shape[0]
-            b = max(min(n_byzantine, (W - 1) // 2), 0)
-            s = jnp.sort(g, axis=0)
-            return jnp.mean(s[b : W - b], axis=0)
-        return jax.tree_util.tree_map(one, grads_w)
-    if name == "krum":
-        gram = worker_cross_gram(grads_w)
-        diag = jnp.diagonal(gram)
-        d2 = jnp.maximum(diag[:, None] + diag[None, :] - 2 * gram, 0.0)
-        W = d2.shape[0]
-        d2 = d2.at[jnp.arange(W), jnp.arange(W)].set(jnp.inf)
-        n_near = max(W - n_byzantine - 2, 1)
-        scores = jnp.sum(jnp.sort(d2, axis=1)[:, :n_near], axis=1)
-        idx = jnp.argmin(scores)
-        return jax.tree_util.tree_map(lambda g: g[idx], grads_w)
-    raise KeyError(f"unknown aggregator {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -96,56 +141,105 @@ def aggregate_baseline(name: str, grads_w: PyTree, n_byzantine: int) -> PyTree:
 def build_train_step(
     model: LanguageModel,
     optimizer: Optimizer,
-    dp_cfg: DPGuardConfig,
-    aggregator: str = "byzantine_sgd",
-    attack: str = "none",
-    attack_scale: float = 3.0,
+    cfg: SolverConfig,
+    *,
+    V: float = 0.0,
+    D: float = 10.0,
+    adversary=None,
 ) -> Callable:
-    """Returns train_step(state, batch, byz_mask, rng) → (state', metrics)."""
+    """Returns train_step(state, batch, byz_rank, key) → (state', metrics).
+
+    ``cfg`` is the *same* :class:`~repro.core.solver.SolverConfig` the flat
+    harness uses: ``aggregator`` / ``guard_backend`` / ``guard_opts`` select
+    the aggregation path, ``attack`` / ``attack_kwargs`` the static
+    adversary (ignored when ``adversary`` is given), ``alpha`` the realized
+    Byzantine fraction (floor — whole workers), and ``m`` / ``T`` /
+    ``threshold_mode`` / ``mean_over_alive`` / ``delta`` the filter.
+    ``cfg.eta`` is unused — the optimizer owns the learning rate.
+
+    ``key`` is the per-step attack/adversary key (callers derive it from a
+    dedicated stream, e.g. ``fold_in(loop_key, step)`` — see
+    ``repro.launch.train``).  ``adversary`` may close over traced leaves, so
+    a whole (scenario × α × seed) grid of *training runs* vmaps into one jit
+    (:func:`repro.scenarios.train_campaign.run_train_campaign`).
+    """
+    _validate(cfg, V)
+    harness = params_harness(model)
+    spec = FlatSpec(harness.d, V, D)
+    _, agg_step = make_aggregator(spec, cfg)
+    if adversary is None:
+        attack_fn = attack_lib.get_attack(cfg.attack)
+        attack_kwargs = dict(cfg.attack_kwargs)
 
     def loss_one(params, tb):
         loss, metrics = model.loss_fn(params, tb)
         return loss, metrics
 
-    def train_step(state: TrainState, batch: dict, byz_mask: jax.Array, rng: jax.Array):
+    def train_step(state: TrainState, batch: dict, byz_rank: jax.Array,
+                   key: jax.Array):
+        k = state.step
         grad_fn = jax.value_and_grad(loss_one, has_aux=True)
 
         def per_worker(tb):
-            (loss, metrics), g = grad_fn(state.params, tb)
+            (loss, _), g = grad_fn(state.params, tb)
             return loss, g
 
         losses_w, grads_w = jax.vmap(per_worker)(batch)
-        grads_w = apply_tree_attack(attack, rng, grads_w, byz_mask, scale=attack_scale)
+        flat = harness.ravel_workers(grads_w)          # (W, d) stacked view
+        x = harness.ravel(state.params)
 
-        if aggregator == "byzantine_sgd":
-            guard, xi, diag = guard_step(
-                dp_cfg, state.guard, grads_w, state.params, state.anchor
-            )
-            n_alive = diag["n_alive"]
-            alive = guard.alive
+        if adversary is None:
+            mask_k = byz_rank < cfg.n_byzantine
         else:
-            xi = aggregate_baseline(aggregator, grads_w, int(dp_cfg.n_workers // 4))
-            guard = state.guard
-            n_alive = jnp.asarray(dp_cfg.n_workers)
-            alive = jnp.ones((dp_cfg.n_workers,), bool)
-            diag = {}
+            mask_k = adversary.mask_at(byz_rank, k)
+        good_w = (~mask_k).astype(flat.dtype)[:, None]
+        honest_mean = (jnp.sum(flat * good_w, axis=0)
+                       / jnp.maximum(jnp.sum(good_w), 1.0))
+        v_ctx = (jnp.asarray(V, jnp.float32) if V > 0
+                 else _estimate_v(flat))   # flat is pre-attack: all honest
+        ctx = {
+            "true_grad": honest_mean, "V": v_ctx, "step": k,
+            "alive": state.prev_alive, "n_alive": state.prev_n_alive,
+            "prev_xi": state.prev_xi,
+        }
+        if adversary is None:
+            flat = attack_fn(key, flat, mask_k, ctx, **attack_kwargs)
+        else:
+            flat = adversary.attack(key, flat, mask_k, ctx, state.adv)
 
-        updates, opt_state = optimizer.update(xi, state.opt_state, state.params, state.step)
+        guard, xi_flat, n_alive, alive = agg_step(
+            state.guard, flat, x, state.anchor
+        )
+        adv = state.adv
+        if adversary is not None:
+            adv = adversary.update_state(
+                state.adv, mask_k, flat, xi_flat, alive, n_alive, ctx
+            )
+
+        xi_tree = harness.unravel(xi_flat)
+        updates, opt_state = optimizer.update(
+            xi_tree, state.opt_state, state.params, k
+        )
         params = tree_add(state.params, updates)
 
-        good = (~byz_mask).astype(jnp.float32)
+        ever_byz = state.ever_byz | mask_k
+        good = (~mask_k).astype(jnp.float32)
         metrics = {
-            "loss_good_workers": jnp.sum(losses_w * good) / jnp.maximum(jnp.sum(good), 1),
+            "loss_good_workers": jnp.sum(losses_w * good)
+            / jnp.maximum(jnp.sum(good), 1),
             "loss_all_workers": jnp.mean(losses_w),
-            "n_alive": n_alive,
-            "good_filtered": jnp.sum((~alive) & (~byz_mask)),
-            "byz_alive": jnp.sum(alive & byz_mask),
+            "n_alive": jnp.asarray(n_alive, jnp.int32),
+            "good_filtered": jnp.sum((~alive) & (~ever_byz)),
+            "byz_alive": jnp.sum(alive & mask_k),
+            "n_byz": jnp.sum(mask_k),
         }
-        if "v_est" in diag:
-            metrics["v_est"] = diag["v_est"]
+        if hasattr(guard, "v_est"):
+            metrics["v_est"] = guard.v_est
         new_state = TrainState(
             params=params, opt_state=opt_state, guard=guard,
-            anchor=state.anchor, step=state.step + 1,
+            anchor=state.anchor, step=k + 1, ever_byz=ever_byz, adv=adv,
+            prev_xi=xi_flat.astype(state.prev_xi.dtype), prev_alive=alive,
+            prev_n_alive=jnp.asarray(n_alive, jnp.int32),
         )
         return new_state, metrics
 

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.configs.base import InputShape, ModelConfig
-from repro.distributed.byzantine_dp import DPGuardConfig
+from repro.core.solver import SolverConfig
 from repro.distributed.sharding import (
     LOGICAL_RULES_MULTI_POD,
     LOGICAL_RULES_SINGLE_POD,
@@ -131,22 +131,30 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool, guard_mode: str = "sk
     t0 = time.time()
     with use_logical_rules(rules, mesh):
         if shape.kind == "train":
-            dp_cfg = DPGuardConfig(n_workers=W, T=10_000, mode=guard_mode, auto_v=True,
-                                   low_precision_stats="lp_guard" in opts)
+            # the guard rides the unified SolverConfig axis (DESIGN.md §10):
+            # the historical exact/sketch modes are the dp_exact/dp_sketch
+            # guard backends on the tree-harness flat view
+            gopts = (("low_precision_stats", True),) if "lp_guard" in opts else ()
+            scfg = SolverConfig(
+                m=W, T=10_000, eta=1e-4, alpha=0.25,
+                aggregator="byzantine_sgd", attack="none",
+                mean_over_alive=True,
+                guard_backend={"exact": "dp_exact", "sketch": "dp_sketch"}[guard_mode],
+                guard_opts=gopts,
+            )
             optimizer = adamw(1e-4, grad_clip=1.0)
-            train_step = build_train_step(model, optimizer, dp_cfg,
-                                          aggregator="byzantine_sgd", attack="none")
-            state_sds, batch_sds, byz_sds, rng_sds = make_train_specs(
-                model, dp_cfg, "adamw", shape, rules, mesh
+            train_step = build_train_step(model, optimizer, scfg)
+            state_sds, batch_sds, rank_sds, rng_sds = make_train_specs(
+                model, scfg, "adamw", shape, rules, mesh
             )
 
-            def step_fn(state, batch, byz, rng):
+            def step_fn(state, batch, rank, rng):
                 with use_logical_rules(rules, mesh):
-                    return train_step(state, batch, byz, rng)
+                    return train_step(state, batch, rank, rng)
 
             donate = (0,) if "donate" in opts else ()
             lowered = jax.jit(step_fn, donate_argnums=donate).lower(
-                state_sds, batch_sds, byz_sds, rng_sds)
+                state_sds, batch_sds, rank_sds, rng_sds)
         elif shape.kind == "prefill":
             params_sds, batch_sds = make_prefill_specs(model, shape, rules, mesh)
 

@@ -14,7 +14,11 @@ executable and sweepable (DESIGN.md §8):
 * :mod:`repro.scenarios.campaign` — :func:`run_campaign`, lowering a whole
   (scenario × α × seed × aggregator) grid into one jitted ``vmap``;
 * :mod:`repro.scenarios.report` — seed-aggregated leaderboard /
-  degradation / Theorem-3.8-bound records → ``BENCH_scenarios.json``.
+  degradation / Theorem-3.8-bound records → ``BENCH_scenarios.json``;
+* :mod:`repro.scenarios.train_campaign` — the same grid lifted to LM
+  training (DESIGN.md §10): :func:`run_train_campaign` vmaps full
+  reduced-LM training runs, variants included, under one jit →
+  ``BENCH_train.json``.
 """
 from repro.scenarios.adversary import (
     ATTACK_TABLE,
@@ -50,6 +54,13 @@ from repro.scenarios.spec import (
     scenario_lie_low_then_strike,
     scenario_static,
 )
+from repro.scenarios.train_campaign import (
+    TrainCampaignResult,
+    TrainRunStats,
+    build_train_campaign_fn,
+    run_train_campaign,
+    summarize_train_campaign,
+)
 
 __all__ = [
     "ATTACK_TABLE",
@@ -78,4 +89,9 @@ __all__ = [
     "summarize_campaign",
     "theorem38_bound",
     "write_report",
+    "TrainCampaignResult",
+    "TrainRunStats",
+    "build_train_campaign_fn",
+    "run_train_campaign",
+    "summarize_train_campaign",
 ]

@@ -1,0 +1,193 @@
+"""Train campaigns — a grid of *LM training runs* under one ``jit``
+(DESIGN.md §10).
+
+The scenario campaign runner (:mod:`repro.scenarios.campaign`) sweeps the
+convex harness; this module lifts the same (scenario × α × seed) grid to
+**model training**: every grid row is a full ``build_train_step`` run — real
+per-worker gradients from a (reduced) LM, the tree-harness flat view, any
+guard backend, the scan-carried adversary state — and the whole grid
+compiles once and executes as a single ``jit(vmap)``.  The (small, static)
+variant axis (aggregator × guard backend, via
+:func:`repro.scenarios.campaign.expand_variants`) unrolls inside the same
+trace, exactly like the flat campaigns, so ``BENCH_train.json`` gets a
+dense-vs-dp leaderboard from one compilation.
+
+Memory note: vmapping N runs replicates params/optimizer/guard state N
+times — use reduced configs (the CI smoke runs mamba2-130m at d_model=64
+with N ≤ 8 rows).
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import SolverConfig, byz_rank
+from repro.data.synthetic import SyntheticTokens, make_worker_batch
+from repro.distributed.trainer import build_train_step, init_train_state
+from repro.scenarios.adversary import ScenarioAdversary
+from repro.scenarios.campaign import expand_variants
+from repro.scenarios.spec import CampaignGrid
+
+
+class TrainRunStats(NamedTuple):
+    """Per-run training summaries; every leaf has leading axis N (the grid)."""
+
+    loss_first: jax.Array        # loss_good_workers at step 0
+    loss_final: jax.Array        # loss_good_workers at the last step
+    n_alive_final: jax.Array     # |good_T|
+    byz_alive_final: jax.Array   # last step's *instantaneous* Byzantine
+    #                              survivors (the trainer's byz_alive metric
+    #                              — under churn a reformed worker correctly
+    #                              staying alive does not count)
+    n_byz_ever: jax.Array        # |{workers ever Byzantine}|
+    ever_filtered_good: jax.Array  # did the filter ever drop an honest worker
+
+
+class TrainCampaignResult(NamedTuple):
+    stats: dict[str, TrainRunStats]  # variant name → stacked per-run stats
+    entries: list[dict]              # grid row metadata (scenario, α, seed)
+    wall_s: float                    # steady-state wall-clock of the one jit
+    compile_s: float                 # trace + compile overhead (AOT split)
+    n_runs: int                      # grid rows per variant
+    steps: int
+
+
+def build_train_campaign_fn(
+    model,
+    optimizer,
+    base_cfg: SolverConfig,
+    aggregators: Sequence[str],
+    *,
+    steps: int,
+    stream: SyntheticTokens,
+    per_worker_batch: int = 1,
+    backends: Sequence[str] | None = None,
+    V: float = 0.0,
+    D: float = 10.0,
+):
+    """The jittable (scenarios, alpha, seeds) → {variant: TrainRunStats}
+    function.  Adversary leaves are traced (constructed inside the vmapped
+    row from grid entries), so one trace covers every scenario/α/seed."""
+    cfgs = expand_variants(base_cfg, aggregators, backends)
+    W = base_cfg.m
+
+    def campaign(scenarios, alpha, seeds):
+        out = {}
+        for name, cfg in cfgs.items():  # static unroll — one trace total
+
+            def one(scn, a, seed, cfg=cfg):
+                adv = ScenarioAdversary(scenario=scn, alpha=a)
+                train_step = build_train_step(
+                    model, optimizer, cfg, V=V, D=D, adversary=adv
+                )
+                init_key, mask_key, loop_key = jax.random.split(
+                    jax.random.PRNGKey(seed), 3
+                )
+                state = init_train_state(model, optimizer, cfg, init_key,
+                                         V=V, D=D, adversary=adv)
+                rank = byz_rank(mask_key, W)
+
+                def body(st, i):
+                    batch = make_worker_batch(stream, W, per_worker_batch, i)
+                    st, m = train_step(
+                        st, batch, rank, jax.random.fold_in(loop_key, i)
+                    )
+                    return st, (m["loss_good_workers"], m["good_filtered"],
+                                m["byz_alive"])
+
+                st, (losses, goodf, byz_alive) = jax.lax.scan(
+                    body, state, jnp.arange(steps)
+                )
+                return TrainRunStats(
+                    loss_first=losses[0],
+                    loss_final=losses[-1],
+                    n_alive_final=st.prev_n_alive,
+                    byz_alive_final=byz_alive[-1].astype(jnp.int32),
+                    n_byz_ever=jnp.sum(st.ever_byz).astype(jnp.int32),
+                    ever_filtered_good=jnp.any(goodf > 0),
+                )
+
+            out[name] = jax.vmap(one)(scenarios, alpha, seeds)
+        return out
+
+    return campaign
+
+
+def run_train_campaign(
+    model,
+    optimizer,
+    base_cfg: SolverConfig,
+    grid: CampaignGrid,
+    *,
+    steps: int,
+    stream: SyntheticTokens,
+    per_worker_batch: int = 1,
+    aggregators: Sequence[str] = ("byzantine_sgd",),
+    backends: Sequence[str] | None = None,
+    V: float = 0.0,
+    D: float = 10.0,
+) -> TrainCampaignResult:
+    """Execute the training grid for every (aggregator × backend) variant
+    under one jit; compile and steady-state execution measured separately
+    via the AOT lowering split (same convention as
+    :func:`repro.scenarios.campaign.run_campaign`)."""
+    fn = jax.jit(build_train_campaign_fn(
+        model, optimizer, base_cfg, aggregators, steps=steps, stream=stream,
+        per_worker_batch=per_worker_batch, backends=backends, V=V, D=D,
+    ))
+    t0 = time.perf_counter()
+    compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
+    t1 = time.perf_counter()
+    out = jax.block_until_ready(compiled(grid.scenarios, grid.alpha, grid.seeds))
+    t2 = time.perf_counter()
+    return TrainCampaignResult(
+        stats=out,
+        entries=grid.entries,
+        wall_s=t2 - t1,
+        compile_s=t1 - t0,
+        n_runs=grid.n_runs,
+        steps=steps,
+    )
+
+
+def summarize_train_campaign(result: TrainCampaignResult,
+                             base_cfg: SolverConfig) -> dict:
+    """Reduce the stacked per-run stats into the ``BENCH_train.json``
+    campaign leaderboard: one row per (scenario, α, variant, seed-median)."""
+    import numpy as np
+
+    variants = sorted(result.stats)
+    groups: dict[tuple[str, float], list[int]] = {}
+    for i, e in enumerate(result.entries):
+        groups.setdefault((e["scenario"], e["alpha"]), []).append(i)
+
+    rows = []
+    for (scn, alpha), idx in sorted(groups.items()):
+        for name in variants:
+            st = result.stats[name]
+            rows.append({
+                "scenario": scn,
+                "alpha": alpha,
+                "variant": name,
+                "n_seeds": len(idx),
+                "loss_first_med": float(np.median(np.asarray(st.loss_first)[idx])),
+                "loss_final_med": float(np.median(np.asarray(st.loss_final)[idx])),
+                "n_alive_final_min": int(np.asarray(st.n_alive_final)[idx].min()),
+                "byz_alive_final_max": int(np.asarray(st.byz_alive_final)[idx].max()),
+                "n_byz_ever_max": int(np.asarray(st.n_byz_ever)[idx].max()),
+                "ever_filtered_good": bool(
+                    np.asarray(st.ever_filtered_good)[idx].any()
+                ),
+            })
+    return {
+        "config": {"m": base_cfg.m, "steps": result.steps},
+        "variants": variants,
+        "n_runs_per_variant": result.n_runs,
+        "wall_clock": {"batched_s": result.wall_s,
+                       "compile_s": result.compile_s,
+                       "runs_total": result.n_runs * len(variants)},
+        "leaderboard": rows,
+    }

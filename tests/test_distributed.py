@@ -1,11 +1,12 @@
 """Distributed guard + trainer: exact vs sketch agreement, attack filtering,
-baseline aggregators at the tree level, spec builders."""
+the unified flat-view trainer (DESIGN.md §10), spec builders."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.solver import SolverConfig
 from repro.distributed.byzantine_dp import (
     DPGuardConfig,
     apply_tree_attack,
@@ -17,9 +18,9 @@ from repro.distributed.byzantine_dp import (
     worker_vdot,
 )
 from repro.distributed.trainer import (
-    aggregate_baseline,
     build_train_step,
     init_train_state,
+    rank_from_mask,
 )
 from repro.models import build_model
 from repro.optim import adamw, sgd
@@ -79,23 +80,43 @@ class TestTreeAttacks:
         assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(g)
 
 
-class TestBaselineAggregators:
-    def test_mean(self, rng):
+class TestUnifiedBaselineAggregators:
+    """Stateless baselines now ride the same flat view as the solver
+    (``make_aggregator`` on the ravelled (W, d) gradients) — the tree-level
+    ``aggregate_baseline`` with its hard-coded ``W // 4`` Byzantine count is
+    gone.  Checked through the core aggregators on the ravelled trees."""
+
+    def _flat(self, g):
+        from repro.core.tree_harness import TreeHarness
+
+        h = TreeHarness(jax.tree_util.tree_map(lambda l: l[0], g))
+        return h, h.ravel_workers(g)
+
+    def test_mean_on_ravelled_tree(self, rng):
+        from repro.core.aggregators import aggregate_mean
+
         g = tree_of(rng, 5)
-        out = aggregate_baseline("mean", g, 1)
+        h, flat = self._flat(g)
+        out = h.unravel(aggregate_mean(flat))
         np.testing.assert_allclose(out["a"], jnp.mean(g["a"], 0), rtol=1e-6)
 
-    def test_krum_selects_single_worker(self, rng):
+    def test_krum_avoids_outlier_on_ravelled_tree(self, rng):
+        from repro.core.aggregators import aggregate_krum
+
         g = tree_of(rng, 6, scale=0.1)
         g["a"] = g["a"].at[2].add(100.0)   # outlier worker 2
-        out = aggregate_baseline("krum", g, 1)
+        h, flat = self._flat(g)
+        out = h.unravel(aggregate_krum(flat, n_byzantine=1))
         dists = [float(jnp.sum(jnp.abs(out["a"] - g["a"][i]))) for i in range(6)]
         assert np.argmin(dists) != 2
 
-    def test_trimmed_mean_robust(self, rng):
+    def test_trimmed_mean_robust_on_ravelled_tree(self, rng):
+        from repro.core.aggregators import aggregate_trimmed_mean
+
         g = tree_of(rng, 8, scale=0.1)
         g["a"] = g["a"].at[0].set(1e6)
-        out = aggregate_baseline("trimmed_mean", g, 2)
+        h, flat = self._flat(g)
+        out = h.unravel(aggregate_trimmed_mean(flat, trim_fraction=0.25))
         assert float(jnp.max(jnp.abs(out["a"]))) < 10.0
 
 
@@ -194,15 +215,18 @@ class TestTrainerIntegration:
         from repro.data.synthetic import SyntheticTokens, make_worker_batch
         stream = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32)
         W = 8
-        byz = jnp.arange(W) < 2
+        rank = rank_from_mask(jnp.arange(W) < 2)
         losses = {}
         for agg in ["byzantine_sgd", "mean"]:
-            dp = DPGuardConfig(n_workers=W, T=40, mode="exact", auto_v=True)
+            scfg = SolverConfig(m=W, T=40, eta=3e-3, alpha=0.25,
+                                aggregator=agg, attack="sign_flip",
+                                mean_over_alive=True,
+                                guard_backend="dp_exact")
             opt = adamw(3e-3, grad_clip=1.0)
-            ts = jax.jit(build_train_step(model, opt, dp, aggregator=agg, attack="sign_flip"))
-            state = init_train_state(model, opt, dp, rng)
+            ts = jax.jit(build_train_step(model, opt, scfg))
+            state = init_train_state(model, opt, scfg, rng)
             for i in range(40):
                 batch = make_worker_batch(stream, W, 2, jnp.asarray(i))
-                state, m = ts(state, batch, byz, jax.random.fold_in(rng, i))
+                state, m = ts(state, batch, rank, jax.random.fold_in(rng, i))
             losses[agg] = float(m["loss_good_workers"])
         assert losses["byzantine_sgd"] < losses["mean"] - 0.05

@@ -3,10 +3,13 @@
 The headline claim, at LM scale: training with ByzantineSGD aggregation
 under attack (α = 1/4 sign-flipping workers) converges like clean training,
 while naive mean aggregation degrades; the guard identifies exactly the
-Byzantine workers and never drops an honest one.
+Byzantine workers and never drops an honest one.  The guard is selected
+through the unified backend axis (``guard_backend``, DESIGN.md §9/§10) and
+the step loop is the chunked ``lax.scan`` driver.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.launch.train import run_training
@@ -17,7 +20,8 @@ def test_e2e_guard_filters_and_learns():
     state, hist = run_training(
         "internlm2-1.8b", reduced=True, workers=8, per_worker_batch=2,
         seq_len=64, steps=40, alpha=0.25, attack="sign_flip",
-        aggregator="byzantine_sgd", guard_mode="exact", lr=3e-3, d_model=128,
+        aggregator="byzantine_sgd", guard_backend="dp_exact", lr=3e-3,
+        d_model=128,
     )
     first, last = hist[0], hist[-1]
     assert last["loss_good_workers"] < first["loss_good_workers"]
@@ -33,7 +37,8 @@ def test_e2e_label_flip_data_poisoning():
     state, hist = run_training(
         "internlm2-1.8b", reduced=True, workers=8, per_worker_batch=2,
         seq_len=64, steps=50, alpha=0.25, attack="label_flip",
-        aggregator="byzantine_sgd", guard_mode="exact", lr=3e-3, d_model=128,
+        aggregator="byzantine_sgd", guard_backend="dp_exact", lr=3e-3,
+        d_model=128,
     )
     assert hist[-1]["loss_good_workers"] < hist[0]["loss_good_workers"]
     assert all(int(h["good_filtered"]) == 0 for h in hist)
@@ -44,11 +49,46 @@ def test_e2e_sketch_mode_on_moe():
     """Scalable sketch guard on an MoE arch (expert-parallel gradients)."""
     state, hist = run_training(
         "deepseek-v2-lite-16b", reduced=True, workers=8, per_worker_batch=1,
-        seq_len=64, steps=30, alpha=0.25, attack="noise",
-        aggregator="byzantine_sgd", guard_mode="sketch", lr=3e-3, d_model=128,
+        seq_len=64, steps=30, alpha=0.25, attack="random_gaussian",
+        aggregator="byzantine_sgd", guard_backend="dp_sketch", lr=3e-3,
+        d_model=128,
     )
     assert hist[-1]["loss_good_workers"] < hist[0]["loss_good_workers"]
     assert int(hist[-1]["byz_alive"]) == 0
+
+
+@pytest.mark.slow
+def test_e2e_scenario_churn_in_training():
+    """The Remark-2.3 scenario engine drives LM training: under churn the
+    Byzantine identity rotates mid-run and the ever-Byzantine count exceeds
+    the instantaneous one, with no honest worker filtered."""
+    state, hist = run_training(
+        "mamba2-130m", reduced=True, workers=8, per_worker_batch=1,
+        seq_len=32, steps=30, alpha=0.25, attack="sign_flip",
+        aggregator="byzantine_sgd", guard_backend="dp_exact",
+        scenario="churn", lr=3e-3, d_model=64,
+    )
+    assert int(state.ever_byz.sum()) > int(hist[0]["n_byz"])
+    assert all(int(h["good_filtered"]) == 0 for h in hist)
+
+
+@pytest.mark.slow
+def test_e2e_resume_equals_uninterrupted(tmp_path):
+    """Full-TrainState checkpointing through the real launcher: a run
+    stopped at step 10 of 20 and resumed matches the uninterrupted run
+    bit-for-bit."""
+    kw = dict(reduced=True, workers=4, per_worker_batch=1, seq_len=16,
+              steps=20, alpha=0.25, attack="sign_flip",
+              guard_backend="dp_sketch", d_model=64, log_every=5)
+    s_full, _ = run_training("mamba2-130m", **kw)
+    ck = str(tmp_path / "ck")
+    run_training("mamba2-130m", stop_after=10, ckpt_dir=ck, **kw)
+    s_resumed, _ = run_training("mamba2-130m", ckpt_dir=ck, resume=True, **kw)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(s_full.params),
+                      jax.tree_util.tree_leaves(s_resumed.params)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_array_equal(np.asarray(s_full.guard.B),
+                                  np.asarray(s_resumed.guard.B))
 
 
 @pytest.mark.slow

@@ -1,0 +1,285 @@
+"""Tree harness (DESIGN.md §10): ravel/unravel round-trips, flat-vs-pytree
+parity through the *trainer*, unified baselines, scenario adversaries in
+training, and full-TrainState checkpoint resume.
+
+The parity contract is the PR's acceptance bar: a single-leaf ``(d,)``
+pytree problem driven through ``build_train_step`` — the tree harness, the
+shared ``make_aggregator``, the flat attack zoo, the projected optimizer —
+must reproduce ``run_sgd``'s filter decisions exactly and its iterates to
+1e-5, for the ``dense``, ``fused`` and ``dp_exact(auto_v=False)`` guard
+backends.  The trainer and the convex harness share every aggregation line
+of code; what the test pins is the adapter (ravel/unravel + key plumbing).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.solver import (
+    SolverConfig,
+    byz_rank,
+    ceil_byzantine_count,
+    run_sgd,
+)
+from repro.core.tree_harness import FlatSpec, TreeHarness, VectorModel
+from repro.data.problems import make_quadratic_problem
+from repro.distributed.trainer import (
+    TrainState,
+    build_train_step,
+    init_train_state,
+    rank_from_mask,
+)
+from repro.optim.optimizers import projected_sgd, sgd
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=1)
+
+
+def _tree(rng, W=None, seed_shift=0):
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(rng, seed_shift), 3)
+    lead = (W,) if W is not None else ()
+    return {
+        "a": jax.random.normal(k1, lead + (3, 5)),
+        "b": {"c": jax.random.normal(k2, lead + (17,)),
+              "d": jax.random.normal(k3, lead + (2, 2, 2)).astype(jnp.bfloat16)},
+    }
+
+
+class TestRavelUnravel:
+    @pytest.mark.parametrize("pad_to", [1, 8, 128])
+    def test_round_trip_multi_leaf(self, rng, pad_to):
+        t = _tree(rng)
+        h = TreeHarness(t, pad_to=pad_to)
+        assert h.d_raw == 15 + 17 + 8
+        assert h.d % pad_to == 0 and h.d >= h.d_raw
+        back = h.unravel(h.ravel(t))
+        assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(t)
+        for l1, l2 in zip(jax.tree_util.tree_leaves(t),
+                          jax.tree_util.tree_leaves(back)):
+            assert l1.dtype == l2.dtype
+            np.testing.assert_allclose(
+                np.asarray(l1, np.float32), np.asarray(l2, np.float32),
+                rtol=1e-6, atol=1e-6,
+            )
+
+    def test_round_trip_property_random_trees(self, rng):
+        """Round-trip over a family of random multi-leaf trees (shapes and
+        nesting vary per draw) — the property-test form of the contract."""
+        for i in range(10):
+            key = jax.random.fold_in(rng, 100 + i)
+            ks = jax.random.split(key, 3)
+            shapes = [tuple(int(s) for s in np.random.default_rng(i).integers(1, 5, size=n))
+                      for n in (1, 2, 3)]
+            t = [{"x": jax.random.normal(ks[j], shapes[j])} for j in range(3)]
+            h = TreeHarness(t)
+            back = h.unravel(h.ravel(t))
+            for l1, l2 in zip(jax.tree_util.tree_leaves(t),
+                              jax.tree_util.tree_leaves(back)):
+                np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_ravel_workers_matches_per_worker_ravel(self, rng):
+        W = 5
+        t = _tree(rng, W=W)
+        h = TreeHarness(jax.tree_util.tree_map(lambda l: l[0], t))
+        flat = h.ravel_workers(t)
+        assert flat.shape == (W, h.d)
+        for w in range(W):
+            row = h.ravel(jax.tree_util.tree_map(lambda l: l[w], t))
+            np.testing.assert_array_equal(np.asarray(flat[w]), np.asarray(row))
+
+    def test_padding_is_zero(self, rng):
+        t = _tree(rng)
+        h = TreeHarness(t, pad_to=128)
+        flat = h.ravel(t)
+        np.testing.assert_array_equal(np.asarray(flat[h.d_raw:]), 0.0)
+
+    def test_rank_from_mask_round_trip(self):
+        mask = jnp.asarray([False, True, False, True, False])
+        rank = rank_from_mask(mask)
+        np.testing.assert_array_equal(
+            np.asarray(rank < int(mask.sum())), np.asarray(mask)
+        )
+
+
+def _drive_trainer(problem, cfg, key0, T, *, V=None, D=None, adversary=None):
+    """Run the trainer on ``VectorModel(problem)`` with run_sgd's *exact*
+    key chain: same mask key, same per-step (gkey → worker noise, akey)
+    splits, so the two paths see identical gradients and attack draws."""
+    model = VectorModel(problem)
+    opt = projected_sgd(cfg.eta, {"x": problem.x1}, problem.D)
+    V = problem.V if V is None else V
+    D = problem.D if D is None else D
+    ts = jax.jit(build_train_step(model, opt, cfg, V=V, D=D,
+                                  adversary=adversary))
+    state = init_train_state(model, opt, cfg, jax.random.PRNGKey(0),
+                             V=V, D=D, adversary=adversary)
+    key, mask_key = jax.random.split(key0)
+    rank = byz_rank(mask_key, cfg.m)
+    zero = jnp.zeros((problem.d,))
+    g0 = problem.grad(zero)
+    rng = key
+    n_alive = []
+    for _ in range(T):
+        rng, gkey, akey = jax.random.split(rng, 3)
+        wk = jax.random.split(gkey, cfg.m)
+        noise = jax.vmap(lambda kk: problem.stoch_grad(kk, zero) - g0)(wk)
+        state, metrics = ts(state, {"noise": noise[:, None, :]}, rank, akey)
+        n_alive.append(int(metrics["n_alive"]))
+    return state, jnp.asarray(n_alive)
+
+
+class TestFlatVsPytreeParity:
+    @pytest.mark.parametrize("backend,gopts", [
+        ("dense", ()),
+        ("fused", ()),
+        ("dp_exact", (("auto_v", False),)),
+    ])
+    def test_trainer_reproduces_run_sgd(self, quad, backend, gopts):
+        cfg = SolverConfig(m=8, T=25, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           guard_backend=backend, guard_opts=gopts)
+        key0 = jax.random.PRNGKey(5)
+        res = run_sgd(quad, cfg, key0)
+        state, n_alive = _drive_trainer(quad, cfg, key0, cfg.T)
+        np.testing.assert_array_equal(np.asarray(n_alive),
+                                      np.asarray(res.n_alive))
+        np.testing.assert_array_equal(np.asarray(state.prev_alive),
+                                      np.asarray(res.final_alive))
+        # x_T through 25 filtered+projected steps — ξ parity to 1e-5
+        np.testing.assert_allclose(np.asarray(state.params["x"]),
+                                   np.asarray(res.x_final),
+                                   rtol=1e-5, atol=1e-6)
+        # last ξ round-trips through the harness padding
+        assert state.prev_xi.shape[0] % 128 == 0
+        np.testing.assert_array_equal(np.asarray(state.prev_xi[quad.d:]), 0.0)
+
+    def test_trainer_reproduces_run_sgd_with_adversary(self, quad):
+        """Scenario path: same parity through the adversary runtime (static
+        sign_flip scenario ≡ the zoo attack, per the PR-2 equivalence)."""
+        from repro.scenarios import ScenarioAdversary, scenario_static
+
+        cfg = SolverConfig(m=8, T=20, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           guard_backend="dense")
+        adv = ScenarioAdversary(scenario=scenario_static("sign_flip"),
+                                alpha=jnp.float32(cfg.alpha))
+        key0 = jax.random.PRNGKey(9)
+        res = run_sgd(quad, cfg, key0, adversary=adv)
+        state, n_alive = _drive_trainer(quad, cfg, key0, cfg.T, adversary=adv)
+        np.testing.assert_array_equal(np.asarray(n_alive),
+                                      np.asarray(res.n_alive))
+        np.testing.assert_allclose(np.asarray(state.params["x"]),
+                                   np.asarray(res.x_final),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestUnifiedBaselines:
+    def test_trainer_mean_matches_flat_mean(self, quad):
+        cfg = SolverConfig(m=6, T=4, eta=0.05, alpha=0.0,
+                           aggregator="mean", attack="none")
+        model = VectorModel(quad)
+        opt = sgd(cfg.eta)
+        ts = jax.jit(build_train_step(model, opt, cfg, V=quad.V, D=quad.D))
+        state = init_train_state(model, opt, cfg, jax.random.PRNGKey(0),
+                                 V=quad.V, D=quad.D)
+        noise = jax.random.normal(jax.random.PRNGKey(1), (cfg.m, quad.d))
+        x0 = state.params["x"]
+        state, _ = ts(state, {"noise": noise[:, None, :]},
+                      jnp.full((cfg.m,), cfg.m, jnp.int32),
+                      jax.random.PRNGKey(2))
+        xi = jnp.mean(quad.grad(x0)[None, :] + noise, axis=0)
+        np.testing.assert_allclose(np.asarray(state.params["x"]),
+                                   np.asarray(x0 - cfg.eta * xi),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_trainer_krum_f_uses_ceil_convention(self):
+        """The old trainer hard-coded n_byzantine = W//4; the unified path
+        sizes Krum's f by ⌈αm⌉ (shared helper) — at m=10, α=0.25 that is
+        3, not 2."""
+        cfg = SolverConfig(m=10, T=5, eta=0.05, alpha=0.25,
+                           aggregator="krum", attack="sign_flip")
+        assert cfg.krum_f_default == ceil_byzantine_count(0.25, 10) == 3
+
+    def test_dense_backend_requires_v(self, quad):
+        cfg = SolverConfig(m=4, T=4, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", guard_backend="dense")
+        model = VectorModel(quad)
+        with pytest.raises(ValueError, match="auto-V"):
+            build_train_step(model, sgd(0.05), cfg, V=0.0)
+
+
+class TestScenarioInTrainer:
+    def test_churn_rotates_byzantine_identity(self, quad):
+        """Per-step masks from the scenario schedule: with churn, the
+        ever-Byzantine set must grow past the instantaneous count."""
+        from repro.scenarios import ScenarioAdversary, scenario_churn
+
+        cfg = SolverConfig(m=8, T=12, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           guard_backend="dp_exact",
+                           guard_opts=(("auto_v", False),))
+        adv = ScenarioAdversary(
+            scenario=scenario_churn("sign_flip", period=4, stride=2),
+            alpha=jnp.float32(cfg.alpha),
+        )
+        state, _ = _drive_trainer(quad, cfg, jax.random.PRNGKey(3), cfg.T,
+                                  adversary=adv)
+        assert int(state.ever_byz.sum()) > cfg.n_byzantine
+
+    def test_adaptive_adversary_updates_state(self, quad):
+        from repro.scenarios import ScenarioAdversary, scenario_adaptive
+
+        cfg = SolverConfig(m=8, T=10, eta=0.05, alpha=0.25,
+                           aggregator="mean", attack="inner_product")
+        adv = ScenarioAdversary(
+            scenario=scenario_adaptive("inner_product", adapt_rate=0.5),
+            alpha=jnp.float32(cfg.alpha),
+        )
+        state, _ = _drive_trainer(quad, cfg, jax.random.PRNGKey(4), cfg.T,
+                                  adversary=adv)
+        # against plain mean the magnitude search must have escalated
+        assert float(state.adv.adapt_scale) != 1.0
+
+
+class TestCheckpointResume:
+    def test_resume_equals_uninterrupted(self, quad, tmp_path):
+        """Full-TrainState checkpoint: save at step 6 of 12, restore into a
+        fresh template, continue — bit-identical to the uninterrupted run
+        (params AND optimizer moments AND guard martingales AND feedback)."""
+        from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+        cfg = SolverConfig(m=8, T=12, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           guard_backend="dp_exact")
+        model = VectorModel(quad)
+        opt = projected_sgd(cfg.eta, {"x": quad.x1}, quad.D)
+        ts = jax.jit(build_train_step(model, opt, cfg, V=quad.V, D=quad.D))
+
+        def batch_and_key(i):
+            kk = jax.random.fold_in(jax.random.PRNGKey(7), i)
+            noise = jax.random.normal(kk, (cfg.m, quad.d))
+            return {"noise": noise[:, None, :]}, jax.random.fold_in(kk, 1)
+
+        rank = jnp.arange(cfg.m, dtype=jnp.int32)
+
+        def run(state, lo, hi):
+            for i in range(lo, hi):
+                b, k = batch_and_key(i)
+                state, _ = ts(state, b, rank, k)
+            return state
+
+        s_full = run(init_train_state(model, opt, cfg, jax.random.PRNGKey(0),
+                                      V=quad.V, D=quad.D), 0, 12)
+        s_half = run(init_train_state(model, opt, cfg, jax.random.PRNGKey(0),
+                                      V=quad.V, D=quad.D), 0, 6)
+        save_checkpoint(str(tmp_path), 6, s_half)
+        template = init_train_state(model, opt, cfg, jax.random.PRNGKey(0),
+                                    V=quad.V, D=quad.D)
+        restored, step = restore_checkpoint(str(tmp_path), template)
+        assert step == 6 and int(restored.step) == 6
+        s_resumed = run(restored, 6, 12)
+        for l1, l2 in zip(jax.tree_util.tree_leaves(s_full),
+                          jax.tree_util.tree_leaves(s_resumed)):
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
