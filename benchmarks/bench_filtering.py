@@ -2,9 +2,11 @@
 good-worker false-positive rate, and the hidden-shift damage bound.
 
 Also benchmarks the guard *pipeline* itself: the dense three-pass reference
-vs the fused one-pass Pallas path (DESIGN.md §5), recording the analytic
-bytes-moved model from :mod:`repro.roofline.guard_cost` plus measured
-wall-clock and dense/fused agreement into ``BENCH_filtering.json``.
+vs the fused one-pass Pallas path (DESIGN.md §5), at **both statistics
+precisions** of the ``stats_dtype`` axis (§5 Numerics) — recording the
+analytic bytes-moved model from :mod:`repro.roofline.guard_cost`, measured
+wall-clock, dense/fused agreement per dtype, and the bf16-vs-f32 filter-
+decision agreement into ``BENCH_filtering.json``.
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
 from repro.core.solver import SolverConfig, run_sgd
 from repro.data.problems import make_quadratic_problem
 from repro.kernels import ops
-from repro.roofline.guard_cost import dense_guard_cost, fused_guard_cost
+from repro.roofline.guard_cost import backend_cost, stats_elem_bytes
 
 
 def bench_detection_latency() -> None:
@@ -44,7 +46,8 @@ def bench_detection_latency() -> None:
 def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
                          d_block: int | None = None,
                          out_path: str = "BENCH_filtering.json") -> dict:
-    """Dense vs fused guard step at the ISSUE's headline shape.
+    """Dense vs fused guard step at the ISSUE's headline shape, at both
+    statistics precisions (f32 and bf16 — ``SolverConfig.stats_dtype``).
 
     Bytes-moved comes from the roofline model (the quantity that predicts
     TPU wall-clock — the guard is memory-bound); wall-clock is measured on
@@ -57,68 +60,109 @@ def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
     """
     if d_block is None:
         d_block = (1 << 16) if ops.interpret_mode() else 2048
-    cfg = GuardConfig(m=m, T=1000, V=1.0, D=10.0)
-    dense = ByzantineGuard(cfg)
-    fused = ByzantineGuard(cfg, use_fused=True, d_block=d_block)
+    # V matched to the i.i.d.-normal worker data (‖g_i − g_j‖ ≈ √(2d)): the
+    # filter keeps honest workers, so the recorded good_k / ξ agreement
+    # compares *live* decisions rather than the everyone-filtered
+    # degenerate state a V=1 guard collapses to at this d
+    cfg = GuardConfig(m=m, T=1000, V=float(np.sqrt(2.0 * d)), D=10.0)
 
     key = jax.random.PRNGKey(0)
     k1, k2, k3 = jax.random.split(key, 3)
     grads = jax.random.normal(k1, (m, d), jnp.float32)
     x1 = jnp.zeros((d,), jnp.float32)
     xk = 0.01 * jax.random.normal(k2, (d,), jnp.float32)
-    # one burn-in step so B ≠ 0 and the incremental Gram path is exercised
-    state_d = dense.step(dense.init(d), grads, xk, x1)[0]
-    state_f = fused.step(fused.init(d), grads, xk, x1)[0]
     grads2 = jax.random.normal(k3, (m, d), jnp.float32)
 
-    dense_step = jax.jit(dense.step)
-    fused_step = jax.jit(fused.step)
-    t_dense = time_fn(dense_step, state_d, grads2, xk, x1, warmup=1, iters=iters)
-    t_fused = time_fn(fused_step, state_f, grads2, xk, x1, warmup=1, iters=iters)
+    per_dtype: dict[str, dict] = {}
+    fused_alive: dict[str, jax.Array] = {}
+    fused_xi: dict[str, jax.Array] = {}
+    for sdt in ("f32", "bf16"):
+        dense = ByzantineGuard(cfg, stats_dtype=sdt)
+        fused = ByzantineGuard(cfg, use_fused=True, d_block=d_block,
+                               stats_dtype=sdt)
+        # one burn-in step so B ≠ 0 and the incremental Gram is exercised
+        state_d = dense.step(dense.init(d), grads, xk, x1)[0]
+        state_f = fused.step(fused.init(d), grads, xk, x1)[0]
 
-    # agreement of the two paths on identical inputs (the oracle contract)
-    sd, xi_d, _ = jax.block_until_ready(dense_step(state_d, grads2, xk, x1))
-    sf, xi_f, _ = jax.block_until_ready(fused_step(state_f, grads2, xk, x1))
-    gb_err = float(jnp.linalg.norm(sf.gram_B - sd.gram_B)
-                   / jnp.maximum(jnp.linalg.norm(sd.gram_B), 1e-12))
-    xi_err = float(jnp.max(jnp.abs(xi_f - xi_d)))
-    good_eq = bool(jnp.all(sf.alive == sd.alive))
+        dense_step = jax.jit(dense.step)
+        fused_step = jax.jit(fused.step)
+        t_dense = time_fn(dense_step, state_d, grads2, xk, x1,
+                          warmup=1, iters=iters)
+        t_fused = time_fn(fused_step, state_f, grads2, xk, x1,
+                          warmup=1, iters=iters)
 
-    cd, cf = dense_guard_cost(m, d), fused_guard_cost(m, d)
+        # agreement of the two paths on identical inputs (the oracle
+        # contract, per stats dtype)
+        sd, xi_d, _ = jax.block_until_ready(dense_step(state_d, grads2, xk, x1))
+        sf, xi_f, _ = jax.block_until_ready(fused_step(state_f, grads2, xk, x1))
+        fused_alive[sdt], fused_xi[sdt] = sf.alive, xi_f
+        gb_err = float(jnp.linalg.norm(sf.gram_B - sd.gram_B)
+                       / jnp.maximum(jnp.linalg.norm(sd.gram_B), 1e-12))
+        xi_err = float(jnp.max(jnp.abs(xi_f - xi_d)))
+        good_eq = bool(jnp.all(sf.alive == sd.alive))
+
+        cd = backend_cost("dense", m, d, sdt)
+        cf = backend_cost("fused", m, d, sdt)
+        per_dtype[sdt] = {
+            "elem_bytes": stats_elem_bytes(sdt),
+            # analytic HBM-traffic model (repro.roofline.guard_cost), NOT
+            # a measurement — the ratios follow from counting the passes
+            # each path makes over (m, d) data; wallclock_us below is what
+            # was actually measured on this backend
+            "bytes_moved_model": {
+                "source": "repro.roofline.guard_cost",
+                "dense": {"stats": cd.stats_bytes, "xi": cd.xi_bytes,
+                          "step": cd.step_bytes},
+                "fused": {"stats": cf.stats_bytes, "xi": cf.xi_bytes,
+                          "step": cf.step_bytes},
+                "stats_ratio": cd.stats_bytes / cf.stats_bytes,
+                "step_ratio": cd.step_bytes / cf.step_bytes,
+            },
+            "wallclock_us": {"dense": t_dense, "fused": t_fused},
+            "agreement": {"gram_B_rel_err": gb_err,
+                          "xi_max_abs_err": xi_err,
+                          "good_k_equal": good_eq,
+                          # visible guard against the all-filtered
+                          # degenerate state (where agreement is vacuous)
+                          "n_alive": int(jnp.sum(sf.alive))},
+        }
+        emit(f"filter/guard_step_dense_{sdt}", t_dense,
+             f"model_stats_bytes={cd.stats_bytes}")
+        emit(f"filter/guard_step_fused_{sdt}", t_fused,
+             f"model_stats_bytes={cf.stats_bytes},"
+             f"model_stats_ratio={cd.stats_bytes / cf.stats_bytes:.2f},"
+             f"model_step_ratio={cd.step_bytes / cf.step_bytes:.2f},"
+             f"interpret={ops.interpret_mode()}")
+
+    # the dtype axis headline (ISSUE 5): fused@bf16 must model ≤ 0.55× the
+    # fused@f32 statistics bytes, and the saved bytes must not change the
+    # filter's decisions on this step
+    f32_stats = per_dtype["f32"]["bytes_moved_model"]["fused"]["stats"]
+    bf16_stats = per_dtype["bf16"]["bytes_moved_model"]["fused"]["stats"]
+    xi_rel = float(
+        jnp.linalg.norm(fused_xi["bf16"].astype(jnp.float32) - fused_xi["f32"])
+        / jnp.maximum(jnp.linalg.norm(fused_xi["f32"]), 1e-12)
+    )
+    bf16_vs_f32 = {
+        "fused_stats_bytes_ratio_model": bf16_stats / f32_stats,
+        "good_k_equal": bool(jnp.all(fused_alive["bf16"] == fused_alive["f32"])),
+        "xi_rel_err": xi_rel,
+    }
     record = {
         "m": m,
         "d": d,
         "d_block": d_block,
-        "elem_bytes": 4,
         "backend": jax.default_backend(),
         "fused_runs_interpret": ops.interpret_mode(),
-        # analytic HBM-traffic model (repro.roofline.guard_cost), NOT a
-        # measurement — the ratios follow from counting the passes each
-        # path makes over (m, d) data; wallclock_us below is what was
-        # actually measured on this backend
-        "bytes_moved_model": {
-            "source": "repro.roofline.guard_cost",
-            "dense": {"stats": cd.stats_bytes, "xi": cd.xi_bytes,
-                      "step": cd.step_bytes},
-            "fused": {"stats": cf.stats_bytes, "xi": cf.xi_bytes,
-                      "step": cf.step_bytes},
-            "stats_ratio": cd.stats_bytes / cf.stats_bytes,
-            "step_ratio": cd.step_bytes / cf.step_bytes,
-        },
-        "wallclock_us": {"dense": t_dense, "fused": t_fused},
-        "agreement": {"gram_B_rel_err": gb_err, "xi_max_abs_err": xi_err,
-                      "good_k_equal": good_eq},
+        "stats_dtypes": per_dtype,
+        "bf16_vs_f32": bf16_vs_f32,
     }
     with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
-    r = record["bytes_moved_model"]
-    emit("filter/guard_step_dense", t_dense,
-         f"model_stats_bytes={cd.stats_bytes},out={out_path}")
-    emit("filter/guard_step_fused", t_fused,
-         f"model_stats_bytes={cf.stats_bytes},"
-         f"model_stats_ratio={r['stats_ratio']:.2f},"
-         f"model_step_ratio={r['step_ratio']:.2f},"
-         f"interpret={record['fused_runs_interpret']}")
+    emit("filter/stats_dtype_bf16_ratio",
+         bf16_vs_f32["fused_stats_bytes_ratio_model"],
+         f"good_k_equal={bf16_vs_f32['good_k_equal']},"
+         f"xi_rel_err={xi_rel:.2e},out={out_path}")
     return record
 
 

@@ -31,10 +31,11 @@ import argparse
 import jax
 
 from benchmarks.common import emit
+from repro.core.guard_backends import parse_backend_spec
 from repro.core.solver import SolverConfig
 from repro.data.problems import make_quadratic_problem
 from repro.kernels import ops
-from repro.roofline.guard_cost import BACKEND_COSTS, steady_state_us
+from repro.roofline.guard_cost import backend_cost, steady_state_us
 from repro.roofline.hw import TPU_V5E
 from repro.scenarios import (
     degraded_pairs,
@@ -54,12 +55,14 @@ AGGREGATORS = ["mean", "krum", "coordinate_median", "trimmed_mean",
                "geometric_median", "byzantine_sgd"]
 MATRIX_ATTACKS = ["none", "sign_flip", "random_gaussian", "alie",
                   "inner_product", "hidden_shift"]
-# the guard-backend sweep: dense oracle, fused Pallas pipeline, distributed
-# CountSketch guard (dp_exact is covered by the tier-1 parity tests; it
-# models collective savings, not local-traffic savings, so the leaderboard
-# sweeps the three local realizations)
-BACKENDS = ["dense", "fused", "dp_sketch"]
-MINI_BACKENDS = ["dense", "fused"]
+# the guard-backend sweep: dense oracle, fused Pallas pipeline at both
+# statistics precisions (DESIGN.md §5 Numerics — the bf16 row records the
+# accuracy cost of the halved guard traffic), distributed CountSketch
+# guard (dp_exact is covered by the tier-1 parity tests; it models
+# collective savings, not local-traffic savings, so the leaderboard
+# sweeps the local realizations)
+BACKENDS = ["dense", "fused", "fused@bf16", "dp_sketch"]
+MINI_BACKENDS = ["dense", "fused", "fused@bf16"]
 # headline shape of the DESIGN.md §5 roofline claim
 MODEL_SHAPE = {"m": 32, "d": 1 << 20}
 
@@ -163,11 +166,14 @@ def backend_axis_record(prob, cfg, grid, backends: list[str]) -> dict:
     for be in backends:
         timed = run_campaign(prob, cfg, grid, ["byzantine_sgd"],
                              backends=[be])
-        cost = BACKEND_COSTS[be](ms, ds)
+        name, sdt = parse_backend_spec(be)
+        cost = backend_cost(name, ms, ds, sdt or "f32")
         per_backend[be] = {
             "campaign_wall_s": timed.wall_s,
             "campaign_compile_s": timed.compile_s,
             "campaign_runs": timed.n_runs,
+            "stats_dtype": sdt or "f32",
+            "model_stats_bytes": cost.stats_bytes,
             "model_step_bytes": cost.step_bytes,
             "model_steady_state_us": steady_state_us(cost),
         }
@@ -188,6 +194,12 @@ def backend_axis_record(prob, cfg, grid, backends: list[str]) -> dict:
         rec["fused_le_dense_model"] = bool(
             per_backend["fused"]["model_steady_state_us"]
             <= per_backend["dense"]["model_steady_state_us"]
+        )
+    if "fused" in per_backend and "fused@bf16" in per_backend:
+        # the ISSUE-5 headline: bf16 statistics move ≤ 0.55x the f32 bytes
+        rec["bf16_stats_ratio_model"] = (
+            per_backend["fused@bf16"]["model_stats_bytes"]
+            / per_backend["fused"]["model_stats_bytes"]
         )
     return rec
 

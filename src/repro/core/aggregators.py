@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.byzantine_sgd import pairwise_sq_dists_from_gram
+from repro.kernels import ops
 
 
 def aggregate_mean(grads: jax.Array) -> jax.Array:
@@ -53,8 +54,14 @@ def aggregate_trimmed_mean(grads: jax.Array, trim_fraction: float = 0.1) -> jax.
 
 
 def _pairwise_sq_dists(grads: jax.Array) -> jax.Array:
-    g32 = grads.astype(jnp.float32)
-    return pairwise_sq_dists_from_gram(g32 @ g32.T)
+    # Gram through the tiled pairdist kernel (one MXU matmul per streamed
+    # strip, DESIGN.md §4) instead of re-forming the dense distance work
+    # inline — Krum/medoid share the guard's hot-spot kernel, so its
+    # O(m²d) Table-1 cost rides the same strip layout (and bf16 inputs
+    # stream at half the bytes, like every other kernel consumer)
+    return pairwise_sq_dists_from_gram(
+        ops.gram(grads, d_block=ops.default_d_block(grads.shape[1]))
+    )
 
 
 def aggregate_krum(grads: jax.Array, n_byzantine: int, multi_k: int = 1) -> jax.Array:

@@ -39,6 +39,22 @@ from repro.kernels import ops
 # configuration / state
 # ---------------------------------------------------------------------------
 
+# the statistics-precision axis (DESIGN.md §5 Numerics): storage dtype of
+# the streamed guard statistics (g strips, the B martingale).  All filter
+# *accumulation* (Grams, A, ξ) stays f32 regardless — bf16 only halves the
+# bytes each (m, d) pass moves, it never changes what is accumulated in.
+STATS_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def resolve_stats_dtype(name: str) -> jnp.dtype:
+    """``'f32' | 'bf16'`` → jnp dtype; typos fail loudly (config axis)."""
+    try:
+        return jnp.dtype(STATS_DTYPES[name])
+    except KeyError:
+        raise KeyError(
+            f"unknown stats_dtype {name!r}; have {sorted(STATS_DTYPES)}"
+        ) from None
+
 class GuardConfig(NamedTuple):
     """Static parameters of the filter.
 
@@ -91,8 +107,9 @@ class GuardState(NamedTuple):
     from quantities the fused kernel already produces.  The dense path
     recomputes it each step (and so doubles as the drift oracle)."""
 
-    A: jax.Array        # (m,)  scalar martingales
-    B: jax.Array        # (m, d) gradient-sum martingales (dense form)
+    A: jax.Array        # (m,)  scalar martingales (always f32)
+    B: jax.Array        # (m, d) gradient-sum martingales, stored in the
+    #                     guard's stats dtype (f32 | bf16 — DESIGN.md §5)
     alive: jax.Array    # (m,) bool — good_{k-1}
     k: jax.Array        # () int32 — iterations done
     gram_B: jax.Array   # (m, m) ⟨B_i, B_j⟩ — maintained incrementally
@@ -215,23 +232,39 @@ class ByzantineGuard:
     solver and campaign runner (:mod:`repro.core.guard_backends`,
     DESIGN.md §9) — select via ``SolverConfig.guard_backend`` instead of
     constructing a guard directly when driving ``run_sgd``.
+
+    ``stats_dtype`` (``'f32'`` | ``'bf16'``, DESIGN.md §5 Numerics) is the
+    *storage* dtype of the streamed statistics: gradients are rounded to
+    it once on entry, ``B`` lives in it across iterations, and the fused
+    kernel streams both as half-width strips — halving the step's HBM
+    traffic.  Accumulation (Grams, A, ξ) is always f32, so under bf16 the
+    only new rounding is the per-step input/``B``-store rounding; the
+    dense form re-derives ``gram_B`` from the stored ``B`` every step
+    (making it the bf16 drift oracle), while the fused form rank-updates
+    and re-derives every ``gram_resync_every`` steps to bound the
+    accumulated divergence between the incremental Gram and the rounded
+    ``B`` actually in memory.
     """
 
     def __init__(self, cfg: GuardConfig, use_fused: bool = False,
-                 d_block: int = 2048, gram_resync_every: int = 64):
+                 d_block: int = 2048, gram_resync_every: int = 64,
+                 stats_dtype: str = "f32"):
         self.cfg = cfg
         self.use_fused = use_fused
         self.d_block = d_block
         # fused path: every N-th step re-derive gram_B from B instead of
         # rank-updating, zeroing accumulated f32 rounding (0 disables);
-        # amortized cost is one extra B read per N steps
+        # amortized cost is one extra B read per N steps.  Under bf16
+        # stats the re-derivation also re-anchors the Gram to the rounded
+        # B in storage (the quantity the dense oracle uses).
         self.gram_resync_every = gram_resync_every
+        self.stats_dtype = resolve_stats_dtype(stats_dtype)
 
     def init(self, d: int) -> GuardState:
         m = self.cfg.m
         return GuardState(
             A=jnp.zeros((m,), jnp.float32),
-            B=jnp.zeros((m, d), jnp.float32),
+            B=jnp.zeros((m, d), self.stats_dtype),
             alive=jnp.ones((m,), bool),
             k=jnp.zeros((), jnp.int32),
             gram_B=jnp.zeros((m, m), jnp.float32),
@@ -246,12 +279,16 @@ class ByzantineGuard:
     ) -> tuple[GuardState, jax.Array, dict]:
         cfg = self.cfg
         m = cfg.m
-        grads = grads.astype(jnp.float32)
+        # the single entry rounding of the stats axis: everything streamed
+        # below (Grams, A, B update, ξ) reads these strips.  A no-op cast
+        # at f32; the one place bf16 precision is actually lost.
+        grads = grads.astype(self.stats_dtype)
         k = state.k + 1
-        delta = (x_k - x_1).astype(jnp.float32)
+        delta = (x_k - x_1).astype(self.stats_dtype)
 
         if self.use_fused:
             # one HBM sweep: both Grams' raw terms + A-increments + B
+            # (strips stream in stats dtype, accumulators f32)
             gram_g, cross, a_inc, B = ops.fused_guard(
                 grads, state.B, delta, d_block=self.d_block
             )
@@ -260,17 +297,21 @@ class ByzantineGuard:
             if self.gram_resync_every > 0:
                 gram_b = jax.lax.cond(
                     k % self.gram_resync_every == 0,
-                    lambda: B @ B.T,
+                    lambda: _gram32(B),
                     lambda: gram_b,
                 )
         else:
-            # line 5: accumulate the two martingales
-            A = state.A + grads @ delta
-            B = state.B + grads
+            # f32 views of the stored/rounded values — exact upcasts, so
+            # the dense path is the numerics oracle at either stats dtype
+            g32 = grads.astype(jnp.float32)
+            # line 5: accumulate the two martingales (A in f32; B stored
+            # back in the stats dtype, rounded once like the fused kernel)
+            A = state.A + g32 @ delta.astype(jnp.float32)
+            B = (state.B.astype(jnp.float32) + g32).astype(self.stats_dtype)
             # Gram matrices (the three independent O(m·d)/O(m²·d) passes
             # the fused pipeline replaces)
-            gram_b = B @ B.T
-            gram_g = grads @ grads.T
+            gram_b = _gram32(B)
+            gram_g = g32 @ g32.T
 
         good_k, diag = filter_update(A, gram_b, gram_g, state.alive, k, cfg)
 
@@ -283,7 +324,13 @@ class ByzantineGuard:
                 d_block=self.d_block,
             )
         else:
-            xi = (good_k.astype(jnp.float32) @ grads) / denom
+            xi = (good_k.astype(jnp.float32) @ grads.astype(jnp.float32)) / denom
 
         new_state = GuardState(A=A, B=B, alive=good_k, k=k, gram_B=gram_b)
         return new_state, xi, diag
+
+
+def _gram32(x: jax.Array) -> jax.Array:
+    """X Xᵀ with f32 accumulation from X's storage dtype (exact upcast)."""
+    x32 = x.astype(jnp.float32)
+    return x32 @ x32.T

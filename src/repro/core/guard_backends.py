@@ -50,6 +50,15 @@ backend declares raises ``KeyError`` — typos fail loudly, cross-backend
 knobs drop silently by design.  ``dp_exact`` with ``auto_v=False`` must
 match ``dense`` to float tolerance — that is the oracle contract
 ``tests/test_guard_backends.py`` pins end-to-end.
+
+**Statistics precision** rides ``SolverConfig.stats_dtype`` (``'f32'`` |
+``'bf16'``, DESIGN.md §5 Numerics) and is threaded through *every*
+factory: dense/fused store the B martingale (and stream the fused
+kernel's strips) in that dtype, and the ``dp_*`` backends map ``bf16``
+onto their ``low_precision_stats`` contraction path plus bf16 B storage.
+Campaign axes spell a combined (backend, precision) point as
+``"<backend>@<dtype>"`` (e.g. ``"fused@bf16"``) — parsed by
+:func:`parse_backend_spec`.
 """
 from __future__ import annotations
 
@@ -58,7 +67,8 @@ from typing import Callable
 
 import jax.numpy as jnp
 
-from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
+from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig, resolve_stats_dtype
+from repro.kernels.ops import default_d_block
 
 GuardBackendFactory = Callable  # (problem, cfg, **opts) -> (state0, step)
 
@@ -75,6 +85,18 @@ def register_guard_backend(name: str):
 
 def guard_backend_names() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def parse_backend_spec(spec: str) -> tuple[str, str | None]:
+    """``"fused@bf16"`` → ``("fused", "bf16")``; ``"fused"`` → ``("fused",
+    None)``.  The campaign/bench spelling for a (backend, stats-precision)
+    point; a dtype suffix is validated, the backend name is validated by
+    :func:`make_guard_backend` at instantiation."""
+    name, sep, dt = spec.partition("@")
+    if sep:
+        resolve_stats_dtype(dt)  # loud KeyError on typos (incl. 'fused@')
+        return name, dt
+    return name, None
 
 
 def _declared_opts(factory: GuardBackendFactory) -> set[str]:
@@ -101,6 +123,7 @@ def make_guard_backend(name: str, problem, cfg):
         raise KeyError(
             f"unknown guard backend {name!r}; have {guard_backend_names()}"
         ) from None
+    resolve_stats_dtype(cfg.stats_dtype)  # fail loudly before tracing
     opts = dict(cfg.guard_opts)
     known = set().union(*(_declared_opts(f) for f in _REGISTRY.values()))
     unknown = set(opts) - known
@@ -125,12 +148,6 @@ def _guard_config(problem, cfg) -> GuardConfig:
     )
 
 
-def _default_d_block(d: int) -> int:
-    # smallest lane-aligned strip covering d, capped at the kernel's
-    # VMEM-sized default — campaigns run at tiny d and should not pad to 2048
-    return max(128, min(2048, -(-d // 128) * 128))
-
-
 def _wrap_byzantine_guard(guard: ByzantineGuard, d: int):
     state0 = guard.init(d)
 
@@ -143,7 +160,12 @@ def _wrap_byzantine_guard(guard: ByzantineGuard, d: int):
 
 @register_guard_backend("dense")
 def _dense_backend(problem, cfg):
-    guard = ByzantineGuard(_guard_config(problem, cfg))
+    # three-pass reference; gram_B is re-derived from the stored B every
+    # step, which is what makes dense the drift oracle at either stats
+    # dtype (per-step re-derivation = gram_resync_every-style resync
+    # taken to its limit)
+    guard = ByzantineGuard(_guard_config(problem, cfg),
+                           stats_dtype=cfg.stats_dtype)
     return _wrap_byzantine_guard(guard, problem.d)
 
 
@@ -153,8 +175,9 @@ def _fused_backend(problem, cfg, d_block: int | None = None,
     guard = ByzantineGuard(
         _guard_config(problem, cfg),
         use_fused=True,
-        d_block=d_block if d_block is not None else _default_d_block(problem.d),
+        d_block=d_block if d_block is not None else default_d_block(problem.d),
         gram_resync_every=gram_resync_every,
+        stats_dtype=cfg.stats_dtype,
     )
     return _wrap_byzantine_guard(guard, problem.d)
 
@@ -175,6 +198,10 @@ def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
         init_guard_state,
     )
 
+    # stats_dtype='bf16' implies the low-precision contraction path (native
+    # dtype operands, f32 accumulation) on top of bf16 B storage — the two
+    # knobs named the same thing before this axis existed, so the legacy
+    # guard_opt stays as an alias
     dcfg = DPGuardConfig(
         n_workers=cfg.m, T=cfg.T, V=problem.V, D=problem.D, delta=cfg.delta,
         mode=mode, threshold_mode=cfg.threshold_mode,
@@ -182,7 +209,9 @@ def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
         sketch_dim=sketch_dim, sketch_slack=sketch_slack,
         incremental_gram=incremental_gram,
         gram_resync_every=gram_resync_every,
-        low_precision_stats=low_precision_stats, v_ema=v_ema,
+        low_precision_stats=low_precision_stats or cfg.stats_dtype == "bf16",
+        v_ema=v_ema,
+        stats_dtype=cfg.stats_dtype,
     )
     # flat harness: the "model" is the iterate itself, so params_like is a
     # single (d,) leaf and the stacked (m, d) gradients are a one-leaf
@@ -191,7 +220,11 @@ def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
 
     def step(state, grads, x, x1):
         state, xi, diag = guard_step(dcfg, state, grads, x, x1)
-        return state, xi, diag["n_alive"], state.alive
+        # ξ is an f32 accumulator output on the flat harness (the dense/
+        # fused convention; the solver's scan carries f32 feedback) — the
+        # pytree mesh path keeps gradient-dtype ξ, but here the low-
+        # precision einsum's grads-dtype result casts back up
+        return state, xi.astype(jnp.float32), diag["n_alive"], state.alive
 
     return state0, step
 

@@ -73,6 +73,11 @@ class SolverConfig(NamedTuple):
     guard_backend: str = "dense"  # byzantine_sgd realization (DESIGN.md §9):
     #                               'dense' | 'fused' | 'dp_exact' | 'dp_sketch'
     guard_opts: tuple = ()      # backend knobs as (key, value) pairs (hashable)
+    stats_dtype: str = "f32"    # storage dtype of the guard statistics
+    #                             ('f32' | 'bf16'): the precision axis of
+    #                             DESIGN.md §5 Numerics, threaded through
+    #                             every guard backend; bf16 halves the
+    #                             filter pipeline's HBM traffic
 
     @property
     def n_byzantine(self) -> int:

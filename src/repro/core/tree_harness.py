@@ -22,7 +22,10 @@ Three properties make the adapter exact rather than approximate:
 * **dtype discipline** — ravelling promotes to the widest leaf float dtype
   (f32 for the reduced configs; bf16 survives when every leaf is bf16, so
   the ``low_precision_stats`` lever still means something), and unravel
-  casts each slice back to its template leaf dtype.
+  casts each slice back to its template leaf dtype.  ``ravel*`` accept a
+  ``dtype`` override so the trainer can cast gradient trees *once at
+  ravel* into ``SolverConfig.stats_dtype`` — natively-bf16 LM gradients
+  reach a bf16-stats guard without an intermediate f32 copy.
 
 :class:`FlatSpec` duck-types the ``problem`` argument of the guard-backend
 factories (they read only ``d`` / ``V`` / ``D``), so
@@ -80,21 +83,29 @@ class TreeHarness:
 
     # -- tree → flat ---------------------------------------------------------
 
-    def ravel(self, tree: PyTree) -> jax.Array:
-        """(d,) flat view of a parameter-shaped tree (zero-padded)."""
+    def ravel(self, tree: PyTree, dtype: jnp.dtype | None = None) -> jax.Array:
+        """(d,) flat view of a parameter-shaped tree (zero-padded).
+
+        ``dtype`` overrides the promoted ``flat_dtype`` — the *cast-once-at-
+        ravel* hook of the ``stats_dtype`` axis (DESIGN.md §5 Numerics): the
+        trainer ravels gradient trees straight into the guard's statistics
+        dtype, so natively-bf16 LM gradients never pay an f32 inflation
+        pass just to be rounded back down by the guard."""
         leaves = jax.tree_util.tree_leaves(tree)
-        flat = jnp.concatenate(
-            [l.reshape(-1).astype(self.flat_dtype) for l in leaves]
-        )
+        dt = self.flat_dtype if dtype is None else dtype
+        flat = jnp.concatenate([l.reshape(-1).astype(dt) for l in leaves])
         pad = self.d - self.d_raw
         return jnp.pad(flat, (0, pad)) if pad else flat
 
-    def ravel_workers(self, tree: PyTree) -> jax.Array:
-        """(W, d) flat view of a worker-stacked tree (leaves lead with W)."""
+    def ravel_workers(self, tree: PyTree,
+                      dtype: jnp.dtype | None = None) -> jax.Array:
+        """(W, d) flat view of a worker-stacked tree (leaves lead with W);
+        ``dtype`` as in :meth:`ravel`."""
         leaves = jax.tree_util.tree_leaves(tree)
         W = leaves[0].shape[0]
+        dt = self.flat_dtype if dtype is None else dtype
         flat = jnp.concatenate(
-            [l.reshape(W, -1).astype(self.flat_dtype) for l in leaves], axis=1
+            [l.reshape(W, -1).astype(dt) for l in leaves], axis=1
         )
         pad = self.d - self.d_raw
         return jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat

@@ -65,6 +65,7 @@ from repro.core.byzantine_sgd import (
     counting_median_index,
     filter_update,
     pairwise_sq_dists_from_gram,
+    resolve_stats_dtype,
 )
 
 PyTree = Any
@@ -88,8 +89,15 @@ class DPGuardConfig(NamedTuple):
     # gradients for every statistic (simple, paper-faithful numerics);
     # True keeps gradients in their native dtype and accumulates in f32
     # inside the contractions (preferred_element_type) — no param-sized
-    # f32 temporaries, halved all-gather bytes.
+    # f32 temporaries, halved all-gather bytes.  The config axis
+    # ``SolverConfig.stats_dtype='bf16'`` sets this implicitly (the two
+    # knobs named the same lever before the axis existed).
     low_precision_stats: bool = False
+    # Storage dtype of the B martingale ('f32' | 'bf16' — the stats-
+    # precision axis of DESIGN.md §5 Numerics).  bf16 halves the guard's
+    # resident state and the bytes every B-side pass moves; the per-step
+    # rounding it introduces is bounded by gram_resync_every below.
+    stats_dtype: str = "f32"
     # Incremental B-Gram (exact mode; DESIGN.md §5): maintain ⟨B_i, B_j⟩
     # across steps via G_B += B gᵀ + g Bᵀ + g gᵀ instead of re-contracting
     # the full B pytree.  The cross term reuses the gradient all-gather the
@@ -114,7 +122,8 @@ class DPGuardConfig(NamedTuple):
 
 class DPGuardState(NamedTuple):
     A: jax.Array                 # (W,)
-    B: PyTree                    # sketch: (W, k); exact: pytree, leaves (W, *leaf)
+    B: PyTree                    # sketch: (W, k); exact: pytree, leaves
+    #                              (W, *leaf) — stored in cfg.stats_dtype
     alive: jax.Array             # (W,) bool
     k: jax.Array                 # () int32
     v_est: jax.Array             # () f32 — calibrated V (EMA)
@@ -137,6 +146,11 @@ def worker_vdot(ga: PyTree, gb: PyTree, low_precision: bool = False) -> jax.Arra
     def one(a, b):
         if not low_precision:
             a, b = _leaf_f32(a), _leaf_f32(b)
+        elif a.dtype != b.dtype:
+            # dot_general needs one dtype; round the broadcast operand
+            # (delta) down to the gradient dtype — the same rounding the
+            # dense stats path applies to its delta view
+            b = b.astype(a.dtype)
         if b.ndim == a.ndim - 1:
             b = b[None]
         W = a.shape[0]
@@ -241,11 +255,12 @@ def sketch_gram(s: jax.Array, sq_norms: jax.Array) -> jax.Array:
 
 def init_guard_state(cfg: DPGuardConfig, params_like: PyTree) -> DPGuardState:
     W = cfg.n_workers
+    sdt = resolve_stats_dtype(cfg.stats_dtype)
     if cfg.mode == "sketch":
-        B = jnp.zeros((W, cfg.sketch_dim), jnp.float32)
+        B = jnp.zeros((W, cfg.sketch_dim), sdt)
     else:
         B = jax.tree_util.tree_map(
-            lambda x: jnp.zeros((W, *x.shape), jnp.float32), params_like
+            lambda x: jnp.zeros((W, *x.shape), sdt), params_like
         )
     return DPGuardState(
         A=jnp.zeros((W,), jnp.float32),
@@ -299,6 +314,15 @@ def guard_step(
     W = cfg.n_workers
     k_new = state.k + 1
     lp = cfg.low_precision_stats
+    sdt = resolve_stats_dtype(cfg.stats_dtype)
+    if sdt != jnp.dtype(jnp.float32):
+        # the single entry rounding of the stats axis (same convention as
+        # the dense/fused guards): every statistic below — A, both Grams,
+        # the cross term, B, ξ — consumes the *rounded* gradients, so the
+        # incremental Gram tracks the same martingale the bf16 B storage
+        # actually accumulates (a no-op when the trainer already ravelled
+        # to bf16; f32 flat-harness inputs are rounded here)
+        grads_w = jax.tree_util.tree_map(lambda g: g.astype(sdt), grads_w)
 
     # --- martingale updates -------------------------------------------------
     if lp:
@@ -335,11 +359,25 @@ def guard_step(
             )
         sq_cent = worker_sq_norms(g_cent, lp)
         s_g = sketch_tree(g_cent, cfg.sketch_dim, lp)
-        B = state.B + s_g
+        # (W, k) sketch state: stored in the stats dtype, accumulated and
+        # contracted in f32 (the sketch is tiny — the cast is free)
+        B = (state.B.astype(jnp.float32) + s_g).astype(sdt)
         gram_g = sketch_gram(s_g, sq_cent)
-        gram_B = sketch_gram(B, jnp.sum(B * B, axis=-1))
+        B32 = B.astype(jnp.float32)
+        gram_B = sketch_gram(B32, jnp.sum(B32 * B32, axis=-1))
     else:
-        B = jax.tree_util.tree_map(lambda b, g: b + _leaf_f32(g), state.B, grads_w)
+        if lp:
+            # no param-sized f32 temporaries: native-dtype add, stored in
+            # the stats dtype (the one new rounding of the bf16 axis)
+            B = jax.tree_util.tree_map(
+                lambda b, g: (b + g.astype(b.dtype)).astype(sdt),
+                state.B, grads_w,
+            )
+        else:
+            B = jax.tree_util.tree_map(
+                lambda b, g: (_leaf_f32(b) + _leaf_f32(g)).astype(sdt),
+                state.B, grads_w,
+            )
         gram_g = worker_cross_gram(grads_w, lp)
         if cfg.incremental_gram:
             def _incremental():

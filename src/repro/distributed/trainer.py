@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attacks as attack_lib
+from repro.core.byzantine_sgd import resolve_stats_dtype
 from repro.core.solver import SolverConfig, make_aggregator
 from repro.core.tree_harness import FlatSpec, params_harness
 from repro.distributed.byzantine_dp import v_from_gram
@@ -90,8 +91,10 @@ def _estimate_v(flat: jax.Array) -> jax.Array:
     gradient rows — the guards' own :func:`v_from_gram` convention, so it is
     computable for every aggregator (the omniscient Remark-2.3 adversary can
     always measure the honest spread itself) and can never diverge from the
-    radius the auto-V guards enforce."""
-    return jnp.maximum(v_from_gram(flat @ flat.T), 1e-12)
+    radius the auto-V guards enforce.  Gram in f32 regardless of the flat
+    view's storage dtype — the V scale must not wobble with stats_dtype."""
+    f32 = flat.astype(jnp.float32)
+    return jnp.maximum(v_from_gram(f32 @ f32.T), 1e-12)
 
 
 def _validate(cfg: SolverConfig, V: float) -> None:
@@ -167,6 +170,15 @@ def build_train_step(
     harness = params_harness(model)
     spec = FlatSpec(harness.d, V, D)
     _, agg_step = make_aggregator(spec, cfg)
+    # cast-once-at-ravel (DESIGN.md §5 Numerics): gradient trees ravel
+    # straight into the guard's statistics dtype — natively-bf16 LM grads
+    # skip the f32 inflation pass entirely under stats_dtype='bf16'.
+    # Params/anchor keep the harness dtype: positions feed the optimizer,
+    # only the *statistics* ride the precision axis (the guard rounds its
+    # own view of delta internally).
+    stats_jdt = resolve_stats_dtype(cfg.stats_dtype)
+    grad_dtype = (stats_jdt if stats_jdt != jnp.dtype(jnp.float32)
+                  else harness.flat_dtype)
     if adversary is None:
         attack_fn = attack_lib.get_attack(cfg.attack)
         attack_kwargs = dict(cfg.attack_kwargs)
@@ -185,7 +197,7 @@ def build_train_step(
             return loss, g
 
         losses_w, grads_w = jax.vmap(per_worker)(batch)
-        flat = harness.ravel_workers(grads_w)          # (W, d) stacked view
+        flat = harness.ravel_workers(grads_w, dtype=grad_dtype)  # (W, d) view
         x = harness.ravel(state.params)
 
         if adversary is None:

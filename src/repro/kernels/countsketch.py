@@ -7,7 +7,10 @@ d_blk constrained to a multiple of k and an (m, k) resident output); the
 twist is that the sign pattern is *generated inside the kernel* from the
 global coordinate index (iota + block offset → multiplicative hash) —
 zero bytes of hash state ever touch HBM, so the stream runs at pure read
-bandwidth.
+bandwidth.  Strips stream in their storage dtype and are upcast to f32
+in VMEM (exact for bf16), so bf16 inputs — the ``stats_dtype`` axis of
+DESIGN.md §5 — halve the read traffic; the (m, k) sketch accumulates
+and returns f32.
 """
 from __future__ import annotations
 

@@ -13,15 +13,25 @@ over HBM; this kernel produces all four in a *single* grid pass — every
 Layout is the shared strip convention of :mod:`repro.kernels` (m padded
 to the next 8-sublane multiple) with two resident (m, m) accumulators
 and one resident (m,) accumulator alongside the streamed ``B`` output
-strip.  VMEM per step = 2·m·d_blk·4 (g + B in) + m·d_blk·4 (B out)
-+ 2·m²·4 + m·4 bytes ≈ 0.8 MB at m=32, d_blk=2048 — comfortably inside
-the double-buffered ~16 MB/core budget.
+strip.  With ``e = element bytes`` of the streamed strips, VMEM per step
+= 2·m·d_blk·e (g + B in) + m·d_blk·e (B out) + 2·m²·4 + m·4 bytes
+≈ 0.8 MB at m=32, d_blk=2048, e=4 — comfortably inside the
+double-buffered ~16 MB/core budget (and half that under bf16 strips).
 
-Roofline (DESIGN.md §5): HBM traffic drops from 6·m·d·4 bytes per guard
-step (dense: g read 3×, B read 2×, B written 1×) to 3·m·d·4 (g read 1×,
+Roofline (DESIGN.md §5): HBM traffic drops from 6·m·d·e bytes per guard
+step (dense: g read 3×, B read 2×, B written 1×) to 3·m·d·e (g read 1×,
 B read 1×, B written 1×) — a 2× reduction by the pass-count model in
 ``repro.roofline.guard_cost``, recorded alongside measured wall-clock by
 ``benchmarks/bench_filtering.py``.
+
+**Mixed-precision statistics** (``SolverConfig.stats_dtype``): the
+streamed strips may be bf16 — ``grads``/``B`` are read in their storage
+dtype and the new ``B`` strip is written back in ``B.dtype``, halving
+``e`` and therefore the whole sweep's HBM traffic.  Every accumulator
+(both Grams, the A-increments) stays f32: inputs are upcast *in VMEM*
+(bf16 → f32 is exact), so the contraction numerics are identical to an
+f32 sweep over the same bf16-rounded values and the only rounding the
+dtype axis introduces is the per-step ``B_new`` store.
 """
 from __future__ import annotations
 
@@ -54,7 +64,8 @@ def _fused_guard_kernel(g_ref, b_ref, delta_ref,
         b, g, contract, preferred_element_type=jnp.float32
     )
     a_inc_ref[...] += jnp.sum(g * dlt[None, :], axis=1)
-    b_new_ref[...] = b + g
+    # f32 add, rounded once on the store when the B strips are bf16
+    b_new_ref[...] = (b + g).astype(b_new_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
@@ -67,12 +78,14 @@ def fused_guard_pallas(
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One-pass guard statistics: ``(gram_g, cross, a_inc, B_new)`` with
 
-    * ``gram_g[i, j] = ⟨∇_i, ∇_j⟩``            (m, m)
-    * ``cross[i, j]  = ⟨B_{k-1,i}, ∇_j⟩``      (m, m)
-    * ``a_inc[i]     = ⟨∇_i, x_k − x_1⟩``      (m,)
-    * ``B_new        = B_{k-1} + ∇``           (m, d) f32
+    * ``gram_g[i, j] = ⟨∇_i, ∇_j⟩``            (m, m) f32
+    * ``cross[i, j]  = ⟨B_{k-1,i}, ∇_j⟩``      (m, m) f32
+    * ``a_inc[i]     = ⟨∇_i, x_k − x_1⟩``      (m,)   f32
+    * ``B_new        = B_{k-1} + ∇``           (m, d) in ``B.dtype``
 
-    matching :func:`repro.kernels.ref.fused_guard_ref`.  The caller folds
+    matching :func:`repro.kernels.ref.fused_guard_ref`.  ``B.dtype`` is
+    the statistics storage dtype (f32 or bf16 — the ``stats_dtype`` axis);
+    the f32 sum is rounded once on the ``B_new`` store.  The caller folds
     ``cross`` into the incremental Gram ``G_B^k = G_B^{k-1} + cross +
     crossᵀ + gram_g``.  Padding (m → ×8, d → ×d_block) is with zeros,
     which is exact for all four outputs.
@@ -107,7 +120,7 @@ def fused_guard_pallas(
             jax.ShapeDtypeStruct((mp, mp), jnp.float32),
             jax.ShapeDtypeStruct((mp, mp), jnp.float32),
             jax.ShapeDtypeStruct((mp,), jnp.float32),
-            jax.ShapeDtypeStruct((mp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((mp, dp), B.dtype),
         ],
         interpret=interpret,
     )(grads, B, delta)

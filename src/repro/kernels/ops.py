@@ -28,6 +28,13 @@ def interpret_mode() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def default_d_block(d: int) -> int:
+    """Smallest lane-aligned strip covering ``d``, capped at the kernels'
+    VMEM-sized default — callers at tiny d (campaign problems, Krum on the
+    flat harness) should not pad every strip to 2048."""
+    return max(128, min(2048, -(-d // 128) * 128))
+
+
 def gram(x: jax.Array, d_block: int = 2048) -> jax.Array:
     """(m, d) → (m, m) worker Gram matrix (see pairdist.py)."""
     return gram_pallas(x, d_block=d_block, interpret=interpret_mode())
@@ -52,7 +59,10 @@ def countsketch(x: jax.Array, k: int, salt: int = 0, d_block: int = 8192) -> jax
 def fused_guard(grads: jax.Array, B: jax.Array, delta: jax.Array,
                 d_block: int = 2048):
     """(m, d), (m, d), (d,) → (gram_g, cross, a_inc, B_new) in one HBM
-    sweep (see fused_guard.py); the streaming ByzantineGuard path."""
+    sweep (see fused_guard.py); the streaming ByzantineGuard path.
+    Strips stream in their storage dtype (bf16 halves the sweep's bytes —
+    the ``stats_dtype`` axis); B_new comes back in ``B.dtype``, Grams and
+    A-increments always f32."""
     return fused_guard_pallas(grads, B, delta, d_block=d_block,
                               interpret=interpret_mode())
 

@@ -39,13 +39,15 @@ def fused_guard_ref(
     grads: jax.Array, B: jax.Array, delta: jax.Array
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Dense oracle for the one-pass guard pipeline: ``(gram_g, cross,
-    a_inc, B_new)`` = (g gᵀ, B gᵀ, g·Δ, B + g), everything f32.  ``cross``
-    uses the *pre-update* B — the incremental-Gram identity is
+    a_inc, B_new)`` = (g gᵀ, B gᵀ, g·Δ, B + g); all accumulators f32,
+    ``B_new`` rounded once to ``B.dtype`` (the statistics storage dtype —
+    f32 today, bf16 under ``stats_dtype="bf16"``).  ``cross`` uses the
+    *pre-update* B — the incremental-Gram identity is
     G_B^k = G_B^{k-1} + cross + crossᵀ + gram_g."""
     g = grads.astype(jnp.float32)
     b = B.astype(jnp.float32)
     dlt = delta.astype(jnp.float32)
-    return g @ g.T, b @ g.T, g @ dlt, b + g
+    return g @ g.T, b @ g.T, g @ dlt, (b + g).astype(B.dtype)
 
 
 def sketch_sign(n: int, salt: int) -> jax.Array:

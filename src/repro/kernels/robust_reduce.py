@@ -7,6 +7,11 @@ reduction over m is a sorting network (odd-even min/max rounds) for the
 order statistics and a masked dot for the filtered mean — no
 (m, d)-sized temporaries (which the naive ``jnp.sort(axis=0)`` would
 materialize), so the stream runs at HBM bandwidth.
+
+Input strips stream in their storage dtype and are upcast to f32 in
+VMEM (exact for bf16), so feeding bf16 worker data — the guard's
+``stats_dtype`` axis, DESIGN.md §5 — halves the read traffic while the
+reduction itself always accumulates and returns f32.
 """
 from __future__ import annotations
 

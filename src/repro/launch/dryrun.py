@@ -96,7 +96,11 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool, guard_mode: str = "sk
     meshes + reduced configs exercise the identical code path).
 
     ``opts`` — §Perf levers (EXPERIMENTS.md records each):
-      'lp_guard'  — low-precision guard statistics (no f32 grad copies)
+      'lp_guard'  — bf16 guard statistics: sets the solver-wide
+                    ``SolverConfig.stats_dtype='bf16'`` axis (DESIGN.md §5
+                    Numerics) — the dry-run perf lever and the solver
+                    config name the same knob (no f32 grad copies, halved
+                    all-gather bytes, bf16 B storage)
       'no_sp'     — disable act_seq sequence parallelism for train
       'donate'    — donate the train state (aliased in-place update)
       'kv_quant'  — int8 KV cache for decode shapes (serving lever)
@@ -131,16 +135,16 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool, guard_mode: str = "sk
     t0 = time.time()
     with use_logical_rules(rules, mesh):
         if shape.kind == "train":
-            # the guard rides the unified SolverConfig axis (DESIGN.md §10):
+            # the guard rides the unified SolverConfig axes (DESIGN.md §10):
             # the historical exact/sketch modes are the dp_exact/dp_sketch
-            # guard backends on the tree-harness flat view
-            gopts = (("low_precision_stats", True),) if "lp_guard" in opts else ()
+            # guard backends on the tree-harness flat view, and 'lp_guard'
+            # is the stats_dtype='bf16' point of the §5 precision axis
             scfg = SolverConfig(
                 m=W, T=10_000, eta=1e-4, alpha=0.25,
                 aggregator="byzantine_sgd", attack="none",
                 mean_over_alive=True,
                 guard_backend={"exact": "dp_exact", "sketch": "dp_sketch"}[guard_mode],
-                guard_opts=gopts,
+                stats_dtype="bf16" if "lp_guard" in opts else "f32",
             )
             optimizer = adamw(1e-4, grad_clip=1.0)
             train_step = build_train_step(model, optimizer, scfg)
@@ -191,6 +195,8 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool, guard_mode: str = "sk
         "n_chips": n_chips,
         "n_workers": W if shape.kind == "train" else None,
         "guard_mode": guard_mode if shape.kind == "train" else None,
+        "stats_dtype": (("bf16" if "lp_guard" in opts else "f32")
+                        if shape.kind == "train" else None),
         "opts": list(opts),
         "_hlo_text": compiled.as_text(),
         "lower_s": t_lower,

@@ -101,6 +101,7 @@ def run_training(
     seq_len: int = 128, steps: int = 100, alpha: float = 0.25,
     attack: str = "sign_flip", aggregator: str = "byzantine_sgd",
     guard_backend: str = "dp_exact", guard_opts: tuple = (),
+    stats_dtype: str = "f32",
     guard_v: float = 0.0, scenario: str | None = None, lr: float = 3e-3,
     seed: int = 0, ckpt_dir: str | None = None, resume: bool = False,
     stop_after: int | None = None, log_every: int = 10, d_model: int = 256,
@@ -136,6 +137,7 @@ def run_training(
         m=workers, T=steps, eta=lr, alpha=alpha, aggregator=aggregator,
         attack=grad_attack, mean_over_alive=True,
         guard_backend=guard_backend, guard_opts=tuple(guard_opts),
+        stats_dtype=stats_dtype,
     )
     adversary = (_make_scenario_adversary(scenario, grad_attack, alpha,
                                           steps, workers)
@@ -281,6 +283,10 @@ def main():
                     choices=list(GUARD_BACKENDS),
                     help="guard realization (DESIGN.md §9); dense/fused "
                          "need --guard-v")
+    ap.add_argument("--stats-dtype", default="f32", choices=["f32", "bf16"],
+                    help="guard statistics precision (DESIGN.md §5 "
+                         "Numerics): bf16 halves the filter pipeline's "
+                         "HBM traffic; gradients cast once at ravel")
     ap.add_argument("--guard-v", type=float, default=0.0,
                     help="explicit Assumption-2.2 V (0 = auto-calibrate, "
                          "dp backends only)")
@@ -300,6 +306,7 @@ def main():
         per_worker_batch=args.per_worker_batch, seq_len=args.seq_len,
         steps=args.steps, alpha=args.alpha, attack=args.attack,
         aggregator=args.aggregator, guard_backend=args.guard_backend,
+        stats_dtype=args.stats_dtype,
         guard_v=args.guard_v, scenario=args.scenario, driver=args.driver,
         lr=args.lr, seed=args.seed, ckpt_dir=args.ckpt_dir,
         resume=args.resume, log_every=args.log_every,

@@ -7,6 +7,13 @@ This module is the accounting used by ``benchmarks/bench_filtering.py``
 and quoted in DESIGN.md; only O(m·d) terms are counted (the (m, m) Grams,
 (m,) vectors, and (d,) iterate reads are noise at d ≫ m).
 
+Every model below is parameterized on ``e = element bytes`` of the
+streamed statistics — the ``stats_dtype`` axis (4 for f32, 2 for bf16,
+:data:`STATS_DTYPE_BYTES`): the guard is bandwidth-bound, so halving
+``e`` halves the modeled wall-clock of every O(m·d) pass.  The (m, m)
+Grams and (m,) vectors stay f32 accumulators at either precision and are
+O(m²)/O(m) — noise at d ≫ m, excluded as before.
+
 Dense reference (:class:`repro.core.byzantine_sgd.ByzantineGuard`,
 ``use_fused=False``), e = element bytes (4 for f32):
 
@@ -115,6 +122,32 @@ BACKEND_COSTS = {
     "dp_exact": dp_exact_guard_cost,
     "dp_sketch": dp_sketch_guard_cost,
 }
+
+# SolverConfig.stats_dtype → bytes per streamed statistics element.
+# Kept jax-free on purpose (this module is a pure cost model); the names
+# mirror repro.core.byzantine_sgd.STATS_DTYPES and a registry-consistency
+# test (tests/test_stats_dtype.py) pins byte widths to the jnp itemsizes
+# so the two tables cannot drift apart.
+STATS_DTYPE_BYTES = {"f32": 4, "bf16": 2}
+
+
+def stats_elem_bytes(stats_dtype: str) -> int:
+    """``'f32' | 'bf16'`` → element bytes; typos fail loudly."""
+    try:
+        return STATS_DTYPE_BYTES[stats_dtype]
+    except KeyError:
+        raise KeyError(
+            f"unknown stats_dtype {stats_dtype!r}; "
+            f"have {sorted(STATS_DTYPE_BYTES)}"
+        ) from None
+
+
+def backend_cost(backend: str, m: int, d: int,
+                 stats_dtype: str = "f32") -> GuardStepCost:
+    """Per-step cost of ``(guard backend, stats dtype)`` — the two axes the
+    campaigns sweep (``"fused@bf16"`` spellings are split by
+    ``repro.core.guard_backends.parse_backend_spec`` before reaching here)."""
+    return BACKEND_COSTS[backend](m, d, elem_bytes=stats_elem_bytes(stats_dtype))
 
 
 def steady_state_us(cost: GuardStepCost, hw: HwSpec = TPU_V5E) -> float:

@@ -74,9 +74,15 @@ _BRANCHES = tuple(_wrap(name) for name in ATTACK_TABLE)
 
 
 def _dispatch(aid, key, grads, mask, ctx, scale):
+    # every branch returns in the *input* gradient dtype: attacks compute
+    # in whatever precision their zoo definition uses, but lax.switch
+    # needs identical branch types — and under the stats_dtype axis the
+    # trainer hands this bf16 rows (an attack's f32 intermediates would
+    # otherwise silently promote one branch and not another)
     return jax.lax.switch(
         aid,
-        [functools.partial(lambda f, op: f(*op), b) for b in _BRANCHES],
+        [functools.partial(lambda f, op: f(*op).astype(op[1].dtype), b)
+         for b in _BRANCHES],
         (key, grads, mask, ctx, scale),
     )
 

@@ -21,6 +21,13 @@ per backend, keyed ``"byzantine_sgd@<backend>"`` in the stats dict — still
 unrolled inside the same single trace, so one jit produces the
 dense-vs-fused-vs-sketch leaderboard.  Explicit ``"byzantine_sgd@fused"``
 strings in ``aggregators`` are honored as-is.
+
+A backend entry may carry a statistics-precision suffix —
+``"fused@bf16"`` selects the fused realization with
+``SolverConfig.stats_dtype='bf16'`` (DESIGN.md §5 Numerics), keyed
+``"byzantine_sgd@fused@bf16"`` — so one campaign records the accuracy
+cost of the halved guard traffic next to the f32 rows instead of
+assuming it.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.guard_backends import parse_backend_spec
 from repro.core.solver import Problem, SolverConfig, run_sgd
 from repro.scenarios.adversary import ScenarioAdversary
 from repro.scenarios.spec import CampaignGrid
@@ -84,12 +92,22 @@ def expand_variants(
     aggregators: Sequence[str],
     backends: Sequence[str] | None = None,
 ) -> dict[str, SolverConfig]:
-    """Variant name → SolverConfig for the (aggregator × guard-backend) axes.
+    """Variant name → SolverConfig for the (aggregator × guard-backend ×
+    stats-dtype) axes.
 
     ``"byzantine_sgd"`` expands to one ``"byzantine_sgd@<backend>"`` variant
     per entry of ``backends`` (when given); ``"agg@backend"`` spellings pass
-    through verbatim; stateless aggregators ignore the backend axis.
+    through verbatim; stateless aggregators ignore the backend axis.  A
+    backend may carry a ``@<stats_dtype>`` suffix (``"fused@bf16"``), which
+    sets ``SolverConfig.stats_dtype`` for that variant.
     """
+    def _guard_cfg(spec: str) -> SolverConfig:
+        be, sdt = parse_backend_spec(spec)
+        return base_cfg._replace(
+            aggregator=GUARD_AGGREGATOR, guard_backend=be,
+            stats_dtype=sdt if sdt is not None else base_cfg.stats_dtype,
+        )
+
     cfgs: dict[str, SolverConfig] = {}
     for name in aggregators:
         agg, _, be = name.partition("@")
@@ -98,12 +116,10 @@ def expand_variants(
                 raise ValueError(
                     f"{name!r}: only {GUARD_AGGREGATOR!r} has guard backends"
                 )
-            cfgs[name] = base_cfg._replace(aggregator=agg, guard_backend=be)
+            cfgs[name] = _guard_cfg(be)
         elif agg == GUARD_AGGREGATOR and backends:
             for b in backends:
-                cfgs[f"{agg}@{b}"] = base_cfg._replace(
-                    aggregator=agg, guard_backend=b
-                )
+                cfgs[f"{agg}@{b}"] = _guard_cfg(b)
         else:
             cfgs[name] = base_cfg._replace(aggregator=agg)
     return cfgs
