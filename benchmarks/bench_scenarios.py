@@ -51,8 +51,13 @@ from repro.scenarios import (
     write_report,
 )
 
+# the blades-comparable aggregator cross: the classical zoo, the stateful
+# rules (AutoGM's auto-weighted geometric median, Karimireddy's
+# momentum-carried centered clipping), two bucketing compositions
+# (s=2 pre-averaging in front of Krum / trimmed mean), and the guard
 AGGREGATORS = ["mean", "krum", "coordinate_median", "trimmed_mean",
-               "geometric_median", "byzantine_sgd"]
+               "geometric_median", "autogm", "centered_clip",
+               "bucket2:krum", "bucket2:trimmed_mean", "byzantine_sgd"]
 MATRIX_ATTACKS = ["none", "sign_flip", "random_gaussian", "alie",
                   "inner_product", "hidden_shift"]
 # the guard-backend sweep: dense oracle, fused Pallas pipeline at both
@@ -76,6 +81,7 @@ def scenario_zoo(T: int, m: int) -> tuple[list, dict]:
     scenarios = [
         ("static_sign_flip", scenario_static("sign_flip")),
         ("static_alie", scenario_static("alie")),
+        ("static_alie_update", scenario_static("alie_update")),
         ("static_inner_product", scenario_static("inner_product")),
         ("static_hidden_shift", scenario_static("hidden_shift")),
         ("lie_low_then_strike", scenario_lie_low_then_strike("inner_product", T // 2)),
@@ -114,7 +120,7 @@ def campaign_leaderboard(mini: bool, backends: list[str] | None = None) -> dict:
         scenarios = [s for s in scenarios if s[0] in keep]
         static_of = {k: v for k, v in static_of.items() if k in keep}
         alphas, seeds = [0.25], range(2)
-        aggs = ["mean", "krum", "byzantine_sgd"]
+        aggs = ["mean", "krum", "autogm", "centered_clip", "byzantine_sgd"]
     else:
         alphas, seeds = [0.125, 0.25], range(8)
     if backends is None:

@@ -25,10 +25,11 @@ from repro.scenarios import (
 )
 
 AGGREGATORS = ["mean", "krum", "coordinate_median", "trimmed_mean",
-               "geometric_median", "byzantine_sgd"]
+               "geometric_median", "autogm", "centered_clip",
+               "bucket2:krum", "byzantine_sgd"]
 BACKENDS = ["dense", "fused"]
-ATTACKS = ["none", "sign_flip", "random_gaussian", "alie", "inner_product",
-           "hidden_shift"]
+ATTACKS = ["none", "sign_flip", "random_gaussian", "alie", "alie_update",
+           "inner_product", "hidden_shift"]
 
 
 def main():

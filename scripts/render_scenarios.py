@@ -40,6 +40,19 @@ def render(rec: dict) -> str:
             vals = [_fmt_gap(cell[(scn, a)]) for a in aggs]
             lines.append(f"| {scn} | " + " | ".join(vals) + " |")
 
+    if rec.get("aggregator_ranking"):
+        lines.append("\n## Aggregator ranking — mean rank over every "
+                     "(scenario × α) cell\n")
+        lines.append("| aggregator | mean rank | median gap | worst gap "
+                     "| breaks | cells |")
+        lines.append("|---" * 6 + "|")
+        for r in rec["aggregator_ranking"]:
+            lines.append(
+                f"| {r['aggregator']} | {r['mean_rank']:.2f} "
+                f"| {r['gap_med_median']:.5f} | {r['gap_med_worst']:.5f} "
+                f"| {r['n_breaks']} | {r['n_cells']} |"
+            )
+
     if rec.get("degradation"):
         lines.append("\n## Dynamic-vs-static degradation\n")
         lines.append("| aggregator | dynamic | static | α | gap dyn | gap static "

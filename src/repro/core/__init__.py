@@ -14,15 +14,22 @@ from repro.core.byzantine_sgd import (
 )
 from repro.core.aggregators import (
     AGGREGATORS,
+    STATEFUL_AGGREGATORS,
     aggregate_mean,
     aggregate_coordinate_median,
     aggregate_trimmed_mean,
     aggregate_krum,
     aggregate_geometric_median,
+    aggregate_autogm,
     aggregate_medoid,
+    aggregator_names,
+    bucket_means,
     get_aggregator,
+    make_centered_clip,
+    simplex_project,
+    weiszfeld_update,
 )
-from repro.core.attacks import ATTACKS, apply_attack, get_attack
+from repro.core.attacks import ATTACKS, alie_z_max, apply_attack, get_attack
 from repro.core.guard_backends import (
     guard_backend_names,
     make_guard_backend,
@@ -55,14 +62,22 @@ __all__ = [
     "counting_median_index",
     "pairwise_sq_dists_from_gram",
     "AGGREGATORS",
+    "STATEFUL_AGGREGATORS",
     "ATTACKS",
     "aggregate_mean",
     "aggregate_coordinate_median",
     "aggregate_trimmed_mean",
     "aggregate_krum",
     "aggregate_geometric_median",
+    "aggregate_autogm",
     "aggregate_medoid",
+    "aggregator_names",
+    "bucket_means",
     "get_aggregator",
+    "make_centered_clip",
+    "simplex_project",
+    "weiszfeld_update",
+    "alie_z_max",
     "apply_attack",
     "get_attack",
     "guard_backend_names",

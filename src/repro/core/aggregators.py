@@ -1,11 +1,22 @@
 """Baseline gradient-aggregation rules the paper compares against (Table 1,
-Section 1.4), plus plain mean.
+Section 1.4), plus the aggregators of the empirical Byzantine-robustness
+literature the leaderboard is benchmarked against (DESIGN.md §11).
 
-All rules share the signature ``agg(grads: (m, d)) -> (d,)`` (stateless) so
-they can be swapped into both the convex solver and the distributed trainer.
-ByzantineSGD itself is *stateful* (cross-iteration martingales) and lives in
-:mod:`repro.core.byzantine_sgd`; :func:`get_aggregator` wraps it behind the
-same interface via a closure over its state.
+Two kinds of rule live here:
+
+* **stateless** — ``agg(grads: (m, d)) -> (d,)``, registered in
+  :data:`AGGREGATORS` and resolved by :func:`get_aggregator`;
+* **stateful** — cross-step memory (e.g. centered clipping's carried
+  center), registered in :data:`STATEFUL_AGGREGATORS` as factories
+  ``factory(d, **knobs) -> (state0, step)`` with
+  ``step(state, grads) -> (state', xi)``.  The solver's
+  :func:`repro.core.solver.make_aggregator` carries the state through its
+  scan exactly as it does the ByzantineSGD guard's martingales, so stateful
+  baselines drop into campaigns, the LM trainer, and the sharding specs
+  with no extra wiring.
+
+ByzantineSGD itself (Algorithm 1) stays in :mod:`repro.core.byzantine_sgd`
+behind the guard-backend registry (DESIGN.md §9).
 
 References:
   * coordinate-wise median / trimmed mean — Yin et al., "Byzantine-robust
@@ -14,6 +25,15 @@ References:
   * Krum — Blanchard et al., NeurIPS'17 [ref 8].
   * geometric median (of means) — Chen, Su, Xu [ref 11]; Weiszfeld iteration.
   * medoid — minimum-total-distance point, the cheap geometric-median proxy.
+  * AutoGM — Li et al., "Auto-weighted robust federated learning with
+    corrupted data sources" (IEEE IoT J. 2022): geometric median with
+    simplex-constrained per-worker weights, alternating minimization.
+  * centered clipping — Karimireddy, He & Jaggi, "Learning from history
+    for Byzantine-robust optimization" (ICML 2021).
+  * bucketing — Karimireddy, He & Jaggi, "Byzantine-robust learning on
+    heterogeneous datasets via bucketing" (ICLR 2022); composed with any
+    base rule via :func:`repro.core.solver.make_aggregator`'s
+    ``bucket<s>:<base>`` spelling.
 """
 from __future__ import annotations
 
@@ -91,23 +111,110 @@ def aggregate_medoid(grads: jax.Array) -> jax.Array:
     return grads[jnp.argmin(scores)]
 
 
-def aggregate_geometric_median(
-    grads: jax.Array, n_iters: int = 8, eps: float = 1e-8
+def weiszfeld_update(
+    y: jax.Array, g: jax.Array, alphas: jax.Array | None = None,
+    tol: float = 1e-6,
 ) -> jax.Array:
-    """Geometric median via Weiszfeld iterations, warm-started at the medoid
-    (guarantees we start within the convex hull and avoids the classic
-    Weiszfeld singularity at data points via eps-smoothing)."""
+    """One *smoothed* (optionally weighted) Weiszfeld step.
+
+    The classic iteration divides by the distance to every data row, so an
+    iterate landing *exactly on a row* — degenerate all-identical inputs,
+    colluding attacks that send duplicated rows — is a 1/0 that jit happily
+    folds into NaN.  The textbook coincident-point *exclusion* (weight 0
+    within a radius) is NaN-free but discontinuous: when the dominant-weight
+    row is excluded the iterate teleports to the weighted median of the
+    *rest*, and under f32 the teleport fires on one summation order but not
+    another — breaking the permutation invariance the conformance suite
+    enforces.  We instead smooth the weights (Pillutla et al.'s RFA
+    iteration): ``w = a / max(dist, tol)``, which is continuous, keeps every
+    iterate a convex combination of rows, and turns a coincident row into a
+    strong finite pull rather than a hole.  The remaining ``denom`` guard
+    only fires when every weight is zero (all-zero ``alphas``)."""
+    dist = jnp.linalg.norm(g - y[None, :], axis=1)
+    a = jnp.ones(g.shape[:1], g.dtype) if alphas is None else alphas
+    w = a / jnp.maximum(dist, tol)
+    denom = jnp.sum(w)
+    y_new = (w @ g) / jnp.maximum(denom, 1e-30)
+    return jnp.where(denom > 0, y_new, y)
+
+
+def aggregate_geometric_median(
+    grads: jax.Array, n_iters: int = 8, eps: float = 1e-6
+) -> jax.Array:
+    """Geometric median via smoothed Weiszfeld iterations, warm-started at
+    the mean (inside the convex hull but generically *not* on a data row —
+    the smoothed weights pin an iterate that starts on a dominant row);
+    ``eps`` is the distance floor of :func:`weiszfeld_update`, the guard
+    against the Weiszfeld singularity at data points."""
     g32 = grads.astype(jnp.float32)
-    y0 = aggregate_medoid(g32)
+    y0 = jnp.mean(g32, axis=0)
 
     def body(y, _):
-        dist = jnp.sqrt(jnp.sum((g32 - y[None, :]) ** 2, axis=1) + eps)
-        w = 1.0 / dist
-        y_new = (w @ g32) / jnp.sum(w)
-        return y_new, None
+        return weiszfeld_update(y, g32, tol=eps), None
 
     y, _ = jax.lax.scan(body, y0, None, length=n_iters)
     return y.astype(grads.dtype)
+
+
+def simplex_project(y: jax.Array) -> jax.Array:
+    """Euclidean projection onto the probability simplex (Duchi et al. 2008)
+    — sort + cumsum + threshold, fully jittable."""
+    n = y.shape[0]
+    u = jnp.sort(y)[::-1]
+    css = jnp.cumsum(u)
+    j = jnp.arange(1, n + 1, dtype=y.dtype)
+    rho = jnp.max(jnp.where(u + (1.0 - css) / j > 0, j, 1.0))
+    tau = (jnp.take(css, rho.astype(jnp.int32) - 1) - 1.0) / rho
+    return jnp.maximum(y - tau, 0.0)
+
+
+def aggregate_autogm(
+    grads: jax.Array, lamb: float = 2.0, n_outer: int = 4, n_inner: int = 8,
+    eps: float = 1e-6,
+) -> jax.Array:
+    """AutoGM — auto-weighted geometric median (Li et al., IoT J. 2022).
+
+    Alternating minimization of the jointly-robust objective
+
+        min_{v, α ∈ Δ}  Σ_i α_i ‖x_i − v‖  +  λ ‖α‖²
+
+    as a *fixed-iteration* jittable schedule (no data-dependent stopping —
+    the campaign engine vmaps this inside one trace): the v-step is
+    ``n_inner`` α-weighted Weiszfeld iterations, the α-step is the closed
+    form α = proj_Δ(−d / 2λ), which zeroes the weight of rows whose
+    distance to the current center exceeds the water-filling threshold —
+    outliers are *removed* from the median, not merely down-weighted, which
+    is what separates AutoGM from the plain geometric median at high attack
+    magnitude.  λ interpolates the family: λ → ∞ recovers the uniform-weight
+    geometric median, λ → 0 collapses onto the single nearest row.
+
+    Warm start at the mean keeps every iterate inside the convex hull of
+    the rows without starting *on* one (the smoothed Weiszfeld weights of
+    :func:`weiszfeld_update` pin an iterate that begins at a dominant data
+    row); the same smoothing keeps the degenerate cases (duplicated rows,
+    all-identical input) NaN-free.
+    """
+    g32 = grads.astype(jnp.float32)
+    m = g32.shape[0]
+
+    def v_steps(v, alphas):
+        def body(y, _):
+            return weiszfeld_update(y, g32, alphas, tol=eps), None
+        v, _ = jax.lax.scan(body, v, None, length=n_inner)
+        return v
+
+    def outer(carry, _):
+        v, alphas = carry
+        v = v_steps(v, alphas)
+        dist = jnp.linalg.norm(g32 - v[None, :], axis=1)
+        alphas = simplex_project(-dist / (2.0 * lamb))
+        return (v, alphas), None
+
+    v0 = jnp.mean(g32, axis=0)
+    a0 = jnp.full((m,), 1.0 / m, jnp.float32)
+    (v, alphas), _ = jax.lax.scan(outer, (v0, a0), None, length=n_outer)
+    v = v_steps(v, alphas)  # final v-step under the converged weights
+    return v.astype(grads.dtype)
 
 
 AGGREGATORS: dict[str, Callable] = {
@@ -118,6 +225,7 @@ AGGREGATORS: dict[str, Callable] = {
     "multi_krum": functools.partial(aggregate_krum, multi_k=4),
     "medoid": aggregate_medoid,
     "geometric_median": aggregate_geometric_median,
+    "autogm": aggregate_autogm,
 }
 
 
@@ -125,11 +233,84 @@ def get_aggregator(name: str, **kwargs) -> Callable[[jax.Array], jax.Array]:
     """Resolve a stateless aggregator by name with bound hyper-parameters.
 
     ``krum``/``multi_krum`` require ``n_byzantine``; ``trimmed_mean`` takes
-    ``trim_fraction``. ``byzantine_sgd`` is stateful — construct a
-    :class:`repro.core.byzantine_sgd.ByzantineGuard` instead (the solver in
-    :mod:`repro.core.solver` handles both kinds).
+    ``trim_fraction``. ``byzantine_sgd`` (guard backends) and the
+    :data:`STATEFUL_AGGREGATORS` are stateful — the solver's
+    :func:`repro.core.solver.make_aggregator` handles all three kinds.
     """
     if name not in AGGREGATORS:
         raise KeyError(f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}")
     fn = AGGREGATORS[name]
     return functools.partial(fn, **kwargs) if kwargs else fn
+
+
+# ---------------------------------------------------------------------------
+# stateful aggregators — cross-step memory outside the ByzantineSGD guard.
+# factory(d, **knobs) -> (state0, step); step(state, grads) -> (state', xi).
+# The state is an arbitrary pytree: scan-carried by the solver, checkpointed
+# by the trainer (TrainState.guard), sharded by distributed/specs.py.
+# ---------------------------------------------------------------------------
+
+def make_centered_clip(
+    d: int, clip_tau: float = 10.0, clip_iters: int = 5,
+) -> tuple[jax.Array, Callable]:
+    """Centered clipping (Karimireddy, He & Jaggi 2021).
+
+    Iterative clipping around a *carried* center v (the previous step's
+    aggregate — the "learning from history" momentum that defeats
+    time-coupled attacks like ALIE):
+
+        v ← v + (1/m) Σ_i clip(x_i − v, τ),   clip(z, τ) = z · min(1, τ/‖z‖)
+
+    repeated ``clip_iters`` times per aggregation.  Each Byzantine row moves
+    the center by at most τ/m per inner iteration regardless of magnitude,
+    so unbounded attacks are clipped to bounded influence while honest rows
+    inside the τ-ball pass unclipped.  v₀ = 0; robustness holds for any
+    bounded initialization (ibid., Thm. III) and the first few steps walk v
+    into the honest cluster at ≤ τ·clip_iters per step.
+    """
+    state0 = jnp.zeros((d,), jnp.float32)
+
+    def step(v: jax.Array, grads: jax.Array) -> tuple[jax.Array, jax.Array]:
+        g32 = grads.astype(jnp.float32)
+
+        def body(c, _):
+            diff = g32 - c[None, :]
+            nrm = jnp.linalg.norm(diff, axis=1)
+            lam = jnp.minimum(1.0, clip_tau / jnp.maximum(nrm, 1e-12))
+            return c + jnp.mean(lam[:, None] * diff, axis=0), None
+
+        v_new, _ = jax.lax.scan(body, v, None, length=clip_iters)
+        return v_new, v_new
+
+    return state0, step
+
+
+STATEFUL_AGGREGATORS: dict[str, Callable] = {
+    "centered_clip": make_centered_clip,
+}
+
+
+def aggregator_names() -> tuple[str, ...]:
+    """Every registered baseline aggregator, stateless and stateful — the
+    roster the conformance suite (tests/test_aggregator_contracts.py)
+    enforces invariants over."""
+    return tuple(sorted(AGGREGATORS)) + tuple(sorted(STATEFUL_AGGREGATORS))
+
+
+# ---------------------------------------------------------------------------
+# bucketing — s-bucket pre-averaging, composable with any base rule
+# ---------------------------------------------------------------------------
+
+def bucket_means(grads: jax.Array, s: int, key: jax.Array) -> jax.Array:
+    """(m, d) → (m/s, d): randomly permute worker rows, average disjoint
+    groups of ``s`` (Karimireddy, He & Jaggi 2022).  Pre-averaging dilutes
+    each Byzantine row into a bucket of mostly-honest ones and shrinks the
+    honest variance by s, at the price of up to ⌈αm⌉ *contaminated* buckets
+    — an s·α effective fraction the base aggregator must be sized for
+    (:func:`repro.core.solver.make_aggregator` resizes Krum's f and the
+    trim fraction accordingly)."""
+    m = grads.shape[0]
+    if m % s:
+        raise ValueError(f"bucketing needs s | m, got s={s}, m={m}")
+    perm = jax.random.permutation(key, m)
+    return jnp.mean(grads[perm].reshape(m // s, s, -1), axis=1)

@@ -79,15 +79,67 @@ def attack_constant_drift(key, grads, byz_mask, ctx, scale: float = 10.0):
     return _overwrite(grads, byz_mask, scale * ctx["V"] * direction[None, :])
 
 
-def attack_alie(key, grads, byz_mask, ctx, z: float = 1.0):
-    """'A little is enough' (Baruch et al.): colluding workers send
-    mean − z·std (coordinate-wise), staying within plausible deviation."""
-    good = ~byz_mask
-    w = good.astype(grads.dtype)[:, None]
+def alie_z_max(n_workers, n_byz) -> jax.Array:
+    """The calibrated ALIE deviation z_max (Baruch et al., blades parity).
+
+    With m of n workers Byzantine, the attack needs s = ⌊n/2 + 1⌋ − m
+    honest *supporters* — honest workers whose gradients land further from
+    the mean than the Byzantine rows — for the corrupted rows to sit inside
+    the majority.  Under the per-coordinate normality assumption that means
+
+        z_max = Φ⁻¹((n − m − s) / (n − m)),
+
+    evaluated in-trace via ``jax.scipy.special.ndtri`` (the norm-ppf
+    equivalent), so scenario campaigns vmap it over traced per-step
+    Byzantine counts (churn/late-join schedules change m mid-run).  The cdf
+    argument is clipped away from {0, 1}: a coalition past n/2 (outside the
+    calibration's regime) saturates instead of returning ±inf.
+    """
+    n = jnp.asarray(n_workers, jnp.float32)
+    mb = jnp.asarray(n_byz, jnp.float32)
+    n_good = jnp.maximum(n - mb, 1.0)
+    s = jnp.floor(n / 2.0 + 1.0) - mb
+    cdf = (n_good - s) / n_good
+    return jax.scipy.special.ndtri(jnp.clip(cdf, 1e-6, 1.0 - 1e-6))
+
+
+def _good_row_stats(grads, byz_mask):
+    """(μ, σ²) over the honest rows (population moments, coordinate-wise)."""
+    w = (~byz_mask).astype(grads.dtype)[:, None]
     n_good = jnp.maximum(jnp.sum(w), 1.0)
     mu = jnp.sum(grads * w, axis=0) / n_good
     var = jnp.sum(w * (grads - mu[None, :]) ** 2, axis=0) / n_good
-    row = mu - z * jnp.sqrt(var + 1e-12)
+    return mu, var
+
+
+def attack_alie(key, grads, byz_mask, ctx, z: float | None = None,
+                z_scale: float = 1.0):
+    """'A little is enough' (Baruch et al.): colluding workers send
+    mean − z·std (coordinate-wise), staying within plausible deviation.
+
+    ``z=None`` (the default) calibrates z to the supporter count exactly as
+    the blades benchmark does — :func:`alie_z_max` computed in-trace from
+    the *current* Byzantine count; a float pins it explicitly (the
+    historical toy behaviour was the uncalibrated ``z=1.0``).  ``z_scale``
+    multiplies whichever z is in effect — the scenario engine's generic
+    magnitude knob."""
+    zz = alie_z_max(grads.shape[0], jnp.sum(byz_mask)) if z is None else z
+    mu, var = _good_row_stats(grads, byz_mask)
+    row = mu - z_scale * zz * jnp.sqrt(var + 1e-12)
+    return _overwrite(grads, byz_mask, row[None, :])
+
+
+def attack_alie_update(key, grads, byz_mask, ctx, z: float | None = None,
+                       z_scale: float = 1.0):
+    """The fedavg/update ALIE variant (blades ``is_fedavg=True``): the same
+    μ − z·σ lie applied to the workers' *updates* rather than their
+    gradients.  An honest update is u_i = −η·g_i, so ALIE on updates sends
+    u = μ_u − z·σ_u = −η(μ_g + z·σ_g) — i.e. expressed back in gradient
+    space the perturbation flips sign: μ + z·σ.  The two variants probe
+    opposite coordinate-wise tails, which is why blades sweeps both."""
+    zz = alie_z_max(grads.shape[0], jnp.sum(byz_mask)) if z is None else z
+    mu, var = _good_row_stats(grads, byz_mask)
+    row = mu + z_scale * zz * jnp.sqrt(var + 1e-12)
     return _overwrite(grads, byz_mask, row[None, :])
 
 
@@ -138,6 +190,7 @@ ATTACKS: dict[str, Callable] = {
     "random_gaussian": attack_random_gaussian,
     "constant_drift": attack_constant_drift,
     "alie": attack_alie,
+    "alie_update": attack_alie_update,
     "inner_product": attack_inner_product,
     "hidden_shift": attack_hidden_shift,
     "mirror": attack_mirror,

@@ -15,6 +15,7 @@ Table-1 benchmarks sweep.
 from __future__ import annotations
 
 import functools
+import inspect
 import math
 from typing import Callable, NamedTuple
 
@@ -78,6 +79,13 @@ class SolverConfig(NamedTuple):
     #                             DESIGN.md §5 Numerics, threaded through
     #                             every guard backend; bf16 halves the
     #                             filter pipeline's HBM traffic
+    agg_opts: tuple = ()        # baseline-aggregator knobs as (key, value)
+    #                             pairs (hashable, DESIGN.md §11): e.g.
+    #                             clip_tau / clip_iters for centered_clip,
+    #                             lamb / n_outer for autogm, bucket_seed
+    #                             for bucket<s>:<base> composition; each
+    #                             aggregator receives only the knobs it
+    #                             declares (guard_opts convention)
 
     @property
     def n_byzantine(self) -> int:
@@ -115,6 +123,50 @@ def byz_rank(key: jax.Array, m: int) -> jax.Array:
 _byz_rank = byz_rank  # historical name
 
 
+def parse_aggregator_spec(name: str) -> tuple[int | None, str]:
+    """``"bucket2:krum"`` → ``(2, "krum")``; ``"krum"`` → ``(None, "krum")``.
+
+    The campaign spelling for s-bucket pre-averaging composed with a base
+    aggregator (DESIGN.md §11); the base may itself be any spec this
+    function accepts (stateless, stateful, ``byzantine_sgd``, or another
+    bucketing layer).
+    """
+    head, sep, base = name.partition(":")
+    if sep and head.startswith("bucket"):
+        try:
+            s = int(head[len("bucket"):])
+        except ValueError:
+            raise KeyError(f"malformed bucketing spec {name!r}; "
+                           "expected 'bucket<s>:<base>'") from None
+        if s < 1:
+            raise KeyError(f"bucketing needs s >= 1, got {name!r}")
+        return s, base
+    return None, name
+
+
+def _declared_knobs(target) -> set[str]:
+    """Parameter names ``target`` accepts beyond its data arguments."""
+    sig = inspect.signature(target)
+    return {p.name for p in sig.parameters.values()
+            if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+            and p.name not in ("grads", "d")}
+
+
+def _validate_agg_opts(opts: dict) -> None:
+    """Loud KeyError on knobs no registered aggregator declares — the
+    ``guard_opts`` convention: one tuple serves a whole campaign sweep
+    (cross-aggregator knobs drop silently), typos fail before tracing."""
+    known = {"bucket_seed"}
+    for fn in agg_lib.AGGREGATORS.values():
+        known |= _declared_knobs(fn)
+    for factory in agg_lib.STATEFUL_AGGREGATORS.values():
+        known |= _declared_knobs(factory)
+    unknown = set(opts) - known
+    if unknown:
+        raise KeyError(f"unknown agg_opts {sorted(unknown)}; "
+                       f"known knobs: {sorted(known)}")
+
+
 def make_aggregator(problem, cfg: SolverConfig):
     """Returns (init_state, step(state, grads, x, x1) -> (state, xi, n_alive, alive)).
 
@@ -123,15 +175,73 @@ def make_aggregator(problem, cfg: SolverConfig):
     selects dense / fused / dp_exact / dp_sketch, all behind the same step
     signature, so campaigns sweep guard realizations like any other axis.
 
+    Baselines come in two kinds (DESIGN.md §11): **stateless** rules from
+    :data:`repro.core.aggregators.AGGREGATORS` (wrapped with a scalar dummy
+    state) and **stateful** ones from :data:`~repro.core.aggregators.
+    STATEFUL_AGGREGATORS` (e.g. centered clipping's carried center), whose
+    pytree state the solver scan-carries exactly like the guard martingales.
+    A ``bucket<s>:<base>`` spec composes s-bucket pre-averaging in front of
+    any base aggregator: worker rows are permuted with a scan-carried PRNG
+    key, averaged in groups of s, and the base rule — instantiated at the
+    bucket count m/s with its Byzantine sizing inflated to the s·α
+    contaminated-bucket fraction — aggregates the bucket means.
+
+    Per-aggregator knobs ride ``cfg.agg_opts`` ((key, value) pairs, the
+    ``guard_opts`` convention): each target receives only the knobs it
+    declares; a knob nothing declares is a KeyError.
+
     ``problem`` only needs ``d`` / ``V`` / ``D`` — a full :class:`Problem`
     or the :class:`repro.core.tree_harness.FlatSpec` the LM trainer builds
     from its ravelled parameter tree (DESIGN.md §10) both qualify, which is
     what makes this the *single* aggregation entry point for the flat
     harness and for model training.
     """
-    name = cfg.aggregator
+    opts = dict(cfg.agg_opts)
+    _validate_agg_opts(opts)
+    bucket_s, name = parse_aggregator_spec(cfg.aggregator)
+
+    if bucket_s is not None:
+        if cfg.m % bucket_s:
+            raise ValueError(
+                f"bucketing needs s | m, got s={bucket_s}, m={cfg.m}")
+        # the base rule sees m/s bucket means, of which up to ⌈αm⌉ are
+        # contaminated — an s·α effective Byzantine fraction (capped at
+        # 1/2; the base's own sizing caps, e.g. trimmed-mean survivors,
+        # still apply on top)
+        inner_cfg = cfg._replace(
+            aggregator=name,
+            m=cfg.m // bucket_s,
+            alpha=min(cfg.alpha * bucket_s, 0.5),
+        )
+        inner_state0, inner_step = make_aggregator(problem, inner_cfg)
+        state0 = (jax.random.PRNGKey(int(opts.get("bucket_seed", 0))),
+                  inner_state0)
+
+        def step(state, grads, x, x1):
+            key, inner = state
+            key, sub = jax.random.split(key)
+            buckets = agg_lib.bucket_means(grads, bucket_s, sub)
+            inner, xi, _, _ = inner_step(inner, buckets, x, x1)
+            # per-bucket filter decisions don't map back onto workers —
+            # bucketing reports the stateless all-alive convention
+            return (key, inner), xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
+
+        return state0, step
+
     if name == "byzantine_sgd":
         return make_guard_backend(cfg.guard_backend, problem, cfg)
+
+    if name in agg_lib.STATEFUL_AGGREGATORS:
+        factory = agg_lib.STATEFUL_AGGREGATORS[name]
+        fkwargs = {k: v for k, v in opts.items()
+                   if k in _declared_knobs(factory)}
+        state0, agg_step = factory(problem.d, **fkwargs)
+
+        def step(state, grads, x, x1):
+            state, xi = agg_step(state, grads)
+            return state, xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
+
+        return state0, step
 
     kwargs = {}
     if name in ("krum", "multi_krum"):
@@ -144,7 +254,9 @@ def make_aggregator(problem, cfg: SolverConfig):
               else min(ceil_byzantine_count(cfg.alpha, cfg.m),
                        (cfg.m - 1) // 2) / cfg.m)
         kwargs["trim_fraction"] = tf
-    fn = agg_lib.get_aggregator(name, **kwargs)
+    fn = agg_lib.get_aggregator(name)
+    kwargs.update({k: v for k, v in opts.items() if k in _declared_knobs(fn)})
+    fn = functools.partial(fn, **kwargs) if kwargs else fn
 
     def step(state, grads, x, x1):
         xi = fn(grads)

@@ -89,10 +89,16 @@ def _flat_state_specs(abstract: PyTree, W: int, rules: dict, mesh: Mesh) -> PyTr
     * (W, d)   — the flat B martingale / sketch: worker × flat_grad('model')
     * (d,)     — flat anchors/feedback vectors: flat_grad('model')
     * ()       — replicated
+
+    Unsigned-integer 1-D leaves are PRNG keys (the bucketing aggregator
+    carries a (2,) uint32 key in its state), not flat-gradient vectors —
+    they must be replicated, never sharded along 'model' or 'worker'.
     """
     def one(a):
         shape = tuple(a.shape)
         if shape == ():
+            spec = P()
+        elif len(shape) == 1 and jnp.issubdtype(a.dtype, jnp.unsignedinteger):
             spec = P()
         elif shape == (W,):
             spec = _logical(("worker",), shape, rules, mesh)

@@ -33,15 +33,22 @@ from repro.core import attacks as attack_lib
 
 # (name, wrapper) — wrapper(key, grads, mask, ctx, scale) maps the generic
 # scale onto the attack's own magnitude knob, scaled from its default.
+# ALIE's knob is z_scale: a multiplier on the blades-calibrated z_max
+# (z=None in repro.core.attacks — the supporter-count norm-ppf calibration,
+# computed in-trace), so scale = 1 sweeps the *calibrated* attack and the
+# adaptive multiplicative-weights search probes around it.  New entries
+# append at the END: Scenario pytrees store attack *ids*, and id stability
+# keeps previously-built campaign grids comparable across versions.
 _SCALE_KNOBS: dict[str, tuple[str, float] | None] = {
     "none": None,
     "sign_flip": ("scale", 3.0),
     "random_gaussian": ("scale", 100.0),
     "constant_drift": ("scale", 10.0),
-    "alie": ("z", 1.0),
+    "alie": ("z_scale", 1.0),
     "inner_product": ("scale", 1.0),
     "hidden_shift": ("c", 0.9),
     "retreat_on_filter": ("scale", 1.0),
+    "alie_update": ("z_scale", 1.0),
 }
 
 ATTACK_TABLE: tuple[str, ...] = tuple(_SCALE_KNOBS)

@@ -1,7 +1,7 @@
 """Campaign reporting — structured ``BENCH_scenarios.json`` records.
 
 Aggregates a :class:`repro.scenarios.campaign.CampaignResult` across seeds
-into the three tables the scenario engine exists to produce:
+into the tables the scenario engine exists to produce:
 
 * the **leaderboard** — median + IQR suboptimality and detection-latency
   percentiles per (scenario, α, aggregator);
@@ -10,7 +10,10 @@ into the three tables the scenario engine exists to produce:
   break under the dynamic one?
 * the **guard bound check** — ByzantineSGD's measured gap against the
   Theorem-3.8 prediction, using each run's realized *ever-Byzantine*
-  fraction (churn schedules corrupt more workers than the instantaneous α).
+  fraction (churn schedules corrupt more workers than the instantaneous α);
+* the **aggregator ranking** — the blades-style cross table: mean rank,
+  worst-case gap and break count per aggregator over every
+  (scenario × α) cell of the leaderboard.
 
 ``scripts/render_scenarios.py`` renders the JSON as a console/markdown
 table.
@@ -134,6 +137,30 @@ def summarize_campaign(
                 "within": bool(gap_med <= bound),
             })
 
+    # blades-style cross ranking: collapse the (scenario × α) leaderboard
+    # into one row per aggregator — mean rank (1 = best) across every grid
+    # cell, worst-case median gap, and break count.  Ranks compare rules at
+    # identical adversary settings, so they are scale-free across scenarios
+    # of very different absolute difficulty.
+    ranking = []
+    ranks: dict[str, list[float]] = {a: [] for a in aggregators}
+    for (scn, alpha), _ in sorted(groups.items()):
+        cell_gaps = sorted(med[(scn, alpha, a)] for a in aggregators)
+        for a in aggregators:
+            ranks[a].append(1 + cell_gaps.index(med[(scn, alpha, a)]))
+    for a in aggregators:
+        gaps = [med[k] for k in med if k[2] == a]
+        ranking.append({
+            "aggregator": a,
+            "mean_rank": float(np.mean(ranks[a])),
+            "gap_med_median": float(np.median(gaps)),
+            "gap_med_worst": float(np.max(gaps)),
+            "n_breaks": sum(1 for r in table
+                            if r["aggregator"] == a and r["breaks"]),
+            "n_cells": len(ranks[a]),
+        })
+    ranking.sort(key=lambda r: r["mean_rank"])
+
     degradation = []
     for dyn, stat in (static_of or {}).items():
         for alpha in sorted({e["alpha"] for e in entries}):
@@ -171,6 +198,7 @@ def summarize_campaign(
             "runs_total": result.n_runs * len(aggregators),
         },
         "leaderboard": table,
+        "aggregator_ranking": ranking,
         "guard_bound": guard_bound,
         "degradation": degradation,
     }

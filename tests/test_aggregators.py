@@ -5,13 +5,16 @@ import numpy as np
 import pytest
 
 from repro.core.aggregators import (
+    aggregate_autogm,
     aggregate_coordinate_median,
     aggregate_geometric_median,
     aggregate_krum,
     aggregate_mean,
     aggregate_medoid,
     aggregate_trimmed_mean,
+    bucket_means,
     get_aggregator,
+    make_centered_clip,
 )
 
 
@@ -87,9 +90,133 @@ def test_registry_binds_kwargs(clustered):
         get_aggregator("nope")
 
 
-@pytest.mark.parametrize("name", ["mean", "coordinate_median", "medoid", "geometric_median"])
+@pytest.mark.parametrize("name", ["mean", "coordinate_median", "medoid",
+                                  "geometric_median", "autogm"])
 def test_permutation_invariance(rng, name):
     x = jax.random.normal(rng, (10, 6))
     f = get_aggregator(name)
     perm = jax.random.permutation(jax.random.PRNGKey(7), 10)
     np.testing.assert_allclose(f(x), f(x[perm]), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# AutoGM
+# ---------------------------------------------------------------------------
+
+def test_autogm_robust(clustered):
+    """The α-step's water-filling threshold zeroes the far cluster — AutoGM
+    lands at least as close to the honest cluster as the geometric median."""
+    x, good = clustered
+    v = aggregate_autogm(x, n_outer=8, n_inner=16)
+    gm = aggregate_geometric_median(x, n_iters=32)
+    assert float(jnp.linalg.norm(v - 1.0)) <= float(jnp.linalg.norm(gm - 1.0)) + 1e-3
+    assert float(jnp.linalg.norm(v - 1.0)) < 1.0
+
+
+def test_autogm_large_lambda_recovers_geometric_median(rng):
+    """λ → ∞ makes the ‖α‖² penalty dominate — uniform weights, i.e. the
+    plain geometric median."""
+    x = jax.random.normal(rng, (9, 5))
+    v = aggregate_autogm(x, lamb=1e6, n_outer=4, n_inner=32)
+    gm = aggregate_geometric_median(x, n_iters=64)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(gm), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# centered clipping
+# ---------------------------------------------------------------------------
+
+def test_centered_clip_converges_to_honest_mean(clustered):
+    """Iterated from v₀ = 0, the carried center walks into the honest
+    cluster and stays there; each 100-magnitude Byzantine row moves it at
+    most τ per aggregation regardless of magnitude."""
+    x, good = clustered
+    state, step = make_centered_clip(x.shape[1], clip_tau=1.0, clip_iters=5)
+    for _ in range(20):
+        state, xi = step(state, x)
+    # 4/16 rows at 100 pull the clipped mean by ≤ τ·(4/16) per inner iter
+    assert float(jnp.linalg.norm(xi - jnp.mean(good, axis=0))) < 2.0
+    assert float(jnp.max(jnp.abs(xi))) < 10.0
+
+
+def test_centered_clip_bounded_influence():
+    """An unbounded attack row moves the center by at most
+    clip_iters · τ/m per step (clip_tau caps each row's contribution)."""
+    d = 6
+    honest = jnp.zeros((7, d))
+    bad = 1e9 * jnp.ones((1, d))
+    x = jnp.concatenate([honest, bad])
+    state, step = make_centered_clip(d, clip_tau=1.0, clip_iters=5)
+    state, xi = step(state, x)
+    assert float(jnp.linalg.norm(xi)) <= 5 * 1.0 / 8 + 1e-5
+
+
+def test_centered_clip_state_is_output():
+    state, step = make_centered_clip(4)
+    x = jnp.ones((6, 4))
+    new_state, xi = step(state, x)
+    np.testing.assert_array_equal(np.asarray(new_state), np.asarray(xi))
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_means_preserves_mean(rng):
+    x = jax.random.normal(rng, (12, 5))
+    b = bucket_means(x, 3, jax.random.PRNGKey(0))
+    assert b.shape == (4, 5)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(b, axis=0)), np.asarray(jnp.mean(x, axis=0)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_bucket_means_rejects_non_divisor():
+    with pytest.raises(ValueError):
+        bucket_means(jnp.ones((10, 2)), 3, jax.random.PRNGKey(0))
+
+
+def test_bucketing_dilutes_outliers(rng):
+    """s = 2 pre-averaging halves a lone Byzantine row's magnitude and
+    shrinks honest variance — Krum over buckets still picks a clean one."""
+    good = 0.1 * jax.random.normal(rng, (14, 4)) + 1.0
+    bad = 100.0 * jnp.ones((2, 4))
+    x = jnp.concatenate([good, bad])
+    b = bucket_means(x, 2, jax.random.PRNGKey(1))
+    # at most 2 of the 8 buckets are contaminated
+    n_dirty = int(jnp.sum(jnp.max(jnp.abs(b), axis=1) > 10.0))
+    assert n_dirty <= 2
+    out = aggregate_krum(b, n_byzantine=2)
+    assert float(jnp.max(jnp.abs(out))) < 10.0
+
+
+# ---------------------------------------------------------------------------
+# Weiszfeld degenerate-input regression (the iterate-on-a-row singularity:
+# unguarded 1/0 becomes NaN under jit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", [aggregate_geometric_median, aggregate_autogm])
+def test_weiszfeld_all_rows_identical(agg):
+    x = 3.0 * jnp.ones((6, 4))
+    out = jax.jit(agg)(x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), 3.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("agg", [aggregate_geometric_median, aggregate_autogm])
+def test_weiszfeld_duplicated_row(rng, agg):
+    """A duplicated row (colluding attackers sending identical vectors) can
+    put the iterate exactly on a data point mid-iteration."""
+    x = jax.random.normal(rng, (7, 4))
+    x = jnp.concatenate([x, x[:1]])  # duplicate row 0
+    out = jax.jit(agg)(x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("agg", [aggregate_geometric_median, aggregate_autogm])
+def test_weiszfeld_huge_magnitude_row(rng, agg):
+    x = jax.random.normal(rng, (8, 4))
+    x = x.at[0].set(1e8)
+    out = jax.jit(agg)(x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.max(jnp.abs(out))) < 1e4  # robust: not dragged away

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.attacks import ATTACKS, apply_attack
+from repro.core.attacks import ATTACKS, alie_z_max, apply_attack
 
 
 @pytest.fixture
@@ -51,6 +51,37 @@ def test_alie_rows_close_to_good_stats(setup, rng):
     mu = jnp.mean(grads[~byz], axis=0)
     sd = jnp.std(grads[~byz], axis=0)
     assert float(jnp.max(jnp.abs(out[byz][0] - (mu - sd)))) < 1e-4
+
+
+def test_alie_default_is_calibrated(setup, rng):
+    """z=None (the default) computes the blades supporter-count z_max
+    in-trace; passing the same value explicitly must match bit-for-bit."""
+    grads, byz, ctx = setup
+    z = float(alie_z_max(grads.shape[0], int(jnp.sum(byz))))
+    out_default = apply_attack("alie", rng, grads, byz, ctx)
+    out_pinned = apply_attack("alie", rng, grads, byz, ctx, z=z)
+    np.testing.assert_allclose(out_default, out_pinned, rtol=1e-6)
+
+
+def test_alie_update_mirrors_alie(setup, rng):
+    """The fedavg/update variant probes the opposite coordinate-wise tail:
+    the two Byzantine rows average to exactly the honest mean."""
+    grads, byz, ctx = setup
+    a = apply_attack("alie", rng, grads, byz, ctx)
+    b = apply_attack("alie_update", rng, grads, byz, ctx)
+    mu = jnp.mean(grads[~byz], axis=0)
+    np.testing.assert_allclose(
+        np.asarray((a[byz][0] + b[byz][0]) / 2.0), np.asarray(mu), atol=1e-5)
+
+
+def test_alie_z_scale_scales_deviation(setup, rng):
+    grads, byz, ctx = setup
+    mu = jnp.mean(grads[~byz], axis=0)
+    one = apply_attack("alie", rng, grads, byz, ctx, z_scale=1.0)
+    two = apply_attack("alie", rng, grads, byz, ctx, z_scale=2.0)
+    np.testing.assert_allclose(
+        np.asarray(two[byz][0] - mu), 2.0 * np.asarray(one[byz][0] - mu),
+        rtol=1e-4, atol=1e-6)
 
 
 def test_mirror_uses_ctx(setup, rng):
