@@ -11,13 +11,12 @@ decision agreement into ``BENCH_filtering.json``.
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
 from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
 from repro.core.solver import SolverConfig, run_sgd
 from repro.data.problems import make_quadratic_problem
@@ -157,8 +156,7 @@ def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
         "stats_dtypes": per_dtype,
         "bf16_vs_f32": bf16_vs_f32,
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2)
+    write_json(out_path, record)
     emit("filter/stats_dtype_bf16_ratio",
          bf16_vs_f32["fused_stats_bytes_ratio_model"],
          f"good_k_equal={bf16_vs_f32['good_k_equal']},"

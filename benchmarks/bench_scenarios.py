@@ -21,12 +21,21 @@ per-step wall-clock at the m = 32, d = 2²⁰ headline shape, where the fused
 pipeline's 3-vs-6-pass traffic reduction makes it strictly cheaper than
 dense.
 
+Fourth deliverable (DESIGN.md §12): ``--trace-out`` arms the guard
+**flight recorder** on a guard-only rerun of the campaign — per-step
+filter forensics for the adaptive cells (martingale deviations vs
+thresholds, alive deltas, first-filter steps) exported as structured
+JSONL + a Perfetto-loadable chrome trace, with the measured
+telemetry-enabled overhead fraction recorded in the trace's own meta
+block, and measured-vs-roofline comparator rows for the swept backends.
+
 ``--mini`` is the CI tier-2 shape: 5 scenarios (3 dynamic) × 2 seeds at
 small T, two guard backends, looped comparison on the matrix kept.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
@@ -35,6 +44,7 @@ from repro.core.guard_backends import parse_backend_spec
 from repro.core.solver import SolverConfig
 from repro.data.problems import make_quadratic_problem
 from repro.kernels import ops
+from repro.obs import EventLog, TelemetryConfig, roofline_rows
 from repro.roofline.guard_cost import backend_cost, steady_state_us
 from repro.roofline.hw import TPU_V5E
 from repro.scenarios import (
@@ -50,6 +60,8 @@ from repro.scenarios import (
     summarize_campaign,
     write_report,
 )
+from repro.scenarios.campaign import CampaignResult, build_campaign_fn
+from repro.scenarios.report import campaign_trace_events, filter_timelines
 
 # the blades-comparable aggregator cross: the classical zoo, the stateful
 # rules (AutoGM's auto-weighted geometric median, Karimireddy's
@@ -210,6 +222,98 @@ def backend_axis_record(prob, cfg, grid, backends: list[str]) -> dict:
     return rec
 
 
+def _timed_campaign(prob, cfg, grid, backends, telemetry, reps: int = 3):
+    """Lower once, execute ``reps`` times, keep the min wall — the
+    overhead comparison needs execution-only times robust to scheduler
+    noise at the mini shape, which single-shot ``run_campaign`` is not."""
+    fn = jax.jit(build_campaign_fn(prob, cfg, ["byzantine_sgd"],
+                                   backends=backends, telemetry=telemetry))
+    t0 = time.perf_counter()
+    compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
+    compile_s = time.perf_counter() - t0
+    walls, out = [], None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(
+            compiled(grid.scenarios, grid.alpha, grid.seeds))
+        walls.append(time.perf_counter() - t0)
+    return CampaignResult(stats=out, entries=grid.entries,
+                          wall_s=min(walls), compile_s=compile_s,
+                          n_runs=grid.n_runs)
+
+
+def trace_campaign(mini: bool, trace_out: str,
+                   backends: list[str] | None = None,
+                   ring_size: int = 64) -> dict:
+    """The flight-recorder deliverable (DESIGN.md §12): a guard-only rerun
+    of the leaderboard campaign, telemetry off vs on.
+
+    Off/on wall-clocks give the measured enabled-mode overhead (recorded
+    in the trace meta — the ≤10 % acceptance bound lives *in* the
+    artifact it gates); the armed run's rings are drained into guard_step
+    events for the dynamic cells, roofline comparator rows join each
+    backend's measured per-step time against the ``guard_cost`` model at
+    the campaign shape, and both JSONL and a Perfetto-loadable chrome
+    trace are written next to ``BENCH_scenarios.json``.
+    """
+    m, d = 16, 16
+    T = 300 if mini else 1500
+    prob = make_quadratic_problem(d=d, sigma=1.0, L=8.0, V=1.0, seed=0)
+    cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
+                       aggregator="byzantine_sgd", attack="sign_flip",
+                       guard_opts=(("sketch_dim", 8),))
+    scenarios, _ = scenario_zoo(T, m)
+    keep = {"static_sign_flip", "adaptive_inner_product",
+            "lie_low_then_strike"}
+    scenarios = [s for s in scenarios if s[0] in keep]
+    grid = expand_grid(scenarios, [0.25], range(2))
+    if backends is None:
+        backends = ["dense", "fused"]
+    tel = TelemetryConfig(enabled=True, ring_size=ring_size)
+
+    log = EventLog(tool="benchmarks.bench_scenarios", mini=mini,
+                   m=m, d=d, T=T, ring_size=ring_size,
+                   grid_runs=grid.n_runs, backends=list(backends))
+    measured_step_us: dict[str, float] = {}
+    off_wall = on_wall = 0.0
+    n_cells = 0
+    dynamic = ("adaptive_inner_product", "lie_low_then_strike")
+    results_on = {}
+    for be in backends:
+        off = _timed_campaign(prob, cfg, grid, [be], None)
+        on = _timed_campaign(prob, cfg, grid, [be], tel)
+        off_wall += off.wall_s
+        on_wall += on.wall_s
+        measured_step_us[be] = off.wall_s / (off.n_runs * T) * 1e6
+        n_cells += campaign_trace_events(
+            on, log, select=lambda e: e["scenario"] in dynamic)
+        results_on[be] = on
+    overhead = on_wall / max(off_wall, 1e-9) - 1.0
+    for row in roofline_rows(measured_step_us, m, d):
+        log.event("roofline", **row)
+    timelines = [r for be in backends
+                 for r in filter_timelines(results_on[be])]
+    log.add_meta(telemetry_overhead_frac=overhead,
+                 telemetry_off_wall_s=off_wall,
+                 telemetry_on_wall_s=on_wall)
+    log.write_jsonl(trace_out)
+    perfetto = trace_out.rsplit(".", 1)[0] + ".perfetto.json"
+    log.write_chrome_trace(perfetto)
+    emit("scenarios/telemetry_overhead", overhead * 1e6,
+         f"off_s={off_wall:.3f},on_s={on_wall:.3f},cells={n_cells},"
+         f"out={trace_out}")
+    return {
+        "trace_path": trace_out,
+        "perfetto_path": perfetto,
+        "overhead_frac": overhead,
+        "off_wall_s": off_wall,
+        "on_wall_s": on_wall,
+        "cells_exported": n_cells,
+        "events": len(log.events),
+        "filter_timelines": timelines,
+    }
+
+
 def matrix_wallclock(mini: bool, skip_looped: bool = False) -> dict:
     """The 6×6 robustness matrix (every static attack × every aggregator),
     batched through one jit vs the historical per-cell Python loop."""
@@ -246,10 +350,13 @@ def matrix_wallclock(mini: bool, skip_looped: bool = False) -> dict:
 
 def main(mini: bool = False, skip_looped: bool = False,
          out_path: str = "BENCH_scenarios.json",
-         backends: list[str] | None = None) -> dict:
+         backends: list[str] | None = None,
+         trace_out: str | None = None) -> dict:
     record = campaign_leaderboard(mini, backends=backends)
     record["matrix6x6_wallclock"] = matrix_wallclock(mini, skip_looped)
     record["mini"] = mini
+    if trace_out:
+        record["telemetry"] = trace_campaign(mini, trace_out)
     write_report(record, out_path)
     emit("scenarios/report", 0.0,
          f"out={out_path},degraded_pairs={len(degraded_pairs(record))}")
@@ -267,6 +374,11 @@ if __name__ == "__main__":
                          f"(default: {','.join(MINI_BACKENDS)} for --mini, "
                          f"{','.join(BACKENDS)} otherwise)")
     ap.add_argument("--out", default="BENCH_scenarios.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="arm the guard flight recorder on a guard-only "
+                         "campaign rerun and write the JSONL event log + "
+                         "Perfetto trace here (DESIGN.md §12)")
     args = ap.parse_args()
     main(mini=args.mini, skip_looped=args.skip_looped, out_path=args.out,
-         backends=args.backends.split(",") if args.backends else None)
+         backends=args.backends.split(",") if args.backends else None,
+         trace_out=args.trace_out)

@@ -28,13 +28,12 @@ say nothing about TPU wall-clock.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.configs import get_config
 from repro.core.solver import SolverConfig, byz_rank
 from repro.data.synthetic import SyntheticTokens, make_worker_batch
@@ -255,8 +254,7 @@ def main(mini: bool = False, out_path: str = "BENCH_train.json",
                                          rounds=3 if mini else 5),
         "campaign": train_campaign(mini, steps=steps, backends=backends),
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2)
+    write_json(out_path, record)
     emit("train/report", 0.0, f"out={out_path}")
     return record
 

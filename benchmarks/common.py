@@ -1,9 +1,12 @@
-"""Benchmark utilities: timing + CSV emission."""
+"""Benchmark utilities: timing, CSV emission, provenance-stamped JSON."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+
+from repro.obs.provenance import provenance_meta
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -21,3 +24,15 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_json(path: str, record: dict) -> None:
+    """Write a ``BENCH_*.json`` record with a provenance ``meta`` block
+    (commit SHA, jax/jaxlib versions, device kind, timestamp — DESIGN.md
+    §12), so every benchmark artifact says which code on which machine
+    produced it.  An existing ``meta`` key is kept (caller stamped richer
+    fields)."""
+    record.setdefault("meta", provenance_meta())
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {path}")

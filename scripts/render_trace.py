@@ -1,0 +1,170 @@
+"""Render a guard flight-recorder trace (DESIGN.md §12) as console text.
+
+Input is the structured JSONL event log written by ``--trace`` /
+``--trace-out`` (``repro.launch.train``, ``repro.launch.serve``,
+``benchmarks.bench_scenarios``): a provenance meta line followed by
+``guard_step`` / ``timeline`` / ``span`` / ``roofline`` / ``counter``
+events.  Output:
+
+* the meta block (commit, device, measured telemetry overhead);
+* a span table (count / total / mean per ``<layer>/<phase>``);
+* the roofline comparator rows (measured vs modeled per-step µs);
+* per-run filter timelines — per-worker first-filter step split
+  byzantine/good, an ASCII Byzantine-survival sparkline, and the last
+  recorded frames' martingale deviations vs their thresholds 𝔗;
+* serve counters, when present.
+
+    PYTHONPATH=src python scripts/render_trace.py TRACE.jsonl
+    PYTHONPATH=src python scripts/render_trace.py TRACE.jsonl --perfetto out.json
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from repro.obs import EventLog, spans_by_name, write_chrome_trace
+
+_META_KEYS = ("tool", "commit", "timestamp", "backend", "device_kind",
+              "jax_version", "telemetry_overhead_frac")
+_SPARK = " ▁▂▃▄▅▆▇█"
+
+
+def _sparkline(values: list[float], width: int = 48) -> str:
+    if not values:
+        return ""
+    if len(values) > width:
+        stride = len(values) / width
+        values = [values[int(i * stride)] for i in range(width)]
+    hi = max(max(values), 1e-12)
+    return "".join(_SPARK[min(int(v / hi * (len(_SPARK) - 1)), len(_SPARK) - 1)]
+                   for v in values)
+
+
+def _survival_values(timeline_ev: dict, steps: list[dict]) -> list[float]:
+    """Per-step byz-survivor series for this run.  Prefers the timeline
+    event's full-horizon change-point curve (the ring only holds the last
+    ``ring_size`` frames); falls back to reconstructing from the recorded
+    guard_step frames (alive ∧ byz)."""
+    curve = timeline_ev.get("byz_survival")
+    if curve:
+        out, last = [], 0.0
+        end = int(curve[-1][0])
+        pairs = {int(s): float(v) for s, v in curve}
+        for step in range(1, end + 1):
+            last = pairs.get(step, last)
+            out.append(last)
+        return out
+    byz = timeline_ev.get("byz_mask") or []
+    out = []
+    for ev in steps:
+        alive = ev.get("alive") or []
+        out.append(sum(1.0 for a, b in zip(alive, byz) if b and a and a > 0))
+    return out
+
+
+def render(meta: dict, events: list[dict]) -> str:
+    lines = ["# Guard flight-recorder trace\n"]
+    for k in _META_KEYS:
+        if k in meta:
+            lines.append(f"- **{k}**: {meta[k]}")
+    extra = {k: v for k, v in meta.items()
+             if k not in _META_KEYS and k != "type"}
+    if extra:
+        lines.append(f"- run config: {extra}")
+
+    spans = spans_by_name(events)
+    if spans:
+        lines.append("\n## Spans\n")
+        lines.append("| span | count | total s | mean s |")
+        lines.append("|---|---|---|---|")
+        for name, rec in sorted(spans.items()):
+            lines.append(f"| {name} | {rec['count']} | {rec['total_s']:.3f} "
+                         f"| {rec['mean_s']:.4f} |")
+
+    roofline = [e for e in events if e.get("type") == "roofline"]
+    if roofline:
+        lines.append("\n## Measured vs roofline (per guard step)\n")
+        lines.append("| backend | m | d | measured µs | modeled µs | ratio |")
+        lines.append("|---|---|---|---|---|---|")
+        for r in roofline:
+            lines.append(
+                f"| {r['backend']} | {r['m']} | {r['d']} "
+                f"| {r['measured_step_us']:.1f} | {r['modeled_step_us']:.2f} "
+                f"| {r['measured_over_model']:.1f}x |")
+
+    counters = [e for e in events if e.get("type") == "counter"]
+    for c in counters:
+        lines.append(f"\n## Counter: {c.get('name', '?')}\n")
+        lines.append(", ".join(f"{k}={v}" for k, v in sorted(c.items())
+                               if k not in ("type", "name")))
+
+    steps_by_run: dict[str, list[dict]] = defaultdict(list)
+    for ev in events:
+        if ev.get("type") == "guard_step":
+            steps_by_run[ev.get("run", "run")].append(ev)
+    timelines = {e.get("run", "run"): e for e in events
+                 if e.get("type") == "timeline"}
+
+    for run, steps in sorted(steps_by_run.items()):
+        lines.append(f"\n## Run: {run}\n")
+        tl = timelines.get(run)
+        if tl and tl.get("first_filter_step") is not None:
+            ffs = tl["first_filter_step"]
+            byz = tl.get("byz_mask") or [False] * len(ffs)
+            rows = [(w, int(s), bool(b))
+                    for w, (s, b) in enumerate(zip(ffs, byz))]
+            caught = sorted(s for _, s, b in rows if b and s > 0)
+            missed = sum(1 for _, s, b in rows if b and s <= 0)
+            spent = [(w, s) for w, s, b in rows if not b and s > 0]
+            lines.append(
+                f"- first-filter (byz): {caught if caught else 'none'}"
+                + (f", {missed} never caught" if missed else ""))
+            lines.append(
+                "- good workers filtered: "
+                + (str(spent) if spent else "none"))
+            surv = _survival_values(tl, steps)
+            if surv:
+                span = (f"steps 1–{len(surv)}" if tl.get("byz_survival")
+                        else f"recorded steps "
+                             f"{int(steps[0].get('step', 0))}–"
+                             f"{int(steps[-1].get('step', 0))}")
+                lines.append(f"- byz survival  `{_sparkline(surv)}` ({span})")
+        # martingale-vs-threshold table for the last few recorded frames
+        lines.append("\n| step | n_alive | max dev_a / 𝔗_A "
+                     "| max dist_b / 𝔗_B | ‖ξ‖ | v_est |")
+        lines.append("|---|---|---|---|---|---|")
+        def _num(v):
+            return "-" if v is None else f"{v:.3g}"
+
+        for ev in steps[-5:]:
+            dev_a = ev.get("dev_a") or []
+            dist_b = ev.get("dist_b") or []
+            da = max((v for v in dev_a if v is not None), default=None)
+            db = max((v for v in dist_b if v is not None), default=None)
+            thr_a, thr_b = ev.get("thr_a"), ev.get("thr_b")
+            lines.append(
+                f"| {int(ev.get('step', -1))} "
+                f"| {ev.get('n_alive', '-')} "
+                f"| {_num(da)} / {_num(thr_a)} "
+                f"| {_num(db)} / {_num(thr_b)} "
+                f"| {_num(ev.get('xi_norm'))} "
+                f"| {_num(ev.get('v_est'))} |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="JSONL event log (from --trace/--trace-out)")
+    ap.add_argument("--perfetto", default=None, metavar="OUT.json",
+                    help="also convert to chrome trace-event JSON "
+                         "(load in Perfetto / chrome://tracing)")
+    args = ap.parse_args()
+    meta, events = EventLog.read_jsonl(args.trace)
+    print(render(meta, events))
+    if args.perfetto:
+        write_chrome_trace(meta, events, args.perfetto)
+        print(f"wrote {args.perfetto}")
+
+
+if __name__ == "__main__":
+    main()

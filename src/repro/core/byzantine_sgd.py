@@ -175,20 +175,28 @@ def filter_update(
 
     # line 7: scalar median of A
     a_med = scalar_median(A)
-    ok_a = jnp.abs(A - a_med) <= t_a
+    dev_a = jnp.abs(A - a_med)
+    ok_a = dev_a <= t_a
 
     # line 8: counting median of B at radius 𝔗_B
     d2_b = pairwise_sq_dists_from_gram(gram_B)
     idx_b, found_b = counting_median_index(d2_b, t_b)
-    ok_b = jnp.sqrt(d2_b[idx_b]) <= t_b
+    dist_b = jnp.sqrt(d2_b[idx_b])
+    ok_b = dist_b <= t_b
 
     # line 9: counting median of fresh gradients at radius 2V, filter at 4V
     d2_g = pairwise_sq_dists_from_gram(gram_g)
     idx_g, found_g = counting_median_index(d2_g, cfg.median_radius_mult * cfg.V)
-    ok_g = jnp.sqrt(d2_g[idx_g]) <= cfg.grad_radius_mult * cfg.V
+    dist_g = jnp.sqrt(d2_g[idx_g])
+    t_g = cfg.grad_radius_mult * cfg.V
+    ok_g = dist_g <= t_g
 
     # line 10: good_k = good_{k-1} ∩ {A ok} ∩ {B ok} ∩ {∇ ok}
     good_k = alive & ok_a & ok_b & ok_g
+    # the per-worker deviation series (dev_a / dist_b / dist_g vs their
+    # thresholds) double as the flight recorder's event schema — they are
+    # the Algorithm-1 forensics the telemetry layer streams (DESIGN.md §12)
+    # and are dead code (freely eliminated) whenever nothing consumes them
     diag = {
         "n_alive": jnp.sum(good_k),
         "a_med": a_med,
@@ -198,6 +206,10 @@ def filter_update(
         "grad_med_found": found_g,
         "threshold_A": t_a,
         "threshold_B": t_b,
+        "threshold_grad": jnp.asarray(t_g, jnp.float32),
+        "dev_a": dev_a,
+        "dist_b": dist_b,
+        "dist_g": dist_g,
         "n_fail_A": jnp.sum(~ok_a),
         "n_fail_B": jnp.sum(~ok_b),
         "n_fail_grad": jnp.sum(~ok_g),
@@ -289,42 +301,65 @@ class ByzantineGuard:
         if self.use_fused:
             # one HBM sweep: both Grams' raw terms + A-increments + B
             # (strips stream in stats dtype, accumulators f32)
-            gram_g, cross, a_inc, B = ops.fused_guard(
-                grads, state.B, delta, d_block=self.d_block
-            )
-            A = state.A + a_inc
-            gram_b = state.gram_B + cross + cross.T + gram_g
-            if self.gram_resync_every > 0:
-                gram_b = jax.lax.cond(
-                    k % self.gram_resync_every == 0,
-                    lambda: _gram32(B),
-                    lambda: gram_b,
+            with jax.named_scope("guard/stats_sweep"):
+                gram_g, cross, a_inc, B = ops.fused_guard(
+                    grads, state.B, delta, d_block=self.d_block
                 )
+                A = state.A + a_inc
+                gram_b = state.gram_B + cross + cross.T + gram_g
+            if self.gram_resync_every > 0:
+                with jax.named_scope("guard/resync"):
+                    is_resync = k % self.gram_resync_every == 0
+                    derived = jax.lax.cond(
+                        is_resync,
+                        lambda: _gram32(B),
+                        lambda: gram_b,
+                    )
+                    # resync drift: how far the rank-updated Gram had
+                    # wandered from B Bᵀ when re-anchored — observable at
+                    # resync steps (`derived` is the from-scratch Gram
+                    # there), NaN between them.  O(m²), dead code unless
+                    # the flight recorder consumes it.
+                    gram_drift = jnp.where(
+                        is_resync,
+                        jnp.linalg.norm(derived - gram_b),
+                        jnp.float32(jnp.nan),
+                    )
+                    gram_b = derived
+            else:
+                gram_drift = jnp.full((), jnp.nan, jnp.float32)
         else:
             # f32 views of the stored/rounded values — exact upcasts, so
             # the dense path is the numerics oracle at either stats dtype
-            g32 = grads.astype(jnp.float32)
-            # line 5: accumulate the two martingales (A in f32; B stored
-            # back in the stats dtype, rounded once like the fused kernel)
-            A = state.A + g32 @ delta.astype(jnp.float32)
-            B = (state.B.astype(jnp.float32) + g32).astype(self.stats_dtype)
-            # Gram matrices (the three independent O(m·d)/O(m²·d) passes
-            # the fused pipeline replaces)
-            gram_b = _gram32(B)
-            gram_g = g32 @ g32.T
+            with jax.named_scope("guard/stats_sweep"):
+                g32 = grads.astype(jnp.float32)
+                # line 5: accumulate the two martingales (A in f32; B stored
+                # back in the stats dtype, rounded once like the fused kernel)
+                A = state.A + g32 @ delta.astype(jnp.float32)
+                B = (state.B.astype(jnp.float32) + g32).astype(self.stats_dtype)
+                # Gram matrices (the three independent O(m·d)/O(m²·d) passes
+                # the fused pipeline replaces)
+                gram_b = _gram32(B)
+                gram_g = g32 @ g32.T
+            # the dense path re-derives gram_B every step — drift is zero
+            # by construction (that is what makes it the drift oracle)
+            gram_drift = jnp.zeros((), jnp.float32)
 
-        good_k, diag = filter_update(A, gram_b, gram_g, state.alive, k, cfg)
+        with jax.named_scope("guard/filter"):
+            good_k, diag = filter_update(A, gram_b, gram_g, state.alive, k, cfg)
+        diag["gram_drift"] = gram_drift
 
         denom = jnp.where(
             cfg.mean_over_alive, jnp.maximum(jnp.sum(good_k), 1), m
         ).astype(jnp.float32)
-        if self.use_fused:
-            xi = ops.filtered_mean(
-                grads, good_k.astype(jnp.float32) / denom, 1.0,
-                d_block=self.d_block,
-            )
-        else:
-            xi = (good_k.astype(jnp.float32) @ grads.astype(jnp.float32)) / denom
+        with jax.named_scope("guard/aggregate"):
+            if self.use_fused:
+                xi = ops.filtered_mean(
+                    grads, good_k.astype(jnp.float32) / denom, 1.0,
+                    d_block=self.d_block,
+                )
+            else:
+                xi = (good_k.astype(jnp.float32) @ grads.astype(jnp.float32)) / denom
 
         new_state = GuardState(A=A, B=B, alive=good_k, k=k, gram_B=gram_b)
         return new_state, xi, diag

@@ -69,8 +69,9 @@ import jax.numpy as jnp
 
 from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig, resolve_stats_dtype
 from repro.kernels.ops import default_d_block
+from repro.obs.telemetry import guard_frame, telemetry_on
 
-GuardBackendFactory = Callable  # (problem, cfg, **opts) -> (state0, step)
+GuardBackendFactory = Callable  # (problem, cfg, *, telemetry, **opts) -> (state0, step)
 
 _REGISTRY: dict[str, GuardBackendFactory] = {}
 
@@ -100,22 +101,32 @@ def parse_backend_spec(spec: str) -> tuple[str, str | None]:
 
 
 def _declared_opts(factory: GuardBackendFactory) -> set[str]:
-    """Knob names a factory declares (everything past (problem, cfg))."""
+    """Knob names a factory declares (everything past (problem, cfg);
+    ``telemetry`` is the protocol's own axis, not a backend knob)."""
     sig = inspect.signature(factory)
     return {
         p.name for p in sig.parameters.values()
         if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
-        and p.name not in ("problem", "cfg")
+        and p.name not in ("problem", "cfg", "telemetry")
     }
 
 
-def make_guard_backend(name: str, problem, cfg):
+def make_guard_backend(name: str, problem, cfg, telemetry=None):
     """Instantiate backend ``name`` for (problem, cfg) — the solver's entry.
 
     Returns ``(state0, step)`` with the step signature documented above.
     ``cfg.guard_opts`` keys the factory does not declare are dropped (so a
     single opts tuple serves every backend of a campaign sweep), but a key
     unknown to *every* registered backend is a ``KeyError``.
+
+    ``telemetry`` (a :class:`repro.obs.TelemetryConfig`, DESIGN.md §12)
+    switches the step into *probed* form: it returns a fifth element, the
+    flight-recorder frame (per-worker martingale deviations vs thresholds,
+    alive mask, auto-V, resync drift) on the shared
+    ``repro.obs.telemetry.FRAME_SCHEMA`` — identical keys from every
+    backend, NaN where a backend has nothing to report.  With telemetry
+    off (the default) the step signature and trace are exactly the
+    historical four-tuple.
     """
     try:
         factory = _REGISTRY[name]
@@ -133,8 +144,8 @@ def make_guard_backend(name: str, problem, cfg):
             f"known knobs: {sorted(known)}"
         )
     declared = _declared_opts(factory)
-    return factory(problem, cfg, **{k: v for k, v in opts.items()
-                                    if k in declared})
+    return factory(problem, cfg, telemetry=telemetry,
+                   **{k: v for k, v in opts.items() if k in declared})
 
 
 # ---------------------------------------------------------------------------
@@ -148,29 +159,34 @@ def _guard_config(problem, cfg) -> GuardConfig:
     )
 
 
-def _wrap_byzantine_guard(guard: ByzantineGuard, d: int):
+def _wrap_byzantine_guard(guard: ByzantineGuard, d: int, telemetry=None):
     state0 = guard.init(d)
+    probe = telemetry_on(telemetry)
+    m = guard.cfg.m
 
     def step(state, grads, x, x1):
         state, xi, diag = guard.step(state, grads, x, x1)
-        return state, xi, diag["n_alive"], state.alive
+        if not probe:
+            return state, xi, diag["n_alive"], state.alive
+        return (state, xi, diag["n_alive"], state.alive,
+                guard_frame(m, diag, state.alive))
 
     return state0, step
 
 
 @register_guard_backend("dense")
-def _dense_backend(problem, cfg):
+def _dense_backend(problem, cfg, telemetry=None):
     # three-pass reference; gram_B is re-derived from the stored B every
     # step, which is what makes dense the drift oracle at either stats
     # dtype (per-step re-derivation = gram_resync_every-style resync
     # taken to its limit)
     guard = ByzantineGuard(_guard_config(problem, cfg),
                            stats_dtype=cfg.stats_dtype)
-    return _wrap_byzantine_guard(guard, problem.d)
+    return _wrap_byzantine_guard(guard, problem.d, telemetry)
 
 
 @register_guard_backend("fused")
-def _fused_backend(problem, cfg, d_block: int | None = None,
+def _fused_backend(problem, cfg, telemetry=None, d_block: int | None = None,
                    gram_resync_every: int = 64):
     guard = ByzantineGuard(
         _guard_config(problem, cfg),
@@ -179,14 +195,15 @@ def _fused_backend(problem, cfg, d_block: int | None = None,
         gram_resync_every=gram_resync_every,
         stats_dtype=cfg.stats_dtype,
     )
-    return _wrap_byzantine_guard(guard, problem.d)
+    return _wrap_byzantine_guard(guard, problem.d, telemetry)
 
 
 # ---------------------------------------------------------------------------
 # dp_exact / dp_sketch — the distributed guard on the flat harness
 # ---------------------------------------------------------------------------
 
-def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
+def _dp_backend(problem, cfg, mode: str, *, telemetry=None,
+                auto_v: bool = True,
                 sketch_dim: int = 4096, sketch_slack: float = 1.5,
                 incremental_gram: bool = True, gram_resync_every: int = 64,
                 low_precision_stats: bool = False, v_ema: float = 0.9):
@@ -217,6 +234,7 @@ def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
     # single (d,) leaf and the stacked (m, d) gradients are a one-leaf
     # worker pytree — worker_vdot/worker_pair_gram consume them unchanged
     state0 = init_guard_state(dcfg, jnp.zeros((problem.d,), jnp.float32))
+    probe = telemetry_on(telemetry)
 
     def step(state, grads, x, x1):
         state, xi, diag = guard_step(dcfg, state, grads, x, x1)
@@ -224,19 +242,22 @@ def _dp_backend(problem, cfg, mode: str, *, auto_v: bool = True,
         # fused convention; the solver's scan carries f32 feedback) — the
         # pytree mesh path keeps gradient-dtype ξ, but here the low-
         # precision einsum's grads-dtype result casts back up
-        return state, xi.astype(jnp.float32), diag["n_alive"], state.alive
+        if not probe:
+            return state, xi.astype(jnp.float32), diag["n_alive"], state.alive
+        return (state, xi.astype(jnp.float32), diag["n_alive"], state.alive,
+                guard_frame(cfg.m, diag, state.alive))
 
     return state0, step
 
 
 @register_guard_backend("dp_exact")
-def _dp_exact_backend(problem, cfg, **opts):
-    return _dp_backend(problem, cfg, "exact", **opts)
+def _dp_exact_backend(problem, cfg, telemetry=None, **opts):
+    return _dp_backend(problem, cfg, "exact", telemetry=telemetry, **opts)
 
 
 @register_guard_backend("dp_sketch")
-def _dp_sketch_backend(problem, cfg, **opts):
-    return _dp_backend(problem, cfg, "sketch", **opts)
+def _dp_sketch_backend(problem, cfg, telemetry=None, **opts):
+    return _dp_backend(problem, cfg, "sketch", telemetry=telemetry, **opts)
 
 
 # the dp wrappers forward **opts to _dp_backend, whose signature is the

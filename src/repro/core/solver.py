@@ -25,6 +25,13 @@ import jax.numpy as jnp
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core.guard_backends import make_guard_backend
+from repro.obs.telemetry import (
+    Telemetry,
+    baseline_frame,
+    ring_init,
+    ring_push,
+    telemetry_on,
+)
 
 
 class Problem(NamedTuple):
@@ -108,6 +115,10 @@ class SolverResult(NamedTuple):
     byz_mask: jax.Array         # (m,) workers that were *ever* Byzantine
     ever_filtered_good: jax.Array  # () bool — did the filter ever drop a good worker
     final_alive: jax.Array      # (m,) bool
+    telemetry: object = None    # repro.obs.Telemetry when the flight recorder
+    #                             ran (DESIGN.md §12); None otherwise — a None
+    #                             leaf keeps the pytree structure (and every
+    #                             historical consumer) unchanged
 
 
 def byz_rank(key: jax.Array, m: int) -> jax.Array:
@@ -167,7 +178,7 @@ def _validate_agg_opts(opts: dict) -> None:
                        f"known knobs: {sorted(known)}")
 
 
-def make_aggregator(problem, cfg: SolverConfig):
+def make_aggregator(problem, cfg: SolverConfig, telemetry=None):
     """Returns (init_state, step(state, grads, x, x1) -> (state, xi, n_alive, alive)).
 
     ``byzantine_sgd`` dispatches through the guard-backend registry
@@ -195,10 +206,32 @@ def make_aggregator(problem, cfg: SolverConfig):
     from its ravelled parameter tree (DESIGN.md §10) both qualify, which is
     what makes this the *single* aggregation entry point for the flat
     harness and for model training.
+
+    ``telemetry`` (a :class:`repro.obs.TelemetryConfig`, DESIGN.md §12)
+    switches every branch into the *probed* five-tuple form of
+    :func:`repro.core.guard_backends.make_guard_backend`: the step also
+    returns a flight-recorder frame on the shared ``FRAME_SCHEMA``.
+    Guard backends fill the per-worker martingale forensics; baseline
+    aggregators report the baseline frame (alive mask + n_alive, NaN
+    elsewhere).  Off (the default) is the historical four-tuple —
+    signature and trace unchanged.
     """
     opts = dict(cfg.agg_opts)
     _validate_agg_opts(opts)
     bucket_s, name = parse_aggregator_spec(cfg.aggregator)
+    probe = telemetry_on(telemetry)
+
+    def _probed(state0, step4):
+        # generic baseline probe: append a baseline_frame to a 4-tuple step
+        if not probe:
+            return state0, step4
+
+        def step(state, grads, x, x1):
+            state, xi, n_alive, alive = step4(state, grads, x, x1)
+            return (state, xi, n_alive, alive,
+                    baseline_frame(cfg.m, alive, n_alive))
+
+        return state0, step
 
     if bucket_s is not None:
         if cfg.m % bucket_s:
@@ -226,10 +259,10 @@ def make_aggregator(problem, cfg: SolverConfig):
             # bucketing reports the stateless all-alive convention
             return (key, inner), xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
 
-        return state0, step
+        return _probed(state0, step)
 
     if name == "byzantine_sgd":
-        return make_guard_backend(cfg.guard_backend, problem, cfg)
+        return make_guard_backend(cfg.guard_backend, problem, cfg, telemetry)
 
     if name in agg_lib.STATEFUL_AGGREGATORS:
         factory = agg_lib.STATEFUL_AGGREGATORS[name]
@@ -241,7 +274,7 @@ def make_aggregator(problem, cfg: SolverConfig):
             state, xi = agg_step(state, grads)
             return state, xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
 
-        return state0, step
+        return _probed(state0, step)
 
     kwargs = {}
     if name in ("krum", "multi_krum"):
@@ -262,7 +295,7 @@ def make_aggregator(problem, cfg: SolverConfig):
         xi = fn(grads)
         return state, xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
 
-    return jnp.zeros(()), step
+    return _probed(jnp.zeros(()), step)
 
 
 def run_sgd(
@@ -270,6 +303,7 @@ def run_sgd(
     cfg: SolverConfig,
     key: jax.Array,
     adversary=None,
+    telemetry=None,
 ) -> SolverResult:
     """Run one full optimization (jit-compiled scan over T iterations).
 
@@ -290,7 +324,20 @@ def run_sgd(
     Both paths feed the attack a ``ctx`` extended with the previous step's
     filter feedback (``alive``, ``n_alive``, ``prev_xi``) — everything the
     Remark-2.3 adversary may observe.
+
+    ``telemetry`` (:class:`repro.obs.TelemetryConfig`, DESIGN.md §12) arms
+    the guard flight recorder: the aggregator step runs in probed form and
+    its per-step frame — completed here with ``step``, ``‖ξ_k‖``, and the
+    adversary's ``adapt_scale`` feedback signal when it carries one — is
+    pushed into a fixed-size on-device ring buffer carried by the scan.
+    Two full-horizon series ride alongside: per-worker first-filter step
+    and the per-step count of surviving Byzantine workers.  The result's
+    ``telemetry`` field holds all three; everything stays on device until
+    the caller drains it (``ring_read``).  ``None`` / ``enabled=False``
+    is statically off — the scan carry, ys, and trace are bit-identical
+    to the historical program.
     """
+    tel_on = telemetry_on(telemetry)
     key, mask_key = jax.random.split(key)
     rank = byz_rank(mask_key, cfg.m)
     if adversary is None:
@@ -300,11 +347,15 @@ def run_sgd(
         adv_state0: object = jnp.zeros(())
     else:
         adv_state0 = adversary.init_state(cfg.m, problem.d)
-    agg_state0, agg_step = make_aggregator(problem, cfg)
+    agg_state0, agg_step = make_aggregator(problem, cfg, telemetry)
     x1 = problem.x1.astype(jnp.float32)
 
     def body(carry, k):
-        x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered, fb, rng = carry
+        if tel_on:
+            (x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered,
+             fb, rng, tel) = carry
+        else:
+            x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered, fb, rng = carry
         prev_xi, prev_alive, prev_n_alive = fb
         rng, gkey, akey = jax.random.split(rng, 3)
         worker_keys = jax.random.split(gkey, cfg.m)
@@ -320,7 +371,10 @@ def run_sgd(
             mask_k = adversary.mask_at(rank, k)
             grads = adversary.attack(akey, grads, mask_k, ctx, adv_state)
 
-        agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1)
+        if tel_on:
+            agg_state, xi, n_alive, alive, frame = agg_step(agg_state, grads, x, x1)
+        else:
+            agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1)
         if adversary is not None:
             adv_state = adversary.update_state(
                 adv_state, mask_k, grads, xi, alive, n_alive, ctx
@@ -336,9 +390,31 @@ def run_sgd(
         ever_byz = ever_byz | mask_k
         any_good_filtered = any_good_filtered | jnp.any((~alive) & (~ever_byz))
         fb = (xi, alive, jnp.asarray(n_alive, jnp.int32))
+        if tel_on:
+            ring, ffs = tel
+            # complete the aggregator's frame with the solver-level signals:
+            # 1-based step (the paper's k), ‖ξ_k‖, and the adaptive
+            # adversary's feedback scale when its state carries one
+            # (duck-typed — the core layer doesn't import AdvState)
+            frame["step"] = (k + 1).astype(jnp.float32)
+            frame["xi_norm"] = jnp.linalg.norm(xi).astype(jnp.float32)
+            scale = getattr(adv_state, "adapt_scale", None)
+            if scale is not None:
+                frame["adapt_scale"] = jnp.asarray(scale, jnp.float32)
+            ring = ring_push(ring, frame)
+            # first step (1-based) each worker was filtered; -1 = never
+            ffs = jnp.where((ffs < 0) & ~alive, k + 1, ffs)
+            byz_alive = jnp.sum(alive & mask_k).astype(jnp.int32)
+            tel_new = (ring, ffs)
         # Theorem-3.8 average is over the iterates the gradients were *taken
         # at*: x̄ = (1/T) Σ_{k≤T} x_k — accumulate x (= x_k), not x_new
         # (= x_{k+1}), or the sum runs x_2…x_{T+1} and excludes x_1
+        if tel_on:
+            return (
+                (x_new, agg_state, adv_state, x_sum + x, ever_byz,
+                 any_good_filtered, fb, rng, tel_new),
+                (gap, n_alive, byz_alive),
+            )
         return (
             (x_new, agg_state, adv_state, x_sum + x, ever_byz,
              any_good_filtered, fb, rng),
@@ -352,9 +428,22 @@ def run_sgd(
     )
     carry0 = (x1, agg_state0, adv_state0, jnp.zeros_like(x1),
               jnp.zeros((cfg.m,), bool), jnp.asarray(False), fb0, key)
-    (x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _), (gaps, n_alive) = (
-        jax.lax.scan(body, carry0, jnp.arange(cfg.T))
-    )
+    if tel_on:
+        tel0 = (ring_init(cfg.m, telemetry.ring_size),
+                jnp.full((cfg.m,), -1, jnp.int32))
+        carry0 = carry0 + (tel0,)
+        carry_fin, (gaps, n_alive, byz_alive) = (
+            jax.lax.scan(body, carry0, jnp.arange(cfg.T))
+        )
+        (x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _,
+         (ring_fin, ffs_fin)) = carry_fin
+        tel_out = Telemetry(ring=ring_fin, first_filter_step=ffs_fin,
+                            byz_alive=byz_alive)
+    else:
+        (x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _), (gaps, n_alive) = (
+            jax.lax.scan(body, carry0, jnp.arange(cfg.T))
+        )
+        tel_out = None
     final_alive = (
         agg_state.alive if hasattr(agg_state, "alive") else jnp.ones((cfg.m,), bool)
     )
@@ -366,6 +455,7 @@ def run_sgd(
         byz_mask=ever_byz,
         ever_filtered_good=good_filtered,
         final_alive=final_alive,
+        telemetry=tel_out,
     )
 
 

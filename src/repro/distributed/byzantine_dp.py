@@ -401,30 +401,36 @@ def guard_step(
             gram_B = worker_cross_gram(B, lp)
 
     # --- V calibration + filter --------------------------------------------
-    v_eff = _calibrate_v(cfg, gram_g, state.v_est)
-    slack = cfg.sketch_slack if cfg.mode == "sketch" else 1.0
-    gcfg = cfg.guard_config(v_eff * slack)
-    good_k, diag = filter_update(A, gram_B, gram_g, state.alive, k_new, gcfg)
+    # guard/filter named scope (DESIGN.md §12 span convention): the dp
+    # backends share the dense/fused phase names so one XLA profile query
+    # attributes filter time across all four realizations
+    with jax.named_scope("guard/filter"):
+        v_eff = _calibrate_v(cfg, gram_g, state.v_est)
+        slack = cfg.sketch_slack if cfg.mode == "sketch" else 1.0
+        gcfg = cfg.guard_config(v_eff * slack)
+        good_k, diag = filter_update(A, gram_B, gram_g, state.alive, k_new, gcfg)
 
     # --- filtered mean (the paper's ξ_k) -------------------------------------
     denom = jnp.where(
         cfg.mean_over_alive, jnp.maximum(jnp.sum(good_k), 1), W
     ).astype(jnp.float32)
     w = good_k.astype(jnp.float32) / denom
-    if lp:
-        # fused mask-and-reduce in native dtype, f32 accumulation — this is
-        # what the filtered_mean Pallas kernel computes on TPU
-        xi = jax.tree_util.tree_map(
-            lambda g: jnp.einsum(
-                "w,w...->...", w.astype(g.dtype), g,
-                preferred_element_type=jnp.float32,
-            ).astype(g.dtype),
-            grads_w,
-        )
-    else:
-        xi = jax.tree_util.tree_map(
-            lambda g: jnp.einsum("w,w...->...", w, _leaf_f32(g)).astype(g.dtype), grads_w
-        )
+    with jax.named_scope("guard/aggregate"):
+        if lp:
+            # fused mask-and-reduce in native dtype, f32 accumulation — this
+            # is what the filtered_mean Pallas kernel computes on TPU
+            xi = jax.tree_util.tree_map(
+                lambda g: jnp.einsum(
+                    "w,w...->...", w.astype(g.dtype), g,
+                    preferred_element_type=jnp.float32,
+                ).astype(g.dtype),
+                grads_w,
+            )
+        else:
+            xi = jax.tree_util.tree_map(
+                lambda g: jnp.einsum("w,w...->...", w, _leaf_f32(g)).astype(g.dtype),
+                grads_w,
+            )
 
     diag = dict(diag, v_est=v_eff, sq_norm_mean=jnp.mean(sq_g))
     new_state = DPGuardState(A=A, B=B, alive=good_k, k=k_new, v_est=v_eff,

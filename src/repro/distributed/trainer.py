@@ -55,6 +55,7 @@ from repro.core.solver import SolverConfig, make_aggregator
 from repro.core.tree_harness import FlatSpec, params_harness
 from repro.distributed.byzantine_dp import v_from_gram
 from repro.models.model import LanguageModel
+from repro.obs.telemetry import telemetry_on
 from repro.optim.optimizers import Optimizer
 from repro.utils import tree_add
 
@@ -149,6 +150,7 @@ def build_train_step(
     V: float = 0.0,
     D: float = 10.0,
     adversary=None,
+    telemetry=None,
 ) -> Callable:
     """Returns train_step(state, batch, byz_rank, key) → (state', metrics).
 
@@ -165,11 +167,20 @@ def build_train_step(
     ``repro.launch.train``).  ``adversary`` may close over traced leaves, so
     a whole (scenario × α × seed) grid of *training runs* vmaps into one jit
     (:func:`repro.scenarios.train_campaign.run_train_campaign`).
+
+    ``telemetry`` (:class:`repro.obs.TelemetryConfig`, DESIGN.md §12) arms
+    the flight recorder: the aggregator runs in probed form and the frame
+    joins ``metrics`` under ``tel/``-prefixed keys (per-worker arrays
+    included), riding the trainer's existing stacked-metrics flush — no
+    ring buffer needed, the chunked scan driver already transfers metrics
+    once per ``log_every`` chunk.  Off (the default) leaves the metrics
+    schema and trace untouched.
     """
     _validate(cfg, V)
     harness = params_harness(model)
     spec = FlatSpec(harness.d, V, D)
-    _, agg_step = make_aggregator(spec, cfg)
+    tel_on = telemetry_on(telemetry)
+    _, agg_step = make_aggregator(spec, cfg, telemetry)
     # cast-once-at-ravel (DESIGN.md §5 Numerics): gradient trees ravel
     # straight into the guard's statistics dtype — natively-bf16 LM grads
     # skip the f32 inflation pass entirely under stats_dtype='bf16'.
@@ -219,9 +230,14 @@ def build_train_step(
         else:
             flat = adversary.attack(key, flat, mask_k, ctx, state.adv)
 
-        guard, xi_flat, n_alive, alive = agg_step(
-            state.guard, flat, x, state.anchor
-        )
+        if tel_on:
+            guard, xi_flat, n_alive, alive, frame = agg_step(
+                state.guard, flat, x, state.anchor
+            )
+        else:
+            guard, xi_flat, n_alive, alive = agg_step(
+                state.guard, flat, x, state.anchor
+            )
         adv = state.adv
         if adversary is not None:
             adv = adversary.update_state(
@@ -244,9 +260,22 @@ def build_train_step(
             "good_filtered": jnp.sum((~alive) & (~ever_byz)),
             "byz_alive": jnp.sum(alive & mask_k),
             "n_byz": jnp.sum(mask_k),
+            # uniform schema across every aggregator/backend: auto-V-less
+            # paths report NaN instead of dropping the key, so stacked
+            # campaign metrics and log records never go ragged
+            "v_est": (guard.v_est if hasattr(guard, "v_est")
+                      else jnp.full((), jnp.nan, jnp.float32)),
         }
-        if hasattr(guard, "v_est"):
-            metrics["v_est"] = guard.v_est
+        if tel_on:
+            # complete the frame with trainer-level signals (the solver's
+            # run_sgd convention: 1-based step, ‖ξ‖, adversary feedback)
+            frame["step"] = (k + 1).astype(jnp.float32)
+            frame["xi_norm"] = jnp.linalg.norm(
+                xi_flat.astype(jnp.float32))
+            scale = getattr(adv, "adapt_scale", None)
+            if scale is not None:
+                frame["adapt_scale"] = jnp.asarray(scale, jnp.float32)
+            metrics.update({f"tel/{key}": val for key, val in frame.items()})
         new_state = TrainState(
             params=params, opt_state=opt_state, guard=guard,
             anchor=state.anchor, step=k + 1, ever_byz=ever_byz, adv=adv,

@@ -2,6 +2,9 @@
 
 Demonstrates the full serve path (prefill → ring/latent/SSM caches →
 decode_step) that the decode-shape dry-runs lower at production scale.
+``--trace PATH`` records ``serve/prefill`` / ``serve/decode`` phase spans
+and a throughput counter through the same structured event log as the
+training flight recorder (DESIGN.md §12).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 32
 """
@@ -16,11 +19,12 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.distributed.trainer import build_serve_step
 from repro.models import build_model
+from repro.obs import EventLog, trace_span
 
 
 def run_serving(arch: str, *, batch: int = 4, prompt_len: int = 64,
                 gen_tokens: int = 32, cache_len: int = 256, seed: int = 0,
-                reduced: bool = True):
+                reduced: bool = True, trace: str | None = None):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -39,23 +43,40 @@ def run_serving(arch: str, *, batch: int = 4, prompt_len: int = 64,
 
     prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
     serve_step = jax.jit(build_serve_step(model))
+    elog = EventLog(tool="repro.launch.serve", arch=arch, batch=batch,
+                    prompt_len=prompt_len, gen_tokens=gen_tokens,
+                    cache_len=cache_len) if trace else None
 
     t0 = time.time()
-    logits, cache = prefill(params, batch_in)
-    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    with trace_span("serve/prefill", log=elog, batch=batch,
+                    prompt_len=prompt_len):
+        logits, cache = prefill(params, batch_in)
+        tok = jax.block_until_ready(
+            jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32))
     t_prefill = time.time() - t0
 
     out_tokens = [tok]
     t0 = time.time()
-    for _ in range(gen_tokens - 1):
-        tok, cache = serve_step(params, cache, tok)
-        out_tokens.append(tok)
-    gen = jnp.concatenate(out_tokens, axis=1)
+    with trace_span("serve/decode", log=elog, n_tokens=gen_tokens - 1):
+        for _ in range(gen_tokens - 1):
+            tok, cache = serve_step(params, cache, tok)
+            out_tokens.append(tok)
+        gen = jax.block_until_ready(jnp.concatenate(out_tokens, axis=1))
     t_decode = time.time() - t0
+    ms_tok = t_decode / max(gen_tokens - 1, 1) * 1e3
     print(f"{arch}: prefill({batch}x{prompt_len}) {t_prefill:.2f}s, "
           f"decode {gen_tokens} tokens {t_decode:.2f}s "
-          f"({t_decode/max(gen_tokens-1,1)*1e3:.0f} ms/tok)")
+          f"({ms_tok:.0f} ms/tok)")
     print("sample:", gen[0, :16].tolist())
+    if elog is not None:
+        # batch sequences decode in parallel → batch tokens per step
+        elog.event("counter", name="serve/throughput",
+                   prefill_s=t_prefill, decode_s=t_decode,
+                   ms_per_token=ms_tok,
+                   tokens_per_s=batch * max(gen_tokens - 1, 1)
+                   / max(t_decode, 1e-9))
+        elog.write_jsonl(trace)
+        print(f"wrote trace {trace}")
     return gen
 
 
@@ -66,9 +87,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write serve phase timings + throughput as "
+                         "structured JSONL (DESIGN.md §12)")
     args = ap.parse_args()
     run_serving(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                gen_tokens=args.tokens, cache_len=args.cache_len)
+                gen_tokens=args.tokens, cache_len=args.cache_len,
+                trace=args.trace)
 
 
 if __name__ == "__main__":

@@ -63,6 +63,7 @@ from repro.core.solver import SolverConfig, byz_rank
 from repro.data.synthetic import SyntheticTokens, make_worker_batch
 from repro.distributed.trainer import build_train_step, init_train_state
 from repro.models import build_model
+from repro.obs import EventLog, TelemetryConfig, trace_span
 from repro.optim import adamw, linear_warmup_cosine
 
 GUARD_BACKENDS = ("dp_exact", "dp_sketch", "dense", "fused")
@@ -105,9 +106,15 @@ def run_training(
     guard_v: float = 0.0, scenario: str | None = None, lr: float = 3e-3,
     seed: int = 0, ckpt_dir: str | None = None, resume: bool = False,
     stop_after: int | None = None, log_every: int = 10, d_model: int = 256,
-    driver: str = "scan",
+    driver: str = "scan", trace: str | None = None,
 ):
     """Train ``steps`` steps; returns (final TrainState, per-step history).
+
+    ``trace`` (a path) arms the guard flight recorder (DESIGN.md §12):
+    per-step filter forensics ride the chunk flush as ``tel/`` metrics and
+    are written — together with ``train/chunk`` host spans and the run's
+    provenance — as structured JSONL at that path
+    (``scripts/render_trace.py`` renders it; ``--perfetto`` converts).
 
     ``driver="scan"`` (default) runs chunked ``lax.scan`` with on-device
     data generation; ``driver="loop"`` is the historical one-jitted-call-
@@ -142,8 +149,16 @@ def run_training(
     adversary = (_make_scenario_adversary(scenario, grad_attack, alpha,
                                           steps, workers)
                  if scenario is not None else None)
+    telemetry = TelemetryConfig(enabled=True) if trace else None
+    elog = None
+    if trace:
+        elog = EventLog(
+            tool="repro.launch.train", arch=arch, workers=workers,
+            steps=steps, alpha=alpha, attack=attack, aggregator=aggregator,
+            guard_backend=guard_backend, scenario=scenario, seed=seed,
+        )
     train_step = build_train_step(model, opt, scfg, V=guard_v,
-                                  adversary=adversary)
+                                  adversary=adversary, telemetry=telemetry)
 
     # PRNG: one split at the top → disjoint init / mask / data / loop streams
     init_key, mask_key, data_key, loop_key = jax.random.split(
@@ -185,6 +200,24 @@ def run_training(
 
     t0 = time.time()
     n_prior = len(history)
+    run_label = f"train/{arch}"
+
+    def flush_recs(ms, lo, hi, stacked=True):
+        """Host-side split of one metrics transfer: ``tel/`` forensics
+        (per-worker arrays included) go to the event log as guard_step
+        events, everything else becomes scalar history records."""
+        for j, i in enumerate(range(lo, hi)):
+            rec, frame = {}, {}
+            for k, v in ms.items():
+                vj = v[j] if stacked else v
+                if k.startswith("tel/"):
+                    frame[k[4:]] = vj
+                else:
+                    rec[k] = float(vj)
+            rec["step"] = i
+            history.append(rec)
+            if elog is not None and frame:
+                elog.guard_step(frame, run=run_label)
 
     def log(rec):
         print(
@@ -212,19 +245,16 @@ def run_training(
 
         def run_segment(state, lo, hi):
             if hi - lo == log_every:
-                state, ms = run_chunk(state, jnp.arange(lo, hi))
-                ms = jax.device_get(ms)
-                recs = [{k: float(v[j]) for k, v in ms.items()}
-                        for j in range(hi - lo)]
+                with trace_span("train/chunk", log=elog, lo=lo, hi=hi):
+                    state, ms = run_chunk(state, jnp.arange(lo, hi))
+                    ms = jax.device_get(ms)
+                flush_recs(ms, lo, hi)
             else:
-                recs = []
                 for i in range(lo, hi):
-                    state, m = step_fn(state, jnp.asarray(i))
-                    recs.append({k: float(v) for k, v in
-                                 jax.device_get(m).items()})
-            for j, i in enumerate(range(lo, hi)):
-                recs[j]["step"] = i
-            history.extend(recs)
+                    with trace_span("train/step", log=elog, i=i):
+                        state, m = step_fn(state, jnp.asarray(i))
+                        m = jax.device_get(m)
+                    flush_recs(m, i, i + 1, stacked=False)
             return state
 
         lo = start
@@ -245,11 +275,9 @@ def run_training(
         step_fn = jax.jit(one_step)
         for i in range(start, stop):
             state, metrics = step_fn(state, jnp.asarray(i))
-            rec = {k: float(v) for k, v in metrics.items()}
-            rec["step"] = i
-            history.append(rec)
+            flush_recs(jax.device_get(metrics), i, i + 1, stacked=False)
             if i % log_every == 0 or i == stop - 1:
-                log(rec)
+                log(history[-1])
     else:
         raise KeyError(f"unknown driver {driver!r}; have scan|loop")
 
@@ -259,6 +287,11 @@ def run_training(
         save_checkpoint(ckpt_dir, int(jax.device_get(state.step)), state)
         with open(f"{ckpt_dir}/history.json", "w") as f:
             json.dump(history, f)
+    if elog is not None:
+        elog.add_meta(wall_s=time.time() - t0,
+                      steps_run=max(stop - start, 0))
+        elog.write_jsonl(trace)
+        print(f"wrote trace {trace} ({len(elog.events)} events)")
     return state, history
 
 
@@ -300,6 +333,10 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="continue from the latest checkpoint in --ckpt-dir")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="arm the guard flight recorder (DESIGN.md §12) and "
+                         "write the structured JSONL event log here; render "
+                         "with scripts/render_trace.py")
     args = ap.parse_args()
     run_training(
         args.arch, reduced=args.reduced, workers=args.workers,
@@ -309,7 +346,7 @@ def main():
         stats_dtype=args.stats_dtype,
         guard_v=args.guard_v, scenario=args.scenario, driver=args.driver,
         lr=args.lr, seed=args.seed, ckpt_dir=args.ckpt_dir,
-        resume=args.resume, log_every=args.log_every,
+        resume=args.resume, log_every=args.log_every, trace=args.trace,
     )
 
 

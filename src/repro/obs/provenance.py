@@ -1,0 +1,56 @@
+"""Run provenance — the attribution block every emitted artifact carries.
+
+Perf numbers and traces are only comparable run-to-run when each record
+says what produced it: the commit, the jax/jaxlib pair (XLA changes move
+wall-clock), the device kind (CPU-interpret Pallas numbers are not TPU
+numbers), and when.  :func:`provenance_meta` is the single source of that
+block — ``benchmarks/common.write_json`` stamps it into every
+``BENCH_*.json`` and :class:`repro.obs.events.EventLog` into every trace
+(DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+from datetime import datetime, timezone
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def provenance_meta() -> dict:
+    """Commit SHA, jax/jaxlib versions, device kind/platform, ISO timestamp.
+
+    Imports jax lazily and degrades to ``"unknown"`` fields rather than
+    raising — provenance must never be the reason a benchmark fails.
+    """
+    meta = {
+        "commit": _git_sha(),
+        "timestamp": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        import jaxlib
+
+        dev = jax.devices()[0]
+        meta.update(
+            jax_version=jax.__version__,
+            jaxlib_version=jaxlib.__version__,
+            backend=jax.default_backend(),
+            device_kind=getattr(dev, "device_kind", "unknown"),
+            n_devices=jax.device_count(),
+        )
+    except Exception:  # noqa: BLE001 — provenance is best-effort by design
+        meta.update(jax_version="unknown", jaxlib_version="unknown",
+                    backend="unknown", device_kind="unknown", n_devices=0)
+    return meta

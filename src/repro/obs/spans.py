@@ -1,0 +1,53 @@
+"""Profiler spans — phase attribution for XLA profiles and host traces
+(DESIGN.md §12).
+
+Two instruments with one naming convention (``<layer>/<phase>``, e.g.
+``guard/fused_sweep``, ``train/chunk``, ``serve/prefill``):
+
+* :func:`guard_scope` — a ``jax.named_scope`` wrapper used *inside* traced
+  code.  Pure HLO metadata: op names gain the ``guard/<phase>`` prefix so
+  an XLA profile (``jax.profiler.trace`` + Perfetto) attributes device
+  time to guard phases instead of one anonymous fusion soup.  Zero ops,
+  zero numerics — safe to leave on unconditionally, which is why the four
+  guard backends and the fused kernel carry their scopes always.
+* :func:`trace_span` — a host-side context manager combining
+  ``jax.profiler.TraceAnnotation`` (so the span also lands on the device
+  profile's host track when a profiler session is active) with a
+  perf-counter measurement appended to an :class:`~repro.obs.events.
+  EventLog` as a ``span`` event.  These are the measured timings the
+  roofline comparator joins against ``roofline/guard_cost`` predictions.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+# span naming convention: '<layer>/<phase>' — the layer segment becomes
+# the chrome-trace thread, so phases of one layer share a track
+GUARD_PHASES = ("stats_sweep", "filter", "aggregate", "resync")
+
+
+def guard_scope(phase: str):
+    """``jax.named_scope('guard/<phase>')`` — in-trace metadata only."""
+    return jax.named_scope(f"guard/{phase}")
+
+
+@contextlib.contextmanager
+def trace_span(name: str, log=None, **args):
+    """Measure a host-side phase; annotate it onto any active profiler
+    session and (when ``log`` is given) append a ``span`` event.
+
+    The measured duration includes device sync only if the wrapped block
+    itself blocks (callers time complete units of work — a compiled call
+    + ``block_until_ready``, a chunk drain — not async dispatches).
+    """
+    t0 = time.perf_counter()
+    try:
+        with jax.profiler.TraceAnnotation(name):
+            yield
+    finally:
+        dur = time.perf_counter() - t0
+        if log is not None:
+            log.event("span", name=name, t0=t0, dur_s=dur, **args)

@@ -1,0 +1,205 @@
+"""Guard flight recorder — the in-trace half of the observability layer
+(DESIGN.md §12).
+
+Algorithm 1's value is *which* workers it filters and *when*: the
+martingale deviations |A_i − A_med|, ‖B_i − B_med‖, ‖∇_i − ∇_med‖ crossing
+their thresholds 𝔗_A / 𝔗_B / 4V.  The solver and trainer only surface
+post-hoc aggregates (gap_med, byz_alive), so per-step forensics used to
+require hand-rolled trajectory diffing.  This module captures them *inside*
+the jitted scan with zero host round-trips:
+
+* **frame** — one step's filter forensics as a flat dict with a fixed key
+  set (:data:`FRAME_SCHEMA`): per-worker martingale deviations vs their
+  thresholds, the alive mask, ξ norm, Gram-resync drift, the auto-V
+  estimate, and the adaptive adversary's feedback scale.  Every guard
+  backend and every baseline aggregator emits the *same* schema — keys a
+  producer cannot know carry a NaN sentinel, so stacked frames have stable
+  pytree structure on every branch of every campaign.
+* **ring buffer** — :class:`TelemetryRing`, a fixed-size on-device buffer
+  of frames written with one ``dynamic_update_index_in_dim`` per step and
+  transferred once at the end of the scan (or once per ``log_every`` chunk
+  in the trainer, riding the existing stacked-metrics transfer).
+
+Everything is gated on :class:`TelemetryConfig` at *trace time*: with
+``enabled=False`` (or ``telemetry=None``) no ring is carried, no frame is
+built, and the jaxpr is identical to the pre-telemetry program — the
+off-state is free, which is what lets the flag default into every entry
+point (``run_sgd``, ``run_campaign``, ``build_train_step``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TelemetryConfig(NamedTuple):
+    """Static switch + ring sizing for the flight recorder.
+
+    A hashable NamedTuple of Python scalars, so it closes over traced
+    functions (and feeds ``functools.partial``/``static_argnames``) without
+    retracing surprises.  ``ring_size`` bounds device memory: the ring
+    keeps the *last* ``ring_size`` frames, which is the window every
+    debugging session so far actually needed (the steps around a filter
+    firing), at O(ring · m) floats instead of O(T · m).
+    """
+
+    enabled: bool = True
+    ring_size: int = 128
+
+
+def telemetry_on(telemetry: TelemetryConfig | None) -> bool:
+    """None-safe static gate — the one expression every producer checks."""
+    return telemetry is not None and telemetry.enabled
+
+
+# the event schema (DESIGN.md §12): per-worker series + per-step scalars.
+# One schema for every producer — guard backends fill the filter keys,
+# the solver/trainer fill step/xi_norm/adapt_scale, baselines fill only
+# alive/n_alive; everything else is jnp.nan.  Keys are stable API: the
+# JSONL events, the ring pytree, and the trainer's tel/<key> metrics all
+# spell them identically.
+PER_WORKER_KEYS = (
+    "dev_a",    # |A_i − A_med| — scalar-martingale deviation (vs thr_a)
+    "dist_b",   # ‖B_i − B_med‖ — vector-martingale distance (vs thr_b)
+    "dist_g",   # ‖∇_i − ∇_med‖ — fresh-gradient distance   (vs thr_g)
+    "alive",    # good_k membership (1.0 / 0.0)
+)
+SCALAR_KEYS = (
+    "step",        # 1-based iteration the frame describes
+    "thr_a",       # 𝔗_A = 4DV√(kC)
+    "thr_b",       # 𝔗_B = 4V√(kC)
+    "thr_g",       # the 4V fresh-gradient radius
+    "n_alive",     # |good_k|
+    "xi_norm",     # ‖ξ_k‖ — the realized update magnitude
+    "v_est",       # online auto-V (dp backends; NaN elsewhere)
+    "gram_drift",  # ‖G_inc − B Bᵀ‖_F at resync steps (fused; NaN between)
+    "adapt_scale", # AdvState feedback magnitude (NaN for static attacks)
+)
+FRAME_SCHEMA = PER_WORKER_KEYS + SCALAR_KEYS
+
+
+def empty_frame(m: int) -> dict:
+    """A full-schema frame of NaN sentinels (f32 leaves, stable keys)."""
+    frame = {k: jnp.full((m,), jnp.nan, jnp.float32) for k in PER_WORKER_KEYS}
+    frame.update({k: jnp.full((), jnp.nan, jnp.float32) for k in SCALAR_KEYS})
+    return frame
+
+
+def baseline_frame(m: int, alive: jax.Array, n_alive: jax.Array) -> dict:
+    """What a stateless/stateful baseline can report: who survived."""
+    frame = empty_frame(m)
+    frame["alive"] = alive.astype(jnp.float32)
+    frame["n_alive"] = jnp.asarray(n_alive, jnp.float32)
+    return frame
+
+
+def guard_frame(m: int, diag: dict, alive: jax.Array) -> dict:
+    """A guard backend's frame from its ``filter_update`` diagnostics.
+
+    All four backends route through
+    :func:`repro.core.byzantine_sgd.filter_update`, whose diag carries the
+    per-worker deviations and thresholds — so one converter keeps the four
+    backends on one schema by construction.  ``v_est`` / ``gram_drift``
+    are filled when the producing backend computes them (dp auto-V, the
+    fused incremental-Gram resync) and stay NaN otherwise.
+    """
+    frame = baseline_frame(m, alive, diag["n_alive"])
+    frame["dev_a"] = diag["dev_a"].astype(jnp.float32)
+    frame["dist_b"] = diag["dist_b"].astype(jnp.float32)
+    frame["dist_g"] = diag["dist_g"].astype(jnp.float32)
+    frame["thr_a"] = jnp.asarray(diag["threshold_A"], jnp.float32)
+    frame["thr_b"] = jnp.asarray(diag["threshold_B"], jnp.float32)
+    frame["thr_g"] = jnp.asarray(diag["threshold_grad"], jnp.float32)
+    for opt in ("v_est", "gram_drift"):
+        if opt in diag:
+            frame[opt] = jnp.asarray(diag[opt], jnp.float32)
+    return frame
+
+
+# ---------------------------------------------------------------------------
+# on-device ring buffer
+# ---------------------------------------------------------------------------
+
+class TelemetryRing(NamedTuple):
+    """Fixed-size frame buffer, scan-carried and vmap-able.
+
+    Frames are stored *packed*: the whole schema flattens to one
+    ``(|PER_WORKER_KEYS|·m + |SCALAR_KEYS|,)`` lane (worker blocks first,
+    scalar lanes after), so a push is one concatenate + **one** dynamic
+    update regardless of schema width.  (The obvious one-buffer-per-key
+    layout costs one update op per key per step, which at campaign shapes
+    is more in-scan work than the guard step it observes; the packed
+    layout keeps the recorder's footprint flat as the schema grows.)
+    ``head`` counts total pushes (monotonic), so slot validity and order
+    are recoverable on the host: slot ``head % ring_size`` is the oldest
+    once the ring has wrapped.
+    """
+
+    lanes: jax.Array    # (ring, |PER_WORKER_KEYS|·m + |SCALAR_KEYS|) f32
+    head: jax.Array     # () int32 — total frames ever pushed
+
+    @property
+    def m(self) -> int:
+        return (self.lanes.shape[-1] - len(SCALAR_KEYS)) // len(PER_WORKER_KEYS)
+
+
+def ring_init(m: int, ring_size: int) -> TelemetryRing:
+    width = len(PER_WORKER_KEYS) * m + len(SCALAR_KEYS)
+    return TelemetryRing(
+        lanes=jnp.full((ring_size, width), jnp.nan, jnp.float32),
+        head=jnp.zeros((), jnp.int32),
+    )
+
+
+def ring_push(ring: TelemetryRing, frame: dict) -> TelemetryRing:
+    """Write ``frame`` at slot ``head % ring_size`` — one packed lane,
+    one in-place dynamic update: the whole per-step telemetry cost."""
+    idx = ring.head % ring.lanes.shape[0]
+    lane = jnp.concatenate(
+        [frame[k].astype(jnp.float32) for k in PER_WORKER_KEYS]
+        + [jnp.asarray(frame[k], jnp.float32)[None] for k in SCALAR_KEYS]
+    )
+    return TelemetryRing(
+        lanes=jax.lax.dynamic_update_index_in_dim(ring.lanes, lane, idx, 0),
+        head=ring.head + 1,
+    )
+
+
+def ring_read(ring: TelemetryRing) -> list[dict]:
+    """Host-side drain: the valid frames in push order (oldest first),
+    unpacked back into full-schema dicts.
+
+    Accepts device or already-transferred numpy leaves; one run's ring
+    only (index the run axis out of a vmapped campaign ring first).
+    """
+    lanes = np.asarray(ring.lanes)
+    size = lanes.shape[0]
+    m = (lanes.shape[-1] - len(SCALAR_KEYS)) // len(PER_WORKER_KEYS)
+    head = int(ring.head)
+    n = min(head, size)
+    start = head - n
+    out = []
+    for i in range(n):
+        lane = lanes[(start + i) % size]
+        frame = {k: lane[kk * m:(kk + 1) * m]
+                 for kk, k in enumerate(PER_WORKER_KEYS)}
+        base = len(PER_WORKER_KEYS) * m
+        frame.update({k: lane[base + kk]
+                      for kk, k in enumerate(SCALAR_KEYS)})
+        out.append(frame)
+    return out
+
+
+class Telemetry(NamedTuple):
+    """What one telemetry-enabled ``run_sgd`` returns next to its result:
+    the ring (last ``ring_size`` full frames) plus two full-horizon
+    summaries cheap enough to keep for every step — the per-worker
+    first-filter step and the Byzantine survival curve the campaign
+    report's timeline section aggregates."""
+
+    ring: TelemetryRing
+    first_filter_step: jax.Array   # (m,) int32 — first k worker left good_k; -1 = never
+    byz_alive: jax.Array           # (T,) int32 — |{byz ∩ good_k}| per step

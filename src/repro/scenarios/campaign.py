@@ -53,6 +53,11 @@ class RunStats(NamedTuple):
     detect_latency: jax.Array # first k with |good_k| ≤ m − n_byz_ever; -1 = never
     ever_filtered_good: jax.Array  # did the filter ever drop a never-Byzantine worker
     gaps: jax.Array | None = None  # (N, T) traces, only when return_gaps
+    telemetry: dict | None = None  # flight-recorder payload (DESIGN.md §12)
+    #                                when armed: ring frames / first_filter_step
+    #                                / byz_alive / byz_mask, each with leading
+    #                                grid axis N; None keeps the historical
+    #                                pytree structure
 
 
 class CampaignResult(NamedTuple):
@@ -81,6 +86,14 @@ def _summarize(problem: Problem, cfg: SolverConfig, res, return_gaps: bool):
         detect_latency=detect,
         ever_filtered_good=res.ever_filtered_good,
         gaps=res.gaps if return_gaps else None,
+        telemetry=None if res.telemetry is None else {
+            "ring": res.telemetry.ring,
+            "first_filter_step": res.telemetry.first_filter_step,
+            "byz_alive": res.telemetry.byz_alive,
+            # byz_mask rides along so the report can split timelines into
+            # byzantine vs good workers without re-deriving ranks
+            "byz_mask": res.byz_mask,
+        },
     )
 
 
@@ -131,6 +144,7 @@ def build_campaign_fn(
     aggregators: Sequence[str],
     return_gaps: bool = False,
     backends: Sequence[str] | None = None,
+    telemetry=None,
 ):
     """The jittable (scenarios, alpha, seeds) → {variant: RunStats} function.
 
@@ -139,6 +153,10 @@ def build_campaign_fn(
     are configured for the nominal fraction; the realized per-run fraction
     is a grid axis the adversary owns).  ``backends`` expands the guard
     aggregator across guard realizations (see :func:`expand_variants`).
+    ``telemetry`` (a :class:`repro.obs.TelemetryConfig`) arms the flight
+    recorder in every run — the per-cell rings vmap like any other carry,
+    so one armed campaign yields an (N, ring_size, …) forensics block per
+    variant at the cost of the extra device memory.
     """
     cfgs = expand_variants(base_cfg, aggregators, backends)
 
@@ -148,7 +166,8 @@ def build_campaign_fn(
 
             def one(scn, a, seed, cfg=cfg):
                 adv = ScenarioAdversary(scenario=scn, alpha=a)
-                res = run_sgd(problem, cfg, jax.random.PRNGKey(seed), adversary=adv)
+                res = run_sgd(problem, cfg, jax.random.PRNGKey(seed),
+                              adversary=adv, telemetry=telemetry)
                 return _summarize(problem, cfg, res, return_gaps)
 
             out[name] = jax.vmap(one)(scenarios, alpha, seeds)
@@ -164,6 +183,7 @@ def run_campaign(
     aggregators: Sequence[str],
     return_gaps: bool = False,
     backends: Sequence[str] | None = None,
+    telemetry=None,
 ) -> CampaignResult:
     """Execute the full grid for every (aggregator × backend) variant under
     one jit.
@@ -173,7 +193,7 @@ def run_campaign(
     execution of all ``n_variants × grid.n_runs`` runs.
     """
     fn = jax.jit(build_campaign_fn(problem, base_cfg, aggregators,
-                                   return_gaps, backends))
+                                   return_gaps, backends, telemetry))
     t0 = time.perf_counter()
     compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
     t1 = time.perf_counter()

@@ -13,10 +13,15 @@ into the tables the scenario engine exists to produce:
   fraction (churn schedules corrupt more workers than the instantaneous α);
 * the **aggregator ranking** — the blades-style cross table: mean rank,
   worst-case gap and break count per aggregator over every
-  (scenario × α) cell of the leaderboard.
+  (scenario × α) cell of the leaderboard;
+* the **filter timelines** (when the campaign ran with the flight
+  recorder armed, DESIGN.md §12) — per (scenario, α, guard variant):
+  byzantine-vs-good first-filter-step medians and the Byzantine
+  survival curve, the per-step count of corrupted workers the filter
+  has not yet caught.
 
 ``scripts/render_scenarios.py`` renders the JSON as a console/markdown
-table.
+table; ``scripts/render_trace.py`` renders the flight-recorder side.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.solver import Problem, SolverConfig
+from repro.obs.provenance import provenance_meta
 from repro.scenarios.campaign import CampaignResult
 
 # "survives" / "breaks" default thresholds on f(x̄) − f*, in units of the
@@ -56,6 +62,105 @@ def theorem38_bound(
 
 def _percentile(xs: np.ndarray, q: float) -> float:
     return float(np.percentile(xs, q)) if xs.size else float("nan")
+
+
+def _survival_curve(series: np.ndarray, max_points: int = 64) -> list[list[int]]:
+    """Subsample a (T,) step series to ≤max_points ``[step, value]``
+    change-points (1-based steps, endpoints always kept) — exact under
+    step interpolation unless the series changes more often than the
+    budget, in which case change-points are strided uniformly."""
+    series = np.asarray(series)
+    keep = np.flatnonzero(np.diff(series, prepend=series[0] + 1))
+    keep = np.union1d(keep, [0, series.size - 1])
+    if keep.size > max_points:
+        keep = keep[np.linspace(0, keep.size - 1, max_points).astype(int)]
+    return [[int(k) + 1, int(series[k])] for k in keep]
+
+
+def filter_timelines(result: CampaignResult, max_curve_points: int = 64) -> list[dict]:
+    """Flight-recorder reduction (DESIGN.md §12): one row per
+    (scenario, α, variant) cell of an armed campaign.
+
+    Splits each worker's first-filter step by its ever-Byzantine flag —
+    the "first-filter-step" forensics: how fast the guard catches
+    corrupted workers, and whether it ever spent a good one — and attaches
+    a Byzantine survival curve (surviving-corrupted count per step,
+    change-point compressed) from the cell's first seed.  Empty when the
+    campaign ran without telemetry.
+    """
+    groups: dict[tuple[str, float], list[int]] = {}
+    for i, e in enumerate(result.entries):
+        groups.setdefault((e["scenario"], e["alpha"]), []).append(i)
+
+    rows = []
+    for agg in sorted(result.stats):
+        tel = result.stats[agg].telemetry
+        if tel is None:
+            continue
+        ffs = np.asarray(tel["first_filter_step"])   # (N, m), -1 = never
+        byz = np.asarray(tel["byz_mask"]).astype(bool)  # (N, m)
+        surv = np.asarray(tel["byz_alive"])          # (N, T)
+        for (scn, alpha), idx in sorted(groups.items()):
+            ii = np.asarray(idx)
+            byz_ffs = ffs[ii][byz[ii]]
+            good_ffs = ffs[ii][~byz[ii]]
+            caught = byz_ffs[byz_ffs > 0].astype(float)
+            rep = ii[0]  # representative seed for the curve
+            rows.append({
+                "scenario": scn,
+                "alpha": alpha,
+                "aggregator": agg,
+                "n_seeds": len(idx),
+                "n_byz_workers": int(byz[ii].sum()),
+                "n_byz_caught": int((byz_ffs > 0).sum()),
+                "first_filter_byz_med": (_percentile(caught, 50)
+                                         if caught.size else -1.0),
+                "first_filter_byz_p90": (_percentile(caught, 90)
+                                         if caught.size else -1.0),
+                "n_good_filtered": int((good_ffs > 0).sum()),
+                "byz_survival": _survival_curve(surv[rep], max_curve_points),
+                "survival_seed": int(result.entries[rep]["seed"]),
+            })
+    return rows
+
+
+def campaign_trace_events(result: CampaignResult, log, select=None) -> int:
+    """Drain an armed campaign's per-cell rings into an ``EventLog``.
+
+    Emits one ``guard_step`` event per retained ring frame plus a
+    ``timeline`` event (first-filter steps + Byzantine mask) per selected
+    cell, labeled ``<scenario>/a<alpha>/<variant>/s<seed>``.  ``select``
+    filters grid rows (``select(entry) -> bool``, e.g. adaptive scenarios
+    only) — an unfiltered large campaign is a lot of JSONL.  Returns the
+    number of cells exported.
+    """
+    import jax
+
+    from repro.obs.telemetry import ring_read
+
+    n_cells = 0
+    for agg in sorted(result.stats):
+        tel = result.stats[agg].telemetry
+        if tel is None:
+            continue
+        for i, e in enumerate(result.entries):
+            if select is not None and not select(e):
+                continue
+            run = f"{e['scenario']}/a{e['alpha']:g}/{agg}/s{e['seed']}"
+            row_ring = jax.tree.map(lambda x, i=i: x[i], tel["ring"])
+            for frame in ring_read(row_ring):
+                log.guard_step(frame, run=run)
+            log.event(
+                "timeline",
+                run=run,
+                first_filter_step=np.asarray(tel["first_filter_step"][i]),
+                byz_mask=np.asarray(tel["byz_mask"][i]),
+                # full-horizon survival curve (the ring only holds the
+                # last ring_size frames), change-point compressed
+                byz_survival=_survival_curve(np.asarray(tel["byz_alive"][i])),
+            )
+            n_cells += 1
+    return n_cells
 
 
 def summarize_campaign(
@@ -182,6 +287,8 @@ def summarize_campaign(
                     "degraded": bool(gs < survive_eps and gd > break_eps),
                 })
 
+    timelines = filter_timelines(result)
+
     return {
         "problem": {"d": problem.d, "D": problem.D, "V": problem.V,
                     "L": problem.L, "sigma": problem.sigma},
@@ -201,10 +308,15 @@ def summarize_campaign(
         "aggregator_ranking": ranking,
         "guard_bound": guard_bound,
         "degradation": degradation,
+        **({"filter_timelines": timelines} if timelines else {}),
     }
 
 
 def write_report(record: dict, path: str = "BENCH_scenarios.json") -> None:
+    """Write the record with a provenance ``meta`` block (commit, library
+    versions, device, timestamp — DESIGN.md §12); an existing ``meta`` is
+    kept (the caller may have stamped richer fields)."""
+    record.setdefault("meta", provenance_meta())
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
 
