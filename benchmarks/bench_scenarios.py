@@ -29,8 +29,15 @@ JSONL + a Perfetto-loadable chrome trace, with the measured
 telemetry-enabled overhead fraction recorded in the trace's own meta
 block, and measured-vs-roofline comparator rows for the swept backends.
 
+Fifth deliverable (DESIGN.md §13): the **heterogeneous slice** — non-iid
+data skew, periodic stragglers, and partial participation swept as a named
+:class:`~repro.scenarios.spec.WorkerProfile` axis of one campaign (the
+``heterogeneous`` record section), with the Theorem-3.8 check at each
+row's realized skew-inflated V and effective reporter count.
+
 ``--mini`` is the CI tier-2 shape: 5 scenarios (3 dynamic) × 2 seeds at
-small T, two guard backends, looped comparison on the matrix kept.
+small T, two guard backends, one non-iid skew level in the heterogeneous
+slice, looped comparison on the matrix kept.
 """
 from __future__ import annotations
 
@@ -42,7 +49,7 @@ import jax
 from benchmarks.common import emit
 from repro.core.guard_backends import parse_backend_spec
 from repro.core.solver import SolverConfig
-from repro.data.problems import make_quadratic_problem
+from repro.data.problems import heterogenize_problem, make_quadratic_problem
 from repro.kernels import ops
 from repro.obs import EventLog, TelemetryConfig, roofline_rows
 from repro.roofline.guard_cost import backend_cost, steady_state_us
@@ -50,6 +57,9 @@ from repro.roofline.hw import TPU_V5E
 from repro.scenarios import (
     degraded_pairs,
     expand_grid,
+    profile_iid,
+    profile_partial,
+    profile_stragglers,
     run_campaign,
     run_campaign_looped,
     scenario_adaptive,
@@ -58,6 +68,7 @@ from repro.scenarios import (
     scenario_lie_low_then_strike,
     scenario_static,
     summarize_campaign,
+    worker_profile,
     write_report,
 )
 from repro.scenarios.campaign import CampaignResult, build_campaign_fn
@@ -167,6 +178,62 @@ def campaign_leaderboard(mini: bool, backends: list[str] | None = None) -> dict:
     return record
 
 
+def heterogeneous_campaign(mini: bool,
+                           backends: list[str] | None = None) -> dict:
+    """The per-worker-state slice (DESIGN.md §13): non-iid data skew,
+    periodic stragglers, and partial participation as a *named profile
+    axis* of one campaign — every row, the armed-degenerate ``uniform``
+    profile included, stacks into the same single ``jit(vmap)`` trace.
+
+    Runs on a heterogenized problem (known optimum, zero-sum per-worker
+    bias directions), so the report's Theorem-3.8 check evaluates each
+    row's bound at its *realized* skew-inflated V and effective reporter
+    count rather than the worst case the problem's V was built for.
+    """
+    m = 16
+    T = 300 if mini else 1500
+    max_delay = 3
+    # one skew level for CI; the full sweep adds a second
+    skews = [0.5] if mini else [0.25, 0.5]
+    prob = heterogenize_problem(
+        make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0),
+        m, skew_max=max(skews), seed=0,
+    )
+    cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
+                       aggregator="byzantine_sgd", attack="sign_flip",
+                       max_delay=max_delay, partial_participation=True)
+    keep = {"static_sign_flip", "churn_sign_flip"}
+    scenarios = [s for s in scenario_zoo(T, m)[0] if s[0] in keep]
+    # fleet-uniform skew keeps the per-worker biases cancelling exactly,
+    # so the known optimum (and hence the bound's gap) stays valid
+    profiles = [("uniform", profile_iid(m))]
+    profiles += [(f"skew{s:g}", worker_profile(m, skew=s)) for s in skews]
+    profiles += [("stragglers", profile_stragglers(m, 0.25, max_delay)),
+                 ("partial", profile_partial(m, 0.8))]
+    seeds = range(2) if mini else range(4)
+    grid = expand_grid(scenarios, [0.25], seeds, profiles=profiles)
+    aggs = ["mean", "byzantine_sgd"]
+    if backends is None:
+        backends = ["dense"] if mini else ["dense", "fused"]
+    result = run_campaign(prob, cfg, grid, aggs, backends=backends)
+    record = summarize_campaign(result, prob, cfg)
+    record["profiles"] = [name for name, _ in profiles]
+    record["max_delay"] = max_delay
+    n_variants = len(result.stats)
+    emit("scenarios/het_campaign", result.wall_s * 1e6,
+         f"runs={result.n_runs * n_variants},profiles={len(profiles)},"
+         f"compile_s={result.compile_s:.1f}")
+    for row in record["guard_bound"]:
+        emit(f"scenarios/het_bound/{row['aggregator']}/{row['scenario']}"
+             f"/a{row['alpha']}",
+             row["gap_med"] * 1e6,
+             f"thm38_bound={row['bound']:.4f},within={row['within']},"
+             f"V_realized={row['V_realized']:.3f},"
+             f"alpha_ever={row['alpha_ever']:.3f},"
+             f"in_regime={row['in_regime']}")
+    return record
+
+
 def backend_axis_record(prob, cfg, grid, backends: list[str]) -> dict:
     """Per-backend record: measured steady-state campaign wall-clock (each
     backend's guard-only campaign, compiled separately so the execution time
@@ -229,13 +296,12 @@ def _timed_campaign(prob, cfg, grid, backends, telemetry, reps: int = 3):
     fn = jax.jit(build_campaign_fn(prob, cfg, ["byzantine_sgd"],
                                    backends=backends, telemetry=telemetry))
     t0 = time.perf_counter()
-    compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
+    compiled = fn.lower(grid).compile()
     compile_s = time.perf_counter() - t0
     walls, out = [], None
     for _ in range(reps):
         t0 = time.perf_counter()
-        out = jax.block_until_ready(
-            compiled(grid.scenarios, grid.alpha, grid.seeds))
+        out = jax.block_until_ready(compiled(grid))
         walls.append(time.perf_counter() - t0)
     return CampaignResult(stats=out, entries=grid.entries,
                           wall_s=min(walls), compile_s=compile_s,
@@ -258,15 +324,28 @@ def trace_campaign(mini: bool, trace_out: str,
     """
     m, d = 16, 16
     T = 300 if mini else 1500
-    prob = make_quadratic_problem(d=d, sigma=1.0, L=8.0, V=1.0, seed=0)
+    # heterogenized problem + armed per-worker-state gates: the traced
+    # cells sweep a uniform profile next to a mixed skew/straggler/partial
+    # one, so the exported frames exercise the n_reporting / staleness
+    # lanes of the schema (DESIGN.md §13)
+    prob = heterogenize_problem(
+        make_quadratic_problem(d=d, sigma=1.0, L=8.0, V=1.0, seed=0),
+        m, skew_max=0.3, seed=0,
+    )
     cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
                        aggregator="byzantine_sgd", attack="sign_flip",
-                       guard_opts=(("sketch_dim", 8),))
+                       guard_opts=(("sketch_dim", 8),),
+                       max_delay=2, partial_participation=True)
     scenarios, _ = scenario_zoo(T, m)
     keep = {"static_sign_flip", "adaptive_inner_product",
             "lie_low_then_strike"}
     scenarios = [s for s in scenarios if s[0] in keep]
-    grid = expand_grid(scenarios, [0.25], range(2))
+    profiles = [
+        ("uniform", profile_iid(m)),
+        ("hetmix", worker_profile(m, skew=0.3, p_report=0.9)._replace(
+            delay=profile_stragglers(m, 0.25, 2).delay)),
+    ]
+    grid = expand_grid(scenarios, [0.25], range(2), profiles=profiles)
     if backends is None:
         backends = ["dense", "fused"]
     tel = TelemetryConfig(enabled=True, ring_size=ring_size)
@@ -353,6 +432,7 @@ def main(mini: bool = False, skip_looped: bool = False,
          backends: list[str] | None = None,
          trace_out: str | None = None) -> dict:
     record = campaign_leaderboard(mini, backends=backends)
+    record["heterogeneous"] = heterogeneous_campaign(mini)
     record["matrix6x6_wallclock"] = matrix_wallclock(mini, skip_looped)
     record["mini"] = mini
     if trace_out:

@@ -17,6 +17,35 @@ def _fmt_gap(row: dict) -> str:
     return f"{row['gap_med']:.5f}{mark}"
 
 
+def _guard_bound_lines(guard_bound: list[dict]) -> list[str]:
+    lines = []
+    lines.append("\n## ByzantineSGD vs the Theorem-3.8 bound\n")
+    lines.append("(bound evaluated at the realized ever-Byzantine "
+                 "fraction, heterogeneity-adjusted V and effective "
+                 "reporter count; one row per guard backend variant; "
+                 "`—` marks rows outside the α_ever < 1/2 regime, "
+                 "where the theorem makes no claim)\n")
+    lines.append("| guard | scenario | α | α_ever | V | m_eff "
+                 "| gap med | bound | within |")
+    lines.append("|---" * 9 + "|")
+    for g in guard_bound:
+        if g.get("in_regime", True):
+            mark = "✓" if g["within"] else "✗"
+        else:
+            mark = "— (α_ever ≥ ½)"
+        v = g.get("V_realized")
+        m_eff = g.get("m_eff")
+        lines.append(
+            f"| {g.get('aggregator', 'byzantine_sgd')} "
+            f"| {g['scenario']} | {g['alpha']} | {g['alpha_ever']:.3f} "
+            f"| {'' if v is None else f'{v:.3f}'} "
+            f"| {'' if m_eff is None else f'{m_eff:.1f}'} "
+            f"| {g['gap_med']:.5f} | {g['bound']:.4f} "
+            f"| {mark} |"
+        )
+    return lines
+
+
 def render(rec: dict) -> str:
     aggs = rec["aggregators"]
     lines = []
@@ -68,19 +97,29 @@ def render(rec: dict) -> str:
             )
 
     if rec.get("guard_bound"):
-        lines.append("\n## ByzantineSGD vs the Theorem-3.8 bound\n")
-        lines.append("(bound evaluated at the realized ever-Byzantine "
-                     "fraction — churn corrupts more workers than the "
-                     "instantaneous α; one row per guard backend variant)\n")
-        lines.append("| guard | scenario | α | α_ever | gap med | bound | within |")
-        lines.append("|---" * 7 + "|")
-        for g in rec["guard_bound"]:
+        lines.extend(_guard_bound_lines(rec["guard_bound"]))
+
+    het = rec.get("heterogeneous")
+    if het:
+        lines.append("\n## Heterogeneous slice — per-worker-state profiles "
+                     "(DESIGN.md §13)\n")
+        lines.append(
+            f"profiles: {', '.join(het.get('profiles', []))}; "
+            f"max_delay={het.get('max_delay', 0)}; scenario labels carry "
+            f"the profile suffix; {het['n_runs_per_aggregator']} runs per "
+            f"aggregator, one jit.\n"
+        )
+        lines.append("| scenario | aggregator | gap med | detect p50 "
+                     "| ever filtered good |")
+        lines.append("|---" * 5 + "|")
+        for r in het["leaderboard"]:
             lines.append(
-                f"| {g.get('aggregator', 'byzantine_sgd')} "
-                f"| {g['scenario']} | {g['alpha']} | {g['alpha_ever']:.3f} "
-                f"| {g['gap_med']:.5f} | {g['bound']:.4f} "
-                f"| {'✓' if g['within'] else '✗'} |"
+                f"| {r['scenario']} | {r['aggregator']} "
+                f"| {r['gap_med']:.5f} | {r['detect_p50']} "
+                f"| {'yes' if r['ever_filtered_good'] else 'no'} |"
             )
+        if het.get("guard_bound"):
+            lines.extend(_guard_bound_lines(het["guard_bound"]))
 
     lines.append("\n## Detection latency (ByzantineSGD), steps to full filter\n")
     lines.append("| guard | scenario | α | p50 | p90 | detect rate |")

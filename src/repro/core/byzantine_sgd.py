@@ -126,7 +126,9 @@ def pairwise_sq_dists_from_gram(gram: jax.Array) -> jax.Array:
     return jnp.maximum(d2, 0.0)  # clamp numerical negatives
 
 
-def counting_median_index(sq_dists: jax.Array, radius: jax.Array) -> tuple[jax.Array, jax.Array]:
+def counting_median_index(
+    sq_dists: jax.Array, radius: jax.Array, report: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
     """The paper's counting vector-median, from pairwise squared distances.
 
     Returns ``(index, found)`` where ``index`` selects any point with more
@@ -136,21 +138,57 @@ def counting_median_index(sq_dists: jax.Array, radius: jax.Array) -> tuple[jax.A
     valid — possible off the high-probability event or under extreme attacks
     — we fall back to the global medoid, which is the standard robust choice
     and keeps the algorithm total.
+
+    ``report`` (optional (m,) bool) restricts the median to workers that
+    reported this step: counts run over reporting columns, validity requires
+    > n_reporting/2 of them, and only reporting rows may be elected (the
+    fallback medoid is likewise reporter-restricted).  ``report=None``
+    keeps the original all-workers trace (no extra ops in the jaxpr).
     """
     m = sq_dists.shape[0]
     within = sq_dists <= radius * radius
-    counts = jnp.sum(within, axis=1)
-    valid = counts * 2 > m
-    score = jnp.sum(jnp.sqrt(sq_dists), axis=1)  # total distance (medoid score)
     inf = jnp.float32(jnp.inf)
+    score = jnp.sum(jnp.sqrt(sq_dists), axis=1)  # total distance (medoid score)
+    if report is None:
+        counts = jnp.sum(within, axis=1)
+        valid = counts * 2 > m
+        fallback = score
+    else:
+        counts = jnp.sum(within & report[None, :], axis=1)
+        n_r = jnp.sum(report)
+        valid = (counts * 2 > n_r) & report
+        score = jnp.sum(jnp.where(report[None, :], jnp.sqrt(sq_dists), 0.0),
+                        axis=1)
+        fallback = jnp.where(report, score, inf)
     masked_score = jnp.where(valid, score, inf)
     found = jnp.any(valid)
-    idx = jnp.where(found, jnp.argmin(masked_score), jnp.argmin(score))
+    idx = jnp.where(found, jnp.argmin(masked_score), jnp.argmin(fallback))
     return idx, found
 
 
 def scalar_median(x: jax.Array) -> jax.Array:
     return jnp.median(x)
+
+
+def masked_median(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Median of ``x[mask]`` with a traced boolean mask and static shapes.
+
+    Reproduces ``jnp.median``'s linear-interpolation quantile exactly —
+    when ``mask`` is all-True the result is bit-identical to
+    ``jnp.median(x)`` (pinned by test), which is what lets the armed
+    partial-participation machinery stay on the pre-PR trajectory for a
+    fully-participating fleet.  Masked-out entries sort to +inf and the
+    interpolation index is computed from the traced reporter count.
+    """
+    n = jnp.sum(mask)
+    sorted_x = jnp.sort(jnp.where(mask, x, jnp.inf))
+    index = 0.5 * jnp.maximum(n - 1, 0).astype(jnp.float32)
+    low = jnp.floor(index)
+    high = jnp.ceil(index)
+    low_val = sorted_x[low.astype(jnp.int32)]
+    high_val = sorted_x[high.astype(jnp.int32)]
+    high_weight = index - low
+    return low_val * (1.0 - high_weight) + high_val * high_weight
 
 
 # ---------------------------------------------------------------------------
@@ -164,35 +202,51 @@ def filter_update(
     alive: jax.Array,      # (m,)   good_{k-1}
     k: jax.Array,          # ()     iteration (1-based)
     cfg: GuardConfig,
+    report: jax.Array | None = None,  # (m,) bool — who reported this step
 ) -> tuple[jax.Array, dict]:
     """One application of the Algorithm-1 filter; returns (good_k, diag).
 
     Medians are taken over all m workers — Algorithm 1 computes A_med /
     B_med / ∇_med over [m], not over good_{k-1}; only the *intersection*
     uses good_{k-1}.
+
+    ``report`` (DESIGN.md §13) is the per-step *reporting* mask, distinct
+    from the Byzantine alive mask: medians are computed over reporting
+    workers only, and a worker that did not report is never scored (its
+    good_{k-1} status passes through unchanged).  The caller must have
+    zero-masked non-reporting rows out of the streamed statistics so A/B
+    are frozen for them; this function only controls who is *scored*.
+    ``report=None`` is the static everyone-reports gate — the jaxpr is
+    identical to the pre-profile build.
     """
     t_a, t_b = cfg.thresholds(k)
 
-    # line 7: scalar median of A
-    a_med = scalar_median(A)
+    # line 7: scalar median of A (over reporters)
+    a_med = scalar_median(A) if report is None else masked_median(A, report)
     dev_a = jnp.abs(A - a_med)
     ok_a = dev_a <= t_a
 
     # line 8: counting median of B at radius 𝔗_B
     d2_b = pairwise_sq_dists_from_gram(gram_B)
-    idx_b, found_b = counting_median_index(d2_b, t_b)
+    idx_b, found_b = counting_median_index(d2_b, t_b, report)
     dist_b = jnp.sqrt(d2_b[idx_b])
     ok_b = dist_b <= t_b
 
     # line 9: counting median of fresh gradients at radius 2V, filter at 4V
     d2_g = pairwise_sq_dists_from_gram(gram_g)
-    idx_g, found_g = counting_median_index(d2_g, cfg.median_radius_mult * cfg.V)
+    idx_g, found_g = counting_median_index(
+        d2_g, cfg.median_radius_mult * cfg.V, report
+    )
     dist_g = jnp.sqrt(d2_g[idx_g])
     t_g = cfg.grad_radius_mult * cfg.V
     ok_g = dist_g <= t_g
 
-    # line 10: good_k = good_{k-1} ∩ {A ok} ∩ {B ok} ∩ {∇ ok}
-    good_k = alive & ok_a & ok_b & ok_g
+    # line 10: good_k = good_{k-1} ∩ {A ok} ∩ {B ok} ∩ {∇ ok}; workers that
+    # did not report are not scored — their status passes through
+    if report is None:
+        good_k = alive & ok_a & ok_b & ok_g
+    else:
+        good_k = alive & (ok_a | ~report) & (ok_b | ~report) & (ok_g | ~report)
     # the per-worker deviation series (dev_a / dist_b / dist_g vs their
     # thresholds) double as the flight recorder's event schema — they are
     # the Algorithm-1 forensics the telemetry layer streams (DESIGN.md §12)
@@ -288,6 +342,7 @@ class ByzantineGuard:
         grads: jax.Array,   # (m, d)
         x_k: jax.Array,     # (d,)
         x_1: jax.Array,     # (d,)
+        report: jax.Array | None = None,  # (m,) bool reporting mask
     ) -> tuple[GuardState, jax.Array, dict]:
         cfg = self.cfg
         m = cfg.m
@@ -295,6 +350,14 @@ class ByzantineGuard:
         # below (Grams, A, B update, ξ) reads these strips.  A no-op cast
         # at f32; the one place bf16 precision is actually lost.
         grads = grads.astype(self.stats_dtype)
+        if report is not None:
+            # entry masking is all the streaming paths need for partial
+            # participation: a zero row contributes 0 to the A increment,
+            # freezes B_i, and keeps the incremental-Gram identity exact —
+            # so the fused kernel and both Gram forms run unchanged and
+            # only the filter itself is reporter-aware (DESIGN.md §13)
+            grads = jnp.where(report[:, None], grads,
+                              jnp.zeros((), self.stats_dtype))
         k = state.k + 1
         delta = (x_k - x_1).astype(self.stats_dtype)
 
@@ -346,20 +409,26 @@ class ByzantineGuard:
             gram_drift = jnp.zeros((), jnp.float32)
 
         with jax.named_scope("guard/filter"):
-            good_k, diag = filter_update(A, gram_b, gram_g, state.alive, k, cfg)
+            good_k, diag = filter_update(
+                A, gram_b, gram_g, state.alive, k, cfg, report
+            )
         diag["gram_drift"] = gram_drift
 
+        # ξ averages the gradients that actually arrived: good ∩ reporting
+        # (rows of non-reporters were zeroed at entry anyway, but the
+        # mean_over_alive denominator must count contributors, not good_k)
+        contrib = good_k if report is None else good_k & report
         denom = jnp.where(
-            cfg.mean_over_alive, jnp.maximum(jnp.sum(good_k), 1), m
+            cfg.mean_over_alive, jnp.maximum(jnp.sum(contrib), 1), m
         ).astype(jnp.float32)
         with jax.named_scope("guard/aggregate"):
             if self.use_fused:
                 xi = ops.filtered_mean(
-                    grads, good_k.astype(jnp.float32) / denom, 1.0,
+                    grads, contrib.astype(jnp.float32) / denom, 1.0,
                     d_block=self.d_block,
                 )
             else:
-                xi = (good_k.astype(jnp.float32) @ grads.astype(jnp.float32)) / denom
+                xi = (contrib.astype(jnp.float32) @ grads.astype(jnp.float32)) / denom
 
         new_state = GuardState(A=A, B=B, alive=good_k, k=k, gram_B=gram_b)
         return new_state, xi, diag

@@ -14,9 +14,13 @@ backend** is a factory
 
     ``factory(problem, cfg, **opts) -> (state0, step)``
 
-where ``step(state, grads, x, x1) -> (state', xi, n_alive, alive)`` consumes
-the flat ``(m, d)`` stacked worker gradients of the convex harness and
-returns the paper's filtered mean ξ_k.  ``state`` is an arbitrary pytree
+where ``step(state, grads, x, x1[, report]) -> (state', xi, n_alive, alive)``
+consumes the flat ``(m, d)`` stacked worker gradients of the convex harness
+and returns the paper's filtered mean ξ_k.  The optional ``report`` mask
+((m,) bool, default ``None`` = everyone reports) is the partial-
+participation axis of DESIGN.md §13: every backend zero-masks non-reporting
+rows out of its streamed statistics and scores only reporters in the
+filter.  ``state`` is an arbitrary pytree
 (scan-carried, vmap-able), so any backend drops into the solver's
 ``lax.scan`` body and — because the campaign runner unrolls the backend axis
 statically next to the aggregator axis — into a one-jit campaign grid.
@@ -164,8 +168,8 @@ def _wrap_byzantine_guard(guard: ByzantineGuard, d: int, telemetry=None):
     probe = telemetry_on(telemetry)
     m = guard.cfg.m
 
-    def step(state, grads, x, x1):
-        state, xi, diag = guard.step(state, grads, x, x1)
+    def step(state, grads, x, x1, report=None):
+        state, xi, diag = guard.step(state, grads, x, x1, report)
         if not probe:
             return state, xi, diag["n_alive"], state.alive
         return (state, xi, diag["n_alive"], state.alive,
@@ -236,8 +240,8 @@ def _dp_backend(problem, cfg, mode: str, *, telemetry=None,
     state0 = init_guard_state(dcfg, jnp.zeros((problem.d,), jnp.float32))
     probe = telemetry_on(telemetry)
 
-    def step(state, grads, x, x1):
-        state, xi, diag = guard_step(dcfg, state, grads, x, x1)
+    def step(state, grads, x, x1, report=None):
+        state, xi, diag = guard_step(dcfg, state, grads, x, x1, report)
         # ξ is an f32 accumulator output on the flat harness (the dense/
         # fused convention; the solver's scan carries f32 feedback) — the
         # pytree mesh path keeps gradient-dtype ξ, but here the low-

@@ -39,6 +39,17 @@ class Problem(NamedTuple):
 
     ``stoch_grad(key, x) -> g`` must satisfy Assumption 2.2:
     E[g] = ∇f(x) and ‖g − ∇f(x)‖ ≤ V almost surely.
+
+    ``het_grad`` (optional, DESIGN.md §13) is the *non-iid* sampler
+    ``het_grad(key, x, skew, w) -> g``: worker w draws from a distribution
+    whose mean is ∇f(x) + skew·C[w] for a fixed zero-sum per-worker bias
+    matrix C — honest workers disagree by design, yet the biases cancel
+    over the fleet so the global optimum (and the Theorem-3.8 check) is
+    unchanged.  When set, ``V`` must already account for the worst-case
+    per-worker bias (see :func:`repro.data.problems.heterogenize_problem`,
+    which inflates it) and ``het`` records the provenance
+    ``{'V0', 'cmax', 'skew_max'}`` so reports can re-derive the bound at
+    the *realized* per-row skew.
     """
 
     d: int
@@ -51,6 +62,8 @@ class Problem(NamedTuple):
     V: float
     L: float = 1.0      # smoothness (0 = treat as nonsmooth)
     sigma: float = 0.0  # strong convexity (0 = merely convex)
+    het_grad: Callable | None = None  # (key, x, skew, w) -> g (non-iid axis)
+    het: dict | None = None           # {'V0','cmax','skew_max'} provenance
 
 
 def ceil_byzantine_count(alpha: float, m: int) -> int:
@@ -93,6 +106,13 @@ class SolverConfig(NamedTuple):
     #                             for bucket<s>:<base> composition; each
     #                             aggregator receives only the knobs it
     #                             declares (guard_opts convention)
+    max_delay: int = 0          # static cap on the WorkerProfile staleness
+    #                             schedule (DESIGN.md §13); 0 = staleness
+    #                             machinery off (no stale buffer in the
+    #                             scan carry, pre-profile trace)
+    partial_participation: bool = False  # static gate for the per-step
+    #                             reporting mask; False = everyone reports
+    #                             (no report mask in the trace)
 
     @property
     def n_byzantine(self) -> int:
@@ -119,6 +139,9 @@ class SolverResult(NamedTuple):
     #                             ran (DESIGN.md §12); None otherwise — a None
     #                             leaf keeps the pytree structure (and every
     #                             historical consumer) unchanged
+    n_reporting: jax.Array | None = None  # (T,) int32 per-step reporter count
+    #                             under partial participation (DESIGN.md
+    #                             §13); None when everyone reports
 
 
 def byz_rank(key: jax.Array, m: int) -> jax.Array:
@@ -226,8 +249,8 @@ def make_aggregator(problem, cfg: SolverConfig, telemetry=None):
         if not probe:
             return state0, step4
 
-        def step(state, grads, x, x1):
-            state, xi, n_alive, alive = step4(state, grads, x, x1)
+        def step(state, grads, x, x1, report=None):
+            state, xi, n_alive, alive = step4(state, grads, x, x1, report)
             return (state, xi, n_alive, alive,
                     baseline_frame(cfg.m, alive, n_alive))
 
@@ -250,7 +273,10 @@ def make_aggregator(problem, cfg: SolverConfig, telemetry=None):
         state0 = (jax.random.PRNGKey(int(opts.get("bucket_seed", 0))),
                   inner_state0)
 
-        def step(state, grads, x, x1):
+        def step(state, grads, x, x1, report=None):
+            # baselines (and bucketing) ignore the reporting mask: the
+            # server reuses a non-reporter's last row — which is exactly
+            # what `grads` holds under the staleness buffer (DESIGN.md §13)
             key, inner = state
             key, sub = jax.random.split(key)
             buckets = agg_lib.bucket_means(grads, bucket_s, sub)
@@ -270,7 +296,7 @@ def make_aggregator(problem, cfg: SolverConfig, telemetry=None):
                    if k in _declared_knobs(factory)}
         state0, agg_step = factory(problem.d, **fkwargs)
 
-        def step(state, grads, x, x1):
+        def step(state, grads, x, x1, report=None):
             state, xi = agg_step(state, grads)
             return state, xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
 
@@ -291,7 +317,7 @@ def make_aggregator(problem, cfg: SolverConfig, telemetry=None):
     kwargs.update({k: v for k, v in opts.items() if k in _declared_knobs(fn)})
     fn = functools.partial(fn, **kwargs) if kwargs else fn
 
-    def step(state, grads, x, x1):
+    def step(state, grads, x, x1, report=None):
         xi = fn(grads)
         return state, xi, jnp.asarray(cfg.m), jnp.ones((cfg.m,), bool)
 
@@ -338,6 +364,14 @@ def run_sgd(
     to the historical program.
     """
     tel_on = telemetry_on(telemetry)
+    # per-worker-state gates (DESIGN.md §13): each is a *static* Python
+    # decision, so a run without a profile (or with a machinery axis off)
+    # lowers to literally the pre-profile trace — the bit-identity
+    # guarantee of the degenerate WorkerProfile costs nothing to keep
+    profile = getattr(adversary, "profile", None)
+    het_on = profile is not None and problem.het_grad is not None
+    stale_on = profile is not None and cfg.max_delay > 0
+    part_on = profile is not None and cfg.partial_participation
     key, mask_key = jax.random.split(key)
     rank = byz_rank(mask_key, cfg.m)
     if adversary is None:
@@ -351,15 +385,32 @@ def run_sgd(
     x1 = problem.x1.astype(jnp.float32)
 
     def body(carry, k):
-        if tel_on:
-            (x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered,
-             fb, rng, tel) = carry
-        else:
-            x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered, fb, rng = carry
+        x, agg_state, adv_state, x_sum, ever_byz, any_good_filtered, fb, rng = (
+            carry[:8]
+        )
+        extras = list(carry[8:])
+        buf = extras.pop(0) if stale_on else None
+        tel = extras.pop(0) if tel_on else None
         prev_xi, prev_alive, prev_n_alive = fb
         rng, gkey, akey = jax.random.split(rng, 3)
         worker_keys = jax.random.split(gkey, cfg.m)
-        grads = jax.vmap(lambda wk: problem.stoch_grad(wk, x))(worker_keys)
+        if het_on:
+            # non-iid honest sampling: worker w draws from its skewed
+            # distribution (mean ∇f + skew[w]·C[w]) — same RNG stream as
+            # the iid path, so skew ≡ 0 reproduces it bit-for-bit
+            grads = jax.vmap(
+                lambda wk, s, w: problem.het_grad(wk, x, s, w)
+            )(worker_keys, profile.skew, jnp.arange(cfg.m))
+        else:
+            grads = jax.vmap(lambda wk: problem.stoch_grad(wk, x))(worker_keys)
+        if stale_on:
+            # periodic-refresh staleness: worker w recomputes its gradient
+            # only when its schedule fires; between refreshes the scan
+            # carries the stale row (computed at an older iterate).  With
+            # delay ≡ 0 the refresh mask is all-True and buf ≡ fresh.
+            refresh = adversary.refresh_at(k, cfg.max_delay)
+            buf = jnp.where(refresh[:, None], grads, buf)
+            grads = buf
         ctx = {
             "true_grad": problem.grad(x), "V": problem.V, "step": k,
             "alive": prev_alive, "n_alive": prev_n_alive, "prev_xi": prev_xi,
@@ -370,11 +421,24 @@ def run_sgd(
         else:
             mask_k = adversary.mask_at(rank, k)
             grads = adversary.attack(akey, grads, mask_k, ctx, adv_state)
+        if part_on:
+            # the reporting mask is *distinct* from the Byzantine mask:
+            # honest workers skip steps per p_report, Byzantine workers
+            # always report (worst case).  fold_in keeps the existing
+            # gkey/akey streams untouched, so arming the machinery with
+            # p_report ≡ 1 stays on the pre-profile trajectory.
+            pkey = jax.random.fold_in(akey, 7919)
+            report = adversary.report_at(pkey, mask_k)
+            n_rep = jnp.sum(report).astype(jnp.int32)
+        else:
+            report = None
 
         if tel_on:
-            agg_state, xi, n_alive, alive, frame = agg_step(agg_state, grads, x, x1)
+            agg_state, xi, n_alive, alive, frame = agg_step(
+                agg_state, grads, x, x1, report
+            )
         else:
-            agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1)
+            agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1, report)
         if adversary is not None:
             adv_state = adversary.update_state(
                 adv_state, mask_k, grads, xi, alive, n_alive, ctx
@@ -387,6 +451,8 @@ def run_sgd(
         x_new = x1 + delta * jnp.minimum(1.0, problem.D / jnp.maximum(nrm, 1e-30))
 
         gap = problem.f(x) - problem.f(problem.x_star)
+        # ever_byz stays the pure schedule union: Byzantine workers always
+        # report, so mask_k ∩ report = mask_k by construction
         ever_byz = ever_byz | mask_k
         any_good_filtered = any_good_filtered | jnp.any((~alive) & (~ever_byz))
         fb = (xi, alive, jnp.asarray(n_alive, jnp.int32))
@@ -401,6 +467,12 @@ def run_sgd(
             scale = getattr(adv_state, "adapt_scale", None)
             if scale is not None:
                 frame["adapt_scale"] = jnp.asarray(scale, jnp.float32)
+            if part_on:
+                frame["n_reporting"] = n_rep.astype(jnp.float32)
+            if stale_on:
+                frame["staleness"] = jnp.mean(
+                    adversary.staleness_at(k, cfg.max_delay).astype(jnp.float32)
+                )
             ring = ring_push(ring, frame)
             # first step (1-based) each worker was filtered; -1 = never
             ffs = jnp.where((ffs < 0) & ~alive, k + 1, ffs)
@@ -409,17 +481,18 @@ def run_sgd(
         # Theorem-3.8 average is over the iterates the gradients were *taken
         # at*: x̄ = (1/T) Σ_{k≤T} x_k — accumulate x (= x_k), not x_new
         # (= x_{k+1}), or the sum runs x_2…x_{T+1} and excludes x_1
+        new_carry = (x_new, agg_state, adv_state, x_sum + x, ever_byz,
+                     any_good_filtered, fb, rng)
+        if stale_on:
+            new_carry = new_carry + (buf,)
         if tel_on:
-            return (
-                (x_new, agg_state, adv_state, x_sum + x, ever_byz,
-                 any_good_filtered, fb, rng, tel_new),
-                (gap, n_alive, byz_alive),
-            )
-        return (
-            (x_new, agg_state, adv_state, x_sum + x, ever_byz,
-             any_good_filtered, fb, rng),
-            (gap, n_alive),
-        )
+            new_carry = new_carry + (tel_new,)
+        ys = (gap, n_alive)
+        if tel_on:
+            ys = ys + (byz_alive,)
+        if part_on:
+            ys = ys + (n_rep,)
+        return new_carry, ys
 
     fb0 = (
         jnp.zeros_like(x1),
@@ -428,22 +501,26 @@ def run_sgd(
     )
     carry0 = (x1, agg_state0, adv_state0, jnp.zeros_like(x1),
               jnp.zeros((cfg.m,), bool), jnp.asarray(False), fb0, key)
+    if stale_on:
+        # the scan-carried stale-gradient buffer; every schedule fires at
+        # k = 0 (k % period == 0), so the zeros are never consumed
+        carry0 = carry0 + (jnp.zeros((cfg.m, problem.d), jnp.float32),)
     if tel_on:
         tel0 = (ring_init(cfg.m, telemetry.ring_size),
                 jnp.full((cfg.m,), -1, jnp.int32))
         carry0 = carry0 + (tel0,)
-        carry_fin, (gaps, n_alive, byz_alive) = (
-            jax.lax.scan(body, carry0, jnp.arange(cfg.T))
-        )
-        (x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _,
-         (ring_fin, ffs_fin)) = carry_fin
+    carry_fin, ys = jax.lax.scan(body, carry0, jnp.arange(cfg.T))
+    x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _ = carry_fin[:8]
+    gaps, n_alive = ys[0], ys[1]
+    ys_rest = list(ys[2:])
+    if tel_on:
+        byz_alive = ys_rest.pop(0)
+        ring_fin, ffs_fin = carry_fin[-1]
         tel_out = Telemetry(ring=ring_fin, first_filter_step=ffs_fin,
                             byz_alive=byz_alive)
     else:
-        (x_fin, agg_state, _, x_sum, ever_byz, good_filtered, _, _), (gaps, n_alive) = (
-            jax.lax.scan(body, carry0, jnp.arange(cfg.T))
-        )
         tel_out = None
+    n_reporting = ys_rest.pop(0) if part_on else None
     final_alive = (
         agg_state.alive if hasattr(agg_state, "alive") else jnp.ones((cfg.m,), bool)
     )
@@ -456,6 +533,7 @@ def run_sgd(
         ever_filtered_good=good_filtered,
         final_alive=final_alive,
         telemetry=tel_out,
+        n_reporting=n_reporting,
     )
 
 

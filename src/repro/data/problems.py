@@ -54,6 +54,60 @@ def make_quadratic_problem(
                    x_star=x_star, D=D, V=V, L=L, sigma=sigma)
 
 
+def heterogenize_problem(
+    problem: Problem, m: int, skew_max: float, seed: int = 0,
+) -> Problem:
+    """Non-iid per-worker gradient distributions with a *known* global
+    optimum (DESIGN.md §13).
+
+    Worker w's stochastic gradient becomes ``stoch_grad(key, x) +
+    skew·C[w]`` for a fixed near-unit-row direction matrix C whose rows
+    sum to zero — per-worker means disagree by up to ``skew·cmax``
+    (cmax = max ‖C[w]‖ ≈ 1), yet with a fleet-uniform skew the average
+    gradient (and hence f, ∇f, x*, and the Theorem-3.8 gap check) is
+    exactly the base problem's.  ``V`` is inflated statically
+    by ``skew_max`` (the worst per-worker bias any profile on this problem
+    may request) so the guard's 2V/4V honest-disagreement radii still
+    cover Assumption 2.2; the provenance triple ``het = {'V0', 'cmax',
+    'skew_max'}`` lets the campaign report re-derive the bound at each
+    row's *realized* skew instead of the worst case.
+
+    The wrapper is the data-layer half of the heterogeneity axis: a run
+    only samples through ``het_grad`` when its adversary carries a
+    :class:`~repro.scenarios.spec.WorkerProfile`, and ``skew ≡ 0``
+    reproduces the iid sampler bit-for-bit (same RNG stream, bias branch
+    selected away per worker).
+    """
+    if skew_max < 0:
+        raise ValueError(f"skew_max must be >= 0, got {skew_max}")
+    rng = np.random.default_rng(seed)
+    # zero-sum near-unit directions: center Gaussian rows, normalize, then
+    # center once more — the final projection keeps the row sum *exactly*
+    # zero (the invariant the optimum-preservation argument needs; exact
+    # for uniform skew, residual O(skew·spread/√m) otherwise) at the cost
+    # of row norms ≈ 1; cmax records the realized worst norm for the V
+    # inflation
+    C = rng.normal(size=(m, problem.d))
+    C -= C.mean(axis=0, keepdims=True)
+    C /= np.maximum(np.linalg.norm(C, axis=1, keepdims=True), 1e-12)
+    C -= C.mean(axis=0, keepdims=True)
+    cmax = float(np.linalg.norm(C, axis=1).max())
+    C_j = jnp.asarray(C, jnp.float32)
+    base = problem.stoch_grad
+
+    def het_grad(key, x, skew, w):
+        g = base(key, x)
+        # bitwise passthrough at skew == 0 (g + 0.0 would flip -0.0 signs)
+        return jnp.where(skew != 0.0, g + skew * C_j[w], g)
+
+    return problem._replace(
+        V=problem.V + skew_max * cmax,
+        het_grad=het_grad,
+        het={"V0": float(problem.V), "cmax": cmax,
+             "skew_max": float(skew_max)},
+    )
+
+
 def make_least_squares_problem(
     d: int = 16, n_data: int = 512, noise: float = 0.1, V: float | None = None,
     seed: int = 0,

@@ -31,9 +31,19 @@ class SyntheticTokens(NamedTuple):
     b: int = 7
     noise_levels: int = 8
 
-    def sample(self, worker: jax.Array, step: jax.Array, batch: int) -> jax.Array:
+    def sample(
+        self, worker: jax.Array, step: jax.Array, batch: int,
+        b_shift: jax.Array | int = 0,
+    ) -> jax.Array:
         """Batch of token sequences (batch, seq_len+1) — inputs + next-token
-        labels come from slicing. Deterministic in (seed, worker, step)."""
+        labels come from slicing. Deterministic in (seed, worker, step).
+
+        ``b_shift`` (scalar, may be traced) offsets the recurrence's
+        additive constant — the *non-iid* axis (DESIGN.md §13): workers
+        with different shifts draw from visibly different token
+        distributions while the task (predict the recurrence) stays
+        learnable.  0 reproduces the iid stream bit-for-bit (the offset
+        is integer arithmetic on tokens, so +0 is exact)."""
         key = jax.random.PRNGKey(self.seed)
         key = jax.random.fold_in(key, worker)
         key = jax.random.fold_in(key, step)
@@ -42,7 +52,7 @@ class SyntheticTokens(NamedTuple):
         noise = jax.random.randint(kn, (batch, self.seq_len + 1), 0, self.noise_levels)
 
         def body(tok, n):
-            nxt = (self.a * tok + self.b + n) % self.vocab_size
+            nxt = (self.a * tok + self.b + b_shift + n) % self.vocab_size
             return nxt, nxt
 
         _, seq = jax.lax.scan(body, x0, noise.T)
@@ -55,15 +65,28 @@ def make_worker_batch(
     per_worker_batch: int,
     step: jax.Array,
     poison_mask: jax.Array | None = None,
+    skew: jax.Array | None = None,
 ) -> dict:
     """Global batch with a leading worker axis.
 
     Returns {'tokens': (W, b, S), 'labels': (W, b, S)}.  If ``poison_mask``
     (W,) is given, poisoned workers get labels shifted by a constant offset
     — a label-flip data attack (gradients of those workers are then honest
-    gradients *of corrupted data*, a realistic Byzantine behaviour)."""
+    gradients *of corrupted data*, a realistic Byzantine behaviour).
+
+    ``skew`` ((W,) f32, usually ``WorkerProfile.skew``) turns on non-iid
+    per-worker streams: worker w's recurrence constant shifts by
+    ``round(skew[w] · vocab/4)`` — heterogeneous honest data whose
+    gradients genuinely disagree.  ``skew ≡ 0`` is bit-identical to the
+    iid pipeline."""
     workers = jnp.arange(n_workers)
-    seqs = jax.vmap(lambda w: stream.sample(w, step, per_worker_batch))(workers)
+    if skew is None:
+        seqs = jax.vmap(lambda w: stream.sample(w, step, per_worker_batch))(workers)
+    else:
+        shifts = jnp.round(skew * (stream.vocab_size // 4)).astype(jnp.int32)
+        seqs = jax.vmap(
+            lambda w, s: stream.sample(w, step, per_worker_batch, b_shift=s)
+        )(workers, shifts)
     tokens, labels = seqs[..., :-1], seqs[..., 1:]
     if poison_mask is not None:
         flipped = (labels + stream.vocab_size // 2) % stream.vocab_size

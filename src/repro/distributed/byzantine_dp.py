@@ -272,7 +272,22 @@ def init_guard_state(cfg: DPGuardConfig, params_like: PyTree) -> DPGuardState:
     )
 
 
-def v_from_gram(gram_g: jax.Array) -> jax.Array:
+def _masked_quantile(x: jax.Array, mask: jax.Array, q: float) -> jax.Array:
+    """``jnp.quantile(x[mask], q)`` with a traced mask and static shapes —
+    the same linear-interpolation formula, so an all-True mask is
+    bit-identical to the unmasked quantile."""
+    n = jnp.sum(mask)
+    s = jnp.sort(jnp.where(mask, x, jnp.inf))
+    index = q * jnp.maximum(n - 1, 0).astype(jnp.float32)
+    low = jnp.floor(index)
+    high = jnp.ceil(index)
+    low_val = s[low.astype(jnp.int32)]
+    high_val = s[high.astype(jnp.int32)]
+    w = index - low
+    return low_val * (1.0 - w) + high_val * w
+
+
+def v_from_gram(gram_g: jax.Array, report: jax.Array | None = None) -> jax.Array:
     """The Assumption-2.2 scale convention: half the 25th-percentile
     pairwise distance from a fresh-gradient Gram.
 
@@ -288,17 +303,30 @@ def v_from_gram(gram_g: jax.Array) -> jax.Array:
     and the trainer's adversary ``ctx["V"]`` estimate (DESIGN.md §10) both
     call this, so the attack magnitudes always probe the same radius the
     filter enforces.
+
+    ``report`` (optional (m,) bool reporting mask, DESIGN.md §13) restricts
+    the quantile to pairs where *both* endpoints reported — a zero-masked
+    non-reporter row would otherwise inject spurious ‖g_j‖-sized distances
+    into the estimate.
     """
     d2 = pairwise_sq_dists_from_gram(gram_g)
     W = d2.shape[0]
-    off = d2[jnp.triu_indices(W, k=1)]
-    return jnp.sqrt(jnp.quantile(off, 0.25)) * 0.5
+    iu, ju = jnp.triu_indices(W, k=1)
+    off = d2[iu, ju]
+    if report is None:
+        q = jnp.quantile(off, 0.25)
+    else:
+        q = _masked_quantile(off, report[iu] & report[ju], 0.25)
+    return jnp.sqrt(q) * 0.5
 
 
-def _calibrate_v(cfg: DPGuardConfig, gram_g: jax.Array, v_prev: jax.Array) -> jax.Array:
+def _calibrate_v(
+    cfg: DPGuardConfig, gram_g: jax.Array, v_prev: jax.Array,
+    report: jax.Array | None = None,
+) -> jax.Array:
     if not cfg.auto_v:
         return jnp.asarray(cfg.V, jnp.float32)
-    v_now = v_from_gram(gram_g)
+    v_now = v_from_gram(gram_g, report)
     v_new = jnp.where(v_prev > 0, cfg.v_ema * v_prev + (1 - cfg.v_ema) * v_now, v_now)
     return jnp.maximum(v_new, 1e-12)
 
@@ -309,6 +337,7 @@ def guard_step(
     grads_w: PyTree,          # leaves (W, ...) — worker axis sharded over data
     params: PyTree,
     anchor: PyTree,           # x_1 — the A-statistic reference point
+    report: jax.Array | None = None,  # (W,) bool — who reported this step
 ) -> tuple[DPGuardState, PyTree, dict]:
     """One filter + aggregation step. Returns (state', ξ (params-like), diag)."""
     W = cfg.n_workers
@@ -323,6 +352,20 @@ def guard_step(
         # actually accumulates (a no-op when the trainer already ravelled
         # to bf16; f32 flat-harness inputs are rounded here)
         grads_w = jax.tree_util.tree_map(lambda g: g.astype(sdt), grads_w)
+
+    def _mask_workers(g: PyTree) -> PyTree:
+        # entry masking for partial participation (DESIGN.md §13): zero
+        # rows freeze A/B for non-reporters and keep the incremental-Gram
+        # identity exact, so every contraction below runs unchanged
+        return jax.tree_util.tree_map(
+            lambda x: jnp.where(
+                report.reshape((-1,) + (1,) * (x.ndim - 1)), x,
+                jnp.zeros((), x.dtype)),
+            g,
+        )
+
+    if report is not None:
+        grads_w = _mask_workers(grads_w)
 
     # --- martingale updates -------------------------------------------------
     if lp:
@@ -344,19 +387,34 @@ def guard_step(
         # measures) instead of ‖g_i‖ (huge and common-mode). One extra
         # mean-reduce of the gradients, orders less than exact mode's
         # all-gather.
+        if report is None:
+            n_mean = None
+        else:
+            # reporter-count mean: masked rows are already zero, so the sum
+            # runs over reporters — only the divisor changes
+            n_mean = jnp.maximum(jnp.sum(report), 1).astype(jnp.float32)
         if lp:
             g_mean = jax.tree_util.tree_map(
-                lambda g: jnp.mean(g, axis=0, keepdims=True, dtype=jnp.float32
-                                   ).astype(g.dtype), grads_w
+                lambda g: (jnp.mean(g, axis=0, keepdims=True, dtype=jnp.float32)
+                           if n_mean is None else
+                           jnp.sum(g, axis=0, keepdims=True, dtype=jnp.float32)
+                           / n_mean).astype(g.dtype), grads_w
             )
             g_cent = jax.tree_util.tree_map(lambda g, c: g - c, grads_w, g_mean)
         else:
             g_mean = jax.tree_util.tree_map(
-                lambda g: jnp.mean(_leaf_f32(g), axis=0, keepdims=True), grads_w
+                lambda g: (jnp.mean(_leaf_f32(g), axis=0, keepdims=True)
+                           if n_mean is None else
+                           jnp.sum(_leaf_f32(g), axis=0, keepdims=True) / n_mean),
+                grads_w,
             )
             g_cent = jax.tree_util.tree_map(
                 lambda g, c: _leaf_f32(g) - c, grads_w, g_mean
             )
+        if report is not None:
+            # re-mask after centering: a non-reporter's centered row would
+            # be −ḡ (not 0) and leak into its frozen B sketch
+            g_cent = _mask_workers(g_cent)
         sq_cent = worker_sq_norms(g_cent, lp)
         s_g = sketch_tree(g_cent, cfg.sketch_dim, lp)
         # (W, k) sketch state: stored in the stats dtype, accumulated and
@@ -405,16 +463,20 @@ def guard_step(
     # backends share the dense/fused phase names so one XLA profile query
     # attributes filter time across all four realizations
     with jax.named_scope("guard/filter"):
-        v_eff = _calibrate_v(cfg, gram_g, state.v_est)
+        v_eff = _calibrate_v(cfg, gram_g, state.v_est, report)
         slack = cfg.sketch_slack if cfg.mode == "sketch" else 1.0
         gcfg = cfg.guard_config(v_eff * slack)
-        good_k, diag = filter_update(A, gram_B, gram_g, state.alive, k_new, gcfg)
+        good_k, diag = filter_update(
+            A, gram_B, gram_g, state.alive, k_new, gcfg, report
+        )
 
     # --- filtered mean (the paper's ξ_k) -------------------------------------
+    # ξ averages the gradients that actually arrived: good ∩ reporting
+    contrib = good_k if report is None else good_k & report
     denom = jnp.where(
-        cfg.mean_over_alive, jnp.maximum(jnp.sum(good_k), 1), W
+        cfg.mean_over_alive, jnp.maximum(jnp.sum(contrib), 1), W
     ).astype(jnp.float32)
-    w = good_k.astype(jnp.float32) / denom
+    w = contrib.astype(jnp.float32) / denom
     with jax.named_scope("guard/aggregate"):
         if lp:
             # fused mask-and-reduce in native dtype, f32 accumulation — this

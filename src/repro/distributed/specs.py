@@ -84,9 +84,14 @@ def _flat_state_specs(abstract: PyTree, W: int, rules: dict, mesh: Mesh) -> PyTr
     """ShapeDtypeStructs-with-shardings for a tree-harness-era state pytree
     (guard backends + adversary/feedback leaves, DESIGN.md §10), by shape:
 
-    * (W,)     — per-worker scalars: worker axes ('pod','data')
+    * (W,)     — per-worker scalars: worker axes ('pod','data') — this is
+                 also what the (m,) leaves of a
+                 :class:`repro.scenarios.spec.WorkerProfile` resolve to
+                 (skew f32, delay int32, p_report f32 all live on the
+                 worker axis; DESIGN.md §13)
     * (W, W)   — filter-sized Grams: replicated
-    * (W, d)   — the flat B martingale / sketch: worker × flat_grad('model')
+    * (W, d)   — the flat B martingale / sketch — and the trainer's
+                 stale-gradient buffer: worker × flat_grad('model')
     * (d,)     — flat anchors/feedback vectors: flat_grad('model')
     * ()       — replicated
 
@@ -137,7 +142,7 @@ def make_train_specs(
     """
     from repro.core.solver import make_aggregator
     from repro.core.tree_harness import FlatSpec, params_harness
-    from repro.distributed.trainer import TrainState
+    from repro.distributed.trainer import TrainState, _grad_dtype
 
     mcfg = model.cfg
     pdt = jnp.dtype(mcfg.param_dtype)
@@ -179,6 +184,16 @@ def make_train_specs(
 
     worker_spec = _logical(("worker",), (W,), rules, mesh)
     flat_spec = _logical(("flat_grad",), (harness.d,), rules, mesh)
+    # stale-gradient buffer (DESIGN.md §13): present exactly when
+    # init_train_state carries one — a (W, d) leaf sharded worker ×
+    # flat_grad like the guard's B martingale; the schedule scalars that
+    # drive it (cfg.max_delay) are static, nothing to shard
+    stale_on = (getattr(adversary, "profile", None) is not None
+                and cfg.max_delay > 0)
+    grad_buf_sds = (_flat_state_specs(
+        jax.ShapeDtypeStruct((W, harness.d), _grad_dtype(cfg, harness)),
+        W, rules, mesh,
+    ) if stale_on else ())
     state_sds = TrainState(
         params=params_sds,
         opt_state=opt_sds,
@@ -190,6 +205,7 @@ def make_train_specs(
         prev_xi=_sds((harness.d,), harness.flat_dtype, mesh, flat_spec),
         prev_alive=_sds((W,), jnp.bool_, mesh, worker_spec),
         prev_n_alive=_sds((), jnp.int32, mesh, P()),
+        grad_buf=grad_buf_sds,
     )
 
     batch_spec = _logical(("worker", None, None), (W, b, shape.seq_len), rules, mesh)

@@ -78,6 +78,11 @@ class TrainState(NamedTuple):
     prev_xi: jax.Array        # (d,) ξ_{k-1} — Remark-2.3 feedback
     prev_alive: jax.Array     # (W,) bool — good_{k-1}
     prev_n_alive: jax.Array   # () int32
+    grad_buf: PyTree = ()     # (W, d) stale-gradient buffer when the run
+    #                           carries a WorkerProfile delay schedule with
+    #                           cfg.max_delay > 0 (DESIGN.md §13); the empty
+    #                           tuple otherwise (the `adv` scalar-zero
+    #                           convention: no leaves, no trace change)
 
 
 def rank_from_mask(mask: jax.Array) -> jax.Array:
@@ -96,6 +101,15 @@ def _estimate_v(flat: jax.Array) -> jax.Array:
     view's storage dtype — the V scale must not wobble with stats_dtype."""
     f32 = flat.astype(jnp.float32)
     return jnp.maximum(v_from_gram(f32 @ f32.T), 1e-12)
+
+
+def _grad_dtype(cfg: SolverConfig, harness) -> jnp.dtype:
+    """Storage dtype of the (W, d) flat gradient view — the cast-once-at-
+    ravel rule (DESIGN.md §5 Numerics): the guard's statistics dtype when
+    the precision axis is lowered, else the harness dtype."""
+    stats_jdt = resolve_stats_dtype(cfg.stats_dtype)
+    return (stats_jdt if stats_jdt != jnp.dtype(jnp.float32)
+            else harness.flat_dtype)
 
 
 def _validate(cfg: SolverConfig, V: float) -> None:
@@ -124,6 +138,14 @@ def init_train_state(
     guard0, _ = make_aggregator(FlatSpec(harness.d, V, D), cfg)
     adv0 = (adversary.init_state(cfg.m, harness.d) if adversary is not None
             else jnp.zeros(()))
+    # stale-gradient buffer (DESIGN.md §13): carried only when the run's
+    # adversary holds a WorkerProfile delay schedule and cfg.max_delay arms
+    # it — every schedule refreshes at step 0, so the zeros are never
+    # consumed.  Same dtype as the flat gradient view (_grad_dtype).
+    stale_on = (getattr(adversary, "profile", None) is not None
+                and cfg.max_delay > 0)
+    grad_buf0 = (jnp.zeros((cfg.m, harness.d), _grad_dtype(cfg, harness))
+                 if stale_on else ())
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),
@@ -135,6 +157,7 @@ def init_train_state(
         prev_xi=jnp.zeros((harness.d,), harness.flat_dtype),
         prev_alive=jnp.ones((cfg.m,), bool),
         prev_n_alive=jnp.asarray(cfg.m, jnp.int32),
+        grad_buf=grad_buf0,
     )
 
 
@@ -187,9 +210,15 @@ def build_train_step(
     # Params/anchor keep the harness dtype: positions feed the optimizer,
     # only the *statistics* ride the precision axis (the guard rounds its
     # own view of delta internally).
-    stats_jdt = resolve_stats_dtype(cfg.stats_dtype)
-    grad_dtype = (stats_jdt if stats_jdt != jnp.dtype(jnp.float32)
-                  else harness.flat_dtype)
+    grad_dtype = _grad_dtype(cfg, harness)
+    # per-worker-state gates (DESIGN.md §13) — static Python decisions,
+    # mirroring run_sgd: no profile (or machinery axis off) lowers to the
+    # pre-profile trace, which is the trainer half of the degenerate-
+    # WorkerProfile bit-identity guarantee.  The data-skew leg lives in the
+    # batch pipeline (make_worker_batch's `skew`), not here.
+    profile = getattr(adversary, "profile", None)
+    stale_on = profile is not None and cfg.max_delay > 0
+    part_on = profile is not None and cfg.partial_participation
     if adversary is None:
         attack_fn = attack_lib.get_attack(cfg.attack)
         attack_kwargs = dict(cfg.attack_kwargs)
@@ -211,6 +240,16 @@ def build_train_step(
         flat = harness.ravel_workers(grads_w, dtype=grad_dtype)  # (W, d) view
         x = harness.ravel(state.params)
 
+        grad_buf = state.grad_buf
+        if stale_on:
+            # periodic-refresh staleness (run_sgd's model): a straggler's
+            # row recomputes only when its schedule fires; between
+            # refreshes the carried stale row (a gradient of older params)
+            # is what reaches the attack and the aggregation layer
+            refresh = adversary.refresh_at(k, cfg.max_delay)
+            grad_buf = jnp.where(refresh[:, None], flat, grad_buf)
+            flat = grad_buf
+
         if adversary is None:
             mask_k = byz_rank < cfg.n_byzantine
         else:
@@ -230,13 +269,24 @@ def build_train_step(
         else:
             flat = adversary.attack(key, flat, mask_k, ctx, state.adv)
 
+        if part_on:
+            # reporting mask ≠ Byzantine mask: honest workers skip steps
+            # per p_report, Byzantine workers always deliver (worst case).
+            # fold_in leaves the attack's own key stream untouched, so
+            # armed machinery with p_report ≡ 1 stays on-trajectory.
+            pkey = jax.random.fold_in(key, 7919)
+            report = adversary.report_at(pkey, mask_k)
+            n_rep = jnp.sum(report).astype(jnp.int32)
+        else:
+            report = None
+
         if tel_on:
             guard, xi_flat, n_alive, alive, frame = agg_step(
-                state.guard, flat, x, state.anchor
+                state.guard, flat, x, state.anchor, report
             )
         else:
             guard, xi_flat, n_alive, alive = agg_step(
-                state.guard, flat, x, state.anchor
+                state.guard, flat, x, state.anchor, report
             )
         adv = state.adv
         if adversary is not None:
@@ -265,6 +315,9 @@ def build_train_step(
             # campaign metrics and log records never go ragged
             "v_est": (guard.v_est if hasattr(guard, "v_est")
                       else jnp.full((), jnp.nan, jnp.float32)),
+            # per-worker-state axis (DESIGN.md §13), same NaN-uniform rule
+            "n_reporting": (n_rep.astype(jnp.float32) if part_on
+                            else jnp.full((), jnp.nan, jnp.float32)),
         }
         if tel_on:
             # complete the frame with trainer-level signals (the solver's
@@ -275,12 +328,20 @@ def build_train_step(
             scale = getattr(adv, "adapt_scale", None)
             if scale is not None:
                 frame["adapt_scale"] = jnp.asarray(scale, jnp.float32)
+            if part_on:
+                frame["n_reporting"] = n_rep.astype(jnp.float32)
+            if stale_on:
+                frame["staleness"] = jnp.mean(
+                    adversary.staleness_at(k, cfg.max_delay)
+                    .astype(jnp.float32)
+                )
             metrics.update({f"tel/{key}": val for key, val in frame.items()})
         new_state = TrainState(
             params=params, opt_state=opt_state, guard=guard,
             anchor=state.anchor, step=k + 1, ever_byz=ever_byz, adv=adv,
             prev_xi=xi_flat.astype(state.prev_xi.dtype), prev_alive=alive,
             prev_n_alive=jnp.asarray(n_alive, jnp.int32),
+            grad_buf=grad_buf,
         )
         return new_state, metrics
 

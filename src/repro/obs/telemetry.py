@@ -77,6 +77,11 @@ SCALAR_KEYS = (
     "v_est",       # online auto-V (dp backends; NaN elsewhere)
     "gram_drift",  # ‖G_inc − B Bᵀ‖_F at resync steps (fused; NaN between)
     "adapt_scale", # AdvState feedback magnitude (NaN for static attacks)
+    # per-worker-state axis (DESIGN.md §13) — appended so historical
+    # packed rings stay decodable by schema length; NaN when the run has
+    # no WorkerProfile (everyone reports, nothing is stale)
+    "n_reporting", # |{workers delivering this step}| under partial participation
+    "staleness",   # mean gradient age in steps under the delay schedule
 )
 FRAME_SCHEMA = PER_WORKER_KEYS + SCALAR_KEYS
 

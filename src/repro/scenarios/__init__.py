@@ -44,9 +44,17 @@ from repro.scenarios.report import (
 from repro.scenarios.spec import (
     NEVER,
     CampaignGrid,
+    GridEntry,
     Scenario,
+    WorkerProfile,
     expand_grid,
     make_scenario,
+    profile_iid,
+    profile_knobs,
+    profile_linear_skew,
+    profile_partial,
+    profile_stragglers,
+    worker_profile,
     scenario_adaptive,
     scenario_churn,
     scenario_coalition,
@@ -68,18 +76,26 @@ __all__ = [
     "CampaignGrid",
     "CampaignResult",
     "GUARD_AGGREGATOR",
+    "GridEntry",
     "NEVER",
     "RunStats",
     "Scenario",
     "ScenarioAdversary",
+    "WorkerProfile",
     "attack_id",
     "build_campaign_fn",
     "degraded_pairs",
     "expand_grid",
     "expand_variants",
     "make_scenario",
+    "profile_iid",
+    "profile_knobs",
+    "profile_linear_skew",
+    "profile_partial",
+    "profile_stragglers",
     "run_campaign",
     "run_campaign_looped",
+    "worker_profile",
     "scenario_adaptive",
     "scenario_churn",
     "scenario_coalition",

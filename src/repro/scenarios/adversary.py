@@ -109,14 +109,48 @@ class AdvState(NamedTuple):
 class ScenarioAdversary(NamedTuple):
     """A Scenario bound to its Byzantine fraction; the solver's ``adversary``
     runtime.  A NamedTuple of (possibly traced) leaves, so constructing it
-    *inside* a vmapped function from grid rows is free."""
+    *inside* a vmapped function from grid rows is free.
+
+    ``profile`` (optional :class:`repro.scenarios.spec.WorkerProfile`) is
+    the per-worker-state axis of DESIGN.md §13: it parameterizes the
+    *honest* side of the run (data skew, staleness schedule, participation
+    probability), while the Scenario keeps parameterizing the Byzantine
+    side.  ``None`` (the default) is the homogeneous iid fleet — no extra
+    pytree leaves, the pre-profile trace.
+    """
 
     scenario: "spec.Scenario"  # Scenario pytree of scalar leaves
     alpha: jax.Array           # () f32
+    profile: "spec.WorkerProfile | None" = None  # (m,)-leaf pytree or None
 
     def n_byz(self, m: int) -> jax.Array:
         # match int(alpha * m): floor, with an epsilon against f32 round-down
         return jnp.floor(self.alpha * m + 1e-6).astype(jnp.int32)
+
+    # -- per-worker schedules (profile-aware; DESIGN.md §13) ----------------
+    def stale_period(self, max_delay: int) -> jax.Array:
+        """(m,) int32 — worker w refreshes its gradient every ``period[w]``
+        steps; the static ``max_delay`` gate caps the schedule."""
+        return jnp.minimum(self.profile.delay, max_delay) + 1
+
+    def refresh_at(self, k: jax.Array, max_delay: int) -> jax.Array:
+        """(m,) bool — workers recomputing a fresh gradient at step k
+        (periodic-refresh staleness model; delay 0 ⇒ refresh every step)."""
+        return (k % self.stale_period(max_delay)) == 0
+
+    def staleness_at(self, k: jax.Array, max_delay: int) -> jax.Array:
+        """(m,) int32 — age (in steps) of the gradient worker w reports at
+        step k under the periodic-refresh schedule."""
+        return k % self.stale_period(max_delay)
+
+    def report_at(self, key: jax.Array, mask_k: jax.Array) -> jax.Array:
+        """(m,) bool — who reports at step k.  Honest worker w reports with
+        probability ``p_report[w]``; Byzantine workers *always* report (the
+        worst-case Remark-2.3 adversary never skips a chance to inject —
+        this also keeps the ever-Byzantine accounting a pure schedule
+        union, the oracle the property tests check against)."""
+        p = self.profile.p_report
+        return (jax.random.uniform(key, p.shape) < p) | mask_k
 
     # -- mask schedule -----------------------------------------------------
     def mask_at(self, rank: jax.Array, k: jax.Array) -> jax.Array:

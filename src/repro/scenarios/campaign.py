@@ -58,6 +58,9 @@ class RunStats(NamedTuple):
     #                                / byz_alive / byz_mask, each with leading
     #                                grid axis N; None keeps the historical
     #                                pytree structure
+    report_frac: jax.Array | None = None  # mean per-step reporter fraction
+    #                                under partial participation (DESIGN.md
+    #                                §13); None when everyone reports
 
 
 class CampaignResult(NamedTuple):
@@ -94,6 +97,9 @@ def _summarize(problem: Problem, cfg: SolverConfig, res, return_gaps: bool):
             # byzantine vs good workers without re-deriving ranks
             "byz_mask": res.byz_mask,
         },
+        report_frac=None if res.n_reporting is None else (
+            jnp.mean(res.n_reporting.astype(jnp.float32)) / cfg.m
+        ),
     )
 
 
@@ -146,7 +152,7 @@ def build_campaign_fn(
     backends: Sequence[str] | None = None,
     telemetry=None,
 ):
-    """The jittable (scenarios, alpha, seeds) → {variant: RunStats} function.
+    """The jittable ``campaign(grid) -> {variant: RunStats}`` function.
 
     ``base_cfg`` supplies everything static: m, T, η, thresholds, and the
     *nominal* α that sizes Krum's f and the trimmed-mean fraction (baselines
@@ -160,17 +166,22 @@ def build_campaign_fn(
     """
     cfgs = expand_variants(base_cfg, aggregators, backends)
 
-    def campaign(scenarios, alpha, seeds):
+    def campaign(grid: CampaignGrid):
+        # the grid is a registered pytree (spec.CampaignGrid) — the whole
+        # object crosses the jit boundary; row metadata rides the treedef.
+        # grid.profiles is either None (homogeneous fleet, zero extra
+        # leaves) or a stacked WorkerProfile vmapped like every other axis.
         out = {}
         for name, cfg in cfgs.items():  # static unroll — one trace total
 
-            def one(scn, a, seed, cfg=cfg):
-                adv = ScenarioAdversary(scenario=scn, alpha=a)
+            def one(scn, a, seed, prof, cfg=cfg):
+                adv = ScenarioAdversary(scenario=scn, alpha=a, profile=prof)
                 res = run_sgd(problem, cfg, jax.random.PRNGKey(seed),
                               adversary=adv, telemetry=telemetry)
                 return _summarize(problem, cfg, res, return_gaps)
 
-            out[name] = jax.vmap(one)(scenarios, alpha, seeds)
+            out[name] = jax.vmap(one)(grid.scenarios, grid.alpha, grid.seeds,
+                                      grid.profiles)
         return out
 
     return campaign
@@ -195,9 +206,9 @@ def run_campaign(
     fn = jax.jit(build_campaign_fn(problem, base_cfg, aggregators,
                                    return_gaps, backends, telemetry))
     t0 = time.perf_counter()
-    compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
+    compiled = fn.lower(grid).compile()
     t1 = time.perf_counter()
-    out = jax.block_until_ready(compiled(grid.scenarios, grid.alpha, grid.seeds))
+    out = jax.block_until_ready(compiled(grid))
     t2 = time.perf_counter()
     return CampaignResult(
         stats=out,
@@ -227,7 +238,10 @@ def run_campaign_looped(
     for name, cfg in cfgs.items():
         for i in range(grid.n_runs):
             scn = jax.tree.map(lambda x, i=i: x[i], grid.scenarios)
-            adv = ScenarioAdversary(scenario=scn, alpha=grid.alpha[i])
+            prof = (None if grid.profiles is None
+                    else jax.tree.map(lambda x, i=i: x[i], grid.profiles))
+            adv = ScenarioAdversary(scenario=scn, alpha=grid.alpha[i],
+                                    profile=prof)
             res = run_sgd(problem, cfg, jax.random.PRNGKey(grid.seeds[i]),
                           adversary=adv)
             gaps[name].append(float(problem.f(res.x_avg) - f_star))

@@ -42,7 +42,8 @@ _BREAK_MULT = 6.0
 
 
 def theorem38_bound(
-    problem: Problem, cfg: SolverConfig, alpha: float, c: float = 3.0
+    problem: Problem, cfg: SolverConfig, alpha: float, c: float = 3.0,
+    V: float | None = None, m_eff: float | None = None,
 ) -> float:
     """Empirical form of the Theorem-3.8 guarantee on E[f(x̄)] − f*:
 
@@ -51,13 +52,31 @@ def theorem38_bound(
     — the Byzantine-perturbation, statistical, and bias/smoothness terms
     with a modest constant (c = 3, the slack ``tests/test_convergence.py``
     already holds the guard to on the logistic problem).
+
+    ``V`` overrides ``problem.V`` — the *realized* heterogeneity-inflated
+    deviation bound of a non-iid row (V0 + skew·cmax, usually below the
+    worst-case V the problem was built with).  ``m_eff`` overrides ``cfg.m``
+    in the statistical term — under partial participation only
+    ``report_frac · m`` gradients are averaged per step, so the variance
+    term shrinks like 1/√(m_eff·T) (DESIGN.md §13).
     """
-    D, V, L, m, T = problem.D, problem.V, problem.L, cfg.m, cfg.T
+    D, L, T = problem.D, problem.L, cfg.T
+    V = problem.V if V is None else V
+    m = cfg.m if m_eff is None else max(m_eff, 1.0)
     return c * (
         D * V * alpha / math.sqrt(T)
         + D * V / math.sqrt(m * T)
         + D * D * max(L, 1.0) / T
     )
+
+
+def _entry_label(e: dict) -> str:
+    """Leaderboard label for a grid entry: the scenario name, suffixed with
+    the worker-profile name for heterogeneous rows (``"alie+stragglers"``)
+    so non-iid / straggler / partial-participation cells never collapse
+    into their iid counterparts (DESIGN.md §13)."""
+    prof = e.get("profile", "iid")
+    return e["scenario"] if prof == "iid" else f"{e['scenario']}+{prof}"
 
 
 def _percentile(xs: np.ndarray, q: float) -> float:
@@ -90,7 +109,7 @@ def filter_timelines(result: CampaignResult, max_curve_points: int = 64) -> list
     """
     groups: dict[tuple[str, float], list[int]] = {}
     for i, e in enumerate(result.entries):
-        groups.setdefault((e["scenario"], e["alpha"]), []).append(i)
+        groups.setdefault((_entry_label(e), e["alpha"]), []).append(i)
 
     rows = []
     for agg in sorted(result.stats):
@@ -146,7 +165,7 @@ def campaign_trace_events(result: CampaignResult, log, select=None) -> int:
         for i, e in enumerate(result.entries):
             if select is not None and not select(e):
                 continue
-            run = f"{e['scenario']}/a{e['alpha']:g}/{agg}/s{e['seed']}"
+            run = f"{_entry_label(e)}/a{e['alpha']:g}/{agg}/s{e['seed']}"
             row_ring = jax.tree.map(lambda x, i=i: x[i], tel["ring"])
             for frame in ring_read(row_ring):
                 log.guard_step(frame, run=run)
@@ -179,7 +198,7 @@ def summarize_campaign(
     aggregators = sorted(result.stats)
     groups: dict[tuple[str, float], list[int]] = {}
     for i, e in enumerate(entries):
-        groups.setdefault((e["scenario"], e["alpha"]), []).append(i)
+        groups.setdefault((_entry_label(e), e["alpha"]), []).append(i)
 
     def _eps(alpha: float) -> tuple[float, float]:
         # per-α thresholds in units of the Theorem-3.8 α-term DVα/√T
@@ -227,19 +246,48 @@ def summarize_campaign(
     for gk in guard_keys:
         st = result.stats[gk]
         for (scn, alpha), idx in sorted(groups.items()):
+            e0 = entries[idx[0]]  # heterogeneity knobs are per group
             alpha_ever = float(
                 np.asarray(st.n_byz_ever)[idx].max() / base_cfg.m
             )
-            bound = theorem38_bound(problem, base_cfg, alpha_ever)
+            # the theorem's regime is α_ever < 1/2 — churn/late-join
+            # schedules can corrupt past it, in which case the bound
+            # simply does not apply and the row must say so rather than
+            # rendering as a spurious pass/fail (scenario_churn promises
+            # this check in its docstring)
+            in_regime = alpha_ever < 0.5
+            # realized heterogeneity-inflated V: the problem's V was
+            # inflated to the worst skew any profile may request; this
+            # row's bound uses its own skew via the het provenance triple
+            skew = float(e0.get("skew", 0.0))
+            v_real = (problem.het["V0"] + skew * problem.het["cmax"]
+                      if problem.het is not None else problem.V)
+            # realized participation: only report_frac·m gradients are
+            # averaged per step, so the statistical term sees m_eff
+            m_eff = None
+            if st.report_frac is not None:
+                m_eff = float(
+                    np.asarray(st.report_frac)[idx].mean() * base_cfg.m
+                )
+            bound = theorem38_bound(problem, base_cfg, alpha_ever,
+                                    V=v_real, m_eff=m_eff)
             gap_med = med[(scn, alpha, gk)]
             guard_bound.append({
                 "scenario": scn,
                 "alpha": alpha,
                 "aggregator": gk,
                 "alpha_ever": alpha_ever,
+                "in_regime": in_regime,
+                "profile": e0.get("profile", "iid"),
+                "skew": skew,
+                "max_delay": int(e0.get("max_delay", 0)),
+                "participation": float(e0.get("participation", 1.0)),
+                "V_realized": v_real,
+                **({"m_eff": m_eff} if m_eff is not None else {}),
                 "bound": bound,
                 "gap_med": gap_med,
-                "within": bool(gap_med <= bound),
+                # None out of regime — the theorem makes no claim there
+                "within": bool(gap_med <= bound) if in_regime else None,
             })
 
     # blades-style cross ranking: collapse the (scenario × α) leaderboard

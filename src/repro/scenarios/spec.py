@@ -35,6 +35,7 @@ Attacks are referenced by integer id into
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Sequence
 
 import jax
@@ -43,6 +44,99 @@ import jax.numpy as jnp
 # sentinel for "this schedule never fires" — any step count in practice is
 # far below 2^30 and int32 arithmetic on it cannot overflow when compared
 NEVER = 1 << 30
+
+
+class WorkerProfile(NamedTuple):
+    """Per-worker state as a first-class axis: fixed-shape ``(m,)`` leaves.
+
+    Rides alongside :class:`Scenario` in the campaign pytree — same
+    stacking invariant (every profile has the same structure, only leaf
+    values differ), so heterogeneous campaigns still lower in one
+    ``jit(vmap)``.  The three leaves parameterize the honest-worker side
+    of a run:
+
+    * ``skew``      — per-worker data-skew magnitude; workers draw from a
+                      gradient distribution biased by ``skew[w] · C[w]``
+                      for a fixed zero-sum direction matrix C (see
+                      :func:`repro.data.problems.heterogenize_problem`),
+                      so the *global* optimum is unchanged and Theorem 3.8
+                      stays checkable at the inflated V.
+    * ``delay``     — staleness period: worker w refreshes its reported
+                      gradient only on steps with ``k % (delay[w]+1) == 0``
+                      (delay 0 = fresh every step), capped by the static
+                      ``SolverConfig.max_delay`` gate.
+    * ``p_report``  — per-step participation probability; on steps where a
+                      worker does not report, the guard must not score it
+                      (reporting mask ≠ Byzantine alive mask, DESIGN.md §13).
+
+    The degenerate profile (skew 0, delay 0, p_report 1) is required to be
+    bit-identical to a run with no profile at all — pinned by test.
+    """
+
+    skew: jax.Array      # (m,) f32 — data-skew magnitude per worker
+    delay: jax.Array     # (m,) int32 — staleness period - 1 per worker
+    p_report: jax.Array  # (m,) f32 — per-step participation probability
+
+
+def worker_profile(
+    m: int,
+    *,
+    skew=0.0,
+    delay=0,
+    p_report=1.0,
+) -> WorkerProfile:
+    """General constructor — scalars broadcast to ``(m,)``, sequences are
+    taken per-worker.  Defaults give the degenerate (iid, fresh, fully
+    participating) profile."""
+
+    def vec(x, dtype):
+        arr = jnp.asarray(x, dtype)
+        if arr.ndim == 0:
+            return jnp.full((m,), arr, dtype)
+        return arr.reshape((m,)).astype(dtype)
+
+    return WorkerProfile(
+        skew=vec(skew, jnp.float32),
+        delay=vec(delay, jnp.int32),
+        p_report=vec(p_report, jnp.float32),
+    )
+
+
+def profile_iid(m: int) -> WorkerProfile:
+    """The degenerate profile — bit-identical semantics to ``profile=None``."""
+    return worker_profile(m)
+
+
+def profile_linear_skew(m: int, skew_max: float) -> WorkerProfile:
+    """Heterogeneous data: worker w's gradient bias ramps linearly from 0
+    to ``skew_max`` across the fleet."""
+    return worker_profile(m, skew=jnp.linspace(0.0, skew_max, m))
+
+
+def profile_stragglers(m: int, frac: float, delay: int) -> WorkerProfile:
+    """The last ``ceil(frac·m)`` workers refresh their gradient only every
+    ``delay+1`` steps (periodic staleness)."""
+    n_slow = min(max(int(round(frac * m)), 1 if frac > 0 else 0), m)
+    delays = jnp.zeros((m,), jnp.int32)
+    if n_slow:
+        delays = delays.at[m - n_slow:].set(delay)
+    return worker_profile(m, delay=delays)
+
+
+def profile_partial(m: int, p: float) -> WorkerProfile:
+    """Every worker reports independently with probability ``p`` per step."""
+    return worker_profile(m, p_report=p)
+
+
+def profile_knobs(profile: WorkerProfile | None) -> dict:
+    """Human-readable summary knobs for grid ``entries`` rows."""
+    if profile is None:
+        return {"skew": 0.0, "max_delay": 0, "participation": 1.0}
+    return {
+        "skew": float(jnp.max(profile.skew)),
+        "max_delay": int(jnp.max(profile.delay)),
+        "participation": float(jnp.min(profile.p_report)),
+    }
 
 
 class Scenario(NamedTuple):
@@ -156,43 +250,99 @@ def scenario_adaptive(
                          attack_scale=attack_scale)
 
 
-class CampaignGrid:
-    """A stacked cartesian product of (scenario × α × seed) runs.
+class GridEntry(NamedTuple):
+    """Human-readable row metadata for one campaign run — hashable (lives
+    in the grid's pytree aux data) and dict-convertible for reports."""
 
-    ``scenarios``/``alpha``/``seeds`` are pytrees/arrays with leading axis
-    N = len(entries); ``entries`` keeps the human-readable (name, alpha,
-    seed) triple per row for reporting.  Not a pytree — pass the three
-    array members into jitted code separately.
+    scenario: str
+    alpha: float
+    seed: int
+    profile: str = "iid"
+    skew: float = 0.0
+    max_delay: int = 0
+    participation: float = 1.0
+
+
+@dataclasses.dataclass
+class CampaignGrid:
+    """A stacked cartesian product of (scenario × α × seed × profile) runs.
+
+    ``scenarios``/``alpha``/``seeds``/``profiles`` are pytrees/arrays with
+    leading axis N = n_runs; ``rows`` keeps one hashable :class:`GridEntry`
+    per run for reporting.  Registered as a pytree — the array members are
+    children and ``rows`` is aux data, so a grid passes into jitted code
+    directly (``jit(campaign)(grid)``) and stacks/indexes under
+    ``jax.tree.map``.  ``profiles`` is ``None`` for a homogeneous grid
+    (no pytree leaves — the degenerate case adds nothing to the trace).
     """
 
+    scenarios: Scenario
+    alpha: jax.Array
+    seeds: jax.Array
+    rows: tuple
+    profiles: WorkerProfile | None = None
+
     def __init__(self, scenarios: Scenario, alpha: jax.Array,
-                 seeds: jax.Array, entries: list[dict]):
+                 seeds: jax.Array, entries, profiles: WorkerProfile | None = None):
         self.scenarios = scenarios
         self.alpha = alpha
         self.seeds = seeds
-        self.entries = entries
+        self.rows = tuple(
+            e if isinstance(e, GridEntry) else GridEntry(**e) for e in entries
+        )
+        self.profiles = profiles
+
+    @property
+    def entries(self) -> list[dict]:
+        """Backward-compatible list-of-dicts view of :attr:`rows`."""
+        return [e._asdict() for e in self.rows]
 
     @property
     def n_runs(self) -> int:
-        return len(self.entries)
+        return len(self.rows)
+
+
+def _grid_flatten(grid: CampaignGrid):
+    children = (grid.scenarios, grid.alpha, grid.seeds, grid.profiles)
+    return children, grid.rows
+
+
+def _grid_unflatten(rows, children):
+    scenarios, alpha, seeds, profiles = children
+    return CampaignGrid(scenarios, alpha, seeds, rows, profiles)
+
+
+jax.tree_util.register_pytree_node(CampaignGrid, _grid_flatten, _grid_unflatten)
 
 
 def expand_grid(
     named_scenarios: Sequence[tuple[str, Scenario]],
     alphas: Sequence[float],
     seeds: Sequence[int],
+    profiles: Sequence[tuple[str, WorkerProfile]] | None = None,
 ) -> CampaignGrid:
-    """Cartesian product (scenario × α × seed) → one stacked grid."""
-    rows, entries = [], []
+    """Cartesian product (scenario × α × seed [× profile]) → one stacked
+    grid.  ``profiles`` is an optional named axis of :class:`WorkerProfile`
+    values; when given, every entry row records the profile's heterogeneity
+    knobs (max skew / max delay / min participation)."""
+    prof_axis: Sequence[tuple[str, WorkerProfile | None]]
+    prof_axis = profiles if profiles is not None else [("iid", None)]
+    rows, entries, profs = [], [], []
     for name, scn in named_scenarios:
         for alpha in alphas:
             for seed in seeds:
-                rows.append((scn, float(alpha), int(seed)))
-                entries.append({"scenario": name, "alpha": float(alpha),
-                                "seed": int(seed)})
+                for pname, prof in prof_axis:
+                    rows.append((scn, float(alpha), int(seed)))
+                    profs.append(prof)
+                    entries.append(GridEntry(
+                        scenario=name, alpha=float(alpha), seed=int(seed),
+                        profile=pname, **profile_knobs(prof)))
     if not rows:
         raise ValueError("empty grid")
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[r[0] for r in rows])
     alpha = jnp.asarray([r[1] for r in rows], jnp.float32)
     seed = jnp.asarray([r[2] for r in rows], jnp.int32)
-    return CampaignGrid(stacked, alpha, seed, entries)
+    stacked_prof = None
+    if profiles is not None:
+        stacked_prof = jax.tree.map(lambda *xs: jnp.stack(xs), *profs)
+    return CampaignGrid(stacked, alpha, seed, entries, stacked_prof)

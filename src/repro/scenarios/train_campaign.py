@@ -68,18 +68,23 @@ def build_train_campaign_fn(
     V: float = 0.0,
     D: float = 10.0,
 ):
-    """The jittable (scenarios, alpha, seeds) → {variant: TrainRunStats}
-    function.  Adversary leaves are traced (constructed inside the vmapped
-    row from grid entries), so one trace covers every scenario/α/seed."""
+    """The jittable ``campaign(grid) -> {variant: TrainRunStats}`` function.
+    Adversary leaves are traced (constructed inside the vmapped row from
+    grid entries), so one trace covers every scenario/α/seed — and, when
+    ``grid.profiles`` carries a stacked :class:`~repro.scenarios.spec.
+    WorkerProfile`, every heterogeneous / straggling / partially-
+    participating row (DESIGN.md §13): the data skew feeds
+    :func:`~repro.data.synthetic.make_worker_batch`, the delay and
+    participation schedules feed ``build_train_step``'s gates."""
     cfgs = expand_variants(base_cfg, aggregators, backends)
     W = base_cfg.m
 
-    def campaign(scenarios, alpha, seeds):
+    def campaign(grid: CampaignGrid):
         out = {}
         for name, cfg in cfgs.items():  # static unroll — one trace total
 
-            def one(scn, a, seed, cfg=cfg):
-                adv = ScenarioAdversary(scenario=scn, alpha=a)
+            def one(scn, a, seed, prof, cfg=cfg):
+                adv = ScenarioAdversary(scenario=scn, alpha=a, profile=prof)
                 train_step = build_train_step(
                     model, optimizer, cfg, V=V, D=D, adversary=adv
                 )
@@ -91,7 +96,10 @@ def build_train_campaign_fn(
                 rank = byz_rank(mask_key, W)
 
                 def body(st, i):
-                    batch = make_worker_batch(stream, W, per_worker_batch, i)
+                    batch = make_worker_batch(
+                        stream, W, per_worker_batch, i,
+                        skew=None if prof is None else prof.skew,
+                    )
                     st, m = train_step(
                         st, batch, rank, jax.random.fold_in(loop_key, i)
                     )
@@ -110,7 +118,8 @@ def build_train_campaign_fn(
                     ever_filtered_good=jnp.any(goodf > 0),
                 )
 
-            out[name] = jax.vmap(one)(scenarios, alpha, seeds)
+            out[name] = jax.vmap(one)(grid.scenarios, grid.alpha,
+                                      grid.seeds, grid.profiles)
         return out
 
     return campaign
@@ -139,9 +148,9 @@ def run_train_campaign(
         per_worker_batch=per_worker_batch, backends=backends, V=V, D=D,
     ))
     t0 = time.perf_counter()
-    compiled = fn.lower(grid.scenarios, grid.alpha, grid.seeds).compile()
+    compiled = fn.lower(grid).compile()
     t1 = time.perf_counter()
-    out = jax.block_until_ready(compiled(grid.scenarios, grid.alpha, grid.seeds))
+    out = jax.block_until_ready(compiled(grid))
     t2 = time.perf_counter()
     return TrainCampaignResult(
         stats=out,
@@ -159,10 +168,12 @@ def summarize_train_campaign(result: TrainCampaignResult,
     campaign leaderboard: one row per (scenario, α, variant, seed-median)."""
     import numpy as np
 
+    from repro.scenarios.report import _entry_label
+
     variants = sorted(result.stats)
     groups: dict[tuple[str, float], list[int]] = {}
     for i, e in enumerate(result.entries):
-        groups.setdefault((e["scenario"], e["alpha"]), []).append(i)
+        groups.setdefault((_entry_label(e), e["alpha"]), []).append(i)
 
     rows = []
     for (scn, alpha), idx in sorted(groups.items()):

@@ -1,0 +1,368 @@
+"""Per-worker state axis (DESIGN.md §13): degenerate-profile bit-identity,
+reporting-mask filter semantics, the churn+late-join α_ever oracle under
+partial participation, the Theorem-3.8 regime flag, and the eval_shape
+sharding-spec regression for the (m,)-leaf WorkerProfile / stale buffer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.byzantine_sgd import masked_median
+from repro.core.solver import SolverConfig, run_sgd
+from repro.data.problems import heterogenize_problem, make_quadratic_problem
+from repro.scenarios import (
+    ScenarioAdversary,
+    WorkerProfile,
+    profile_iid,
+    profile_knobs,
+    profile_linear_skew,
+    profile_partial,
+    profile_stragglers,
+    scenario_churn,
+    scenario_late_join,
+    scenario_static,
+    summarize_campaign,
+    worker_profile,
+)
+from repro.scenarios.campaign import CampaignResult, RunStats
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=1)
+
+
+@pytest.fixture(scope="module")
+def het_quad(quad):
+    return heterogenize_problem(quad, m=16, skew_max=0.5, seed=3)
+
+
+def _cfg(**kw):
+    base = dict(m=16, T=120, eta=0.05, alpha=0.25,
+                aggregator="byzantine_sgd", attack="sign_flip")
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+def _adv(scn, alpha=0.25, profile=None):
+    return ScenarioAdversary(scenario=scn, alpha=jnp.float32(alpha),
+                             profile=profile)
+
+
+def _bytes(x):
+    return np.asarray(x).tobytes()
+
+
+class TestProfileConstructors:
+    def test_broadcast_and_dtypes(self):
+        p = worker_profile(8, skew=0.5, delay=2, p_report=0.9)
+        assert p.skew.shape == (8,) and p.skew.dtype == jnp.float32
+        assert p.delay.shape == (8,) and p.delay.dtype == jnp.int32
+        assert p.p_report.shape == (8,) and p.p_report.dtype == jnp.float32
+
+    def test_stragglers_count(self):
+        p = profile_stragglers(16, frac=0.25, delay=3)
+        assert int((p.delay > 0).sum()) == 4
+        assert int(p.delay.max()) == 3
+
+    def test_knobs_summary(self):
+        assert profile_knobs(None) == {
+            "skew": 0.0, "max_delay": 0, "participation": 1.0}
+        k = profile_knobs(worker_profile(8, skew=0.5, delay=2, p_report=0.8))
+        assert k["skew"] == 0.5 and k["max_delay"] == 2
+        assert k["participation"] == pytest.approx(0.8)
+
+    def test_profile_is_stackable_pytree(self):
+        a, b = profile_iid(8), profile_linear_skew(8, 0.5)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), a, b)
+        assert stacked.skew.shape == (2, 8)
+
+
+class TestDegenerateBitIdentity:
+    def test_solver_armed_machinery_is_bit_identical(self, het_quad):
+        """The acceptance pin: heterogenized problem + degenerate profile +
+        staleness/participation gates armed reproduces the profile=None
+        trajectory bytes-for-bytes (skew 0 → identical gradients, delay 0 →
+        buffer refreshed every step, p_report 1 → everyone reports)."""
+        key = jax.random.PRNGKey(7)
+        scn = scenario_static("sign_flip")
+        base = run_sgd(het_quad, _cfg(), key, adversary=_adv(scn))
+        armed = run_sgd(
+            het_quad,
+            _cfg(max_delay=3, partial_participation=True),
+            key,
+            adversary=_adv(scn, profile=profile_iid(16)),
+        )
+        assert _bytes(armed.x_final) == _bytes(base.x_final)
+        assert _bytes(armed.x_avg) == _bytes(base.x_avg)
+        assert _bytes(armed.gaps) == _bytes(base.gaps)
+        np.testing.assert_array_equal(np.asarray(armed.n_alive),
+                                      np.asarray(base.n_alive))
+        np.testing.assert_array_equal(np.asarray(armed.final_alive),
+                                      np.asarray(base.final_alive))
+        # p_report = 1 → the reporter count is pinned at m every step
+        assert base.n_reporting is None
+        np.testing.assert_array_equal(np.asarray(armed.n_reporting),
+                                      np.full(120, 16, dtype=np.int32))
+
+    def test_gates_stay_cold_without_profile(self, quad):
+        """cfg.max_delay / cfg.partial_participation alone (profile=None)
+        must not change the trace at all."""
+        key = jax.random.PRNGKey(11)
+        scn = scenario_static("sign_flip")
+        base = run_sgd(quad, _cfg(), key, adversary=_adv(scn))
+        cold = run_sgd(quad, _cfg(max_delay=5, partial_participation=True),
+                       key, adversary=_adv(scn))
+        assert _bytes(cold.gaps) == _bytes(base.gaps)
+        assert cold.n_reporting is None
+
+
+class TestReportingMask:
+    def test_honest_nonreporters_never_filtered(self, quad):
+        """The filter only scores reporters: an honest worker that never
+        reports can never be filtered, no matter what the Byzantine
+        reporters do (DESIGN.md §13 reporting-mask vs alive-mask)."""
+        res = run_sgd(
+            quad,
+            _cfg(max_delay=0, partial_participation=True),
+            jax.random.PRNGKey(5),
+            adversary=_adv(scenario_static("sign_flip"),
+                           profile=profile_partial(16, 0.0)),
+        )
+        honest = ~np.asarray(res.byz_mask)
+        assert np.asarray(res.final_alive)[honest].all()
+        assert not bool(res.ever_filtered_good)
+        # Byzantine workers always report, so every step sees exactly n_byz
+        np.testing.assert_array_equal(np.asarray(res.n_reporting),
+                                      np.full(120, 4, dtype=np.int32))
+
+    def test_alpha_ever_matches_schedule_oracle_under_partial(self, quad):
+        """ever-Byzantine is the pure mask-schedule union — partial
+        participation must not leak into it (scenario_churn's docstring
+        promise).  Checked against a step-by-step oracle for churn and
+        late-join."""
+        for scn in [scenario_churn("sign_flip", period=30, stride=4),
+                    scenario_late_join("sign_flip", join_step=60)]:
+            adv = _adv(scn, profile=profile_partial(16, 0.5))
+            key = jax.random.PRNGKey(9)
+            res = run_sgd(quad, _cfg(partial_participation=True), key,
+                          adversary=adv)
+            _, mask_key = jax.random.split(key)
+            from repro.core.solver import byz_rank
+            rank = byz_rank(mask_key, 16)
+            oracle = np.zeros(16, dtype=bool)
+            for k in range(120):
+                oracle |= np.asarray(adv.mask_at(rank, jnp.asarray(k)))
+            np.testing.assert_array_equal(np.asarray(res.byz_mask), oracle)
+
+
+class TestRegimeFlag:
+    def _synthetic_result(self, n_byz_ever, report_frac=None):
+        n = len(n_byz_ever)
+        stats = RunStats(
+            gap_avg=jnp.full((n,), 0.05),
+            gap_final=jnp.full((n,), 0.05),
+            n_alive_final=jnp.full((n,), 16, dtype=jnp.int32),
+            n_byz_ever=jnp.asarray(n_byz_ever, dtype=jnp.int32),
+            detect_latency=jnp.full((n,), -1, dtype=jnp.int32),
+            ever_filtered_good=jnp.zeros((n,), dtype=bool),
+            report_frac=(None if report_frac is None
+                         else jnp.asarray(report_frac, dtype=jnp.float32)),
+        )
+        entries = [
+            {"scenario": "churn", "alpha": 0.25, "seed": 0},
+            {"scenario": "static", "alpha": 0.25, "seed": 0},
+        ]
+        return CampaignResult(stats={"byzantine_sgd": stats}, entries=entries,
+                              wall_s=0.0, compile_s=0.0, n_runs=n)
+
+    def test_out_of_regime_rows_are_flagged(self, quad):
+        """α_ever ≥ 1/2 leaves the Theorem-3.8 regime: the guard row must
+        say so (in_regime False, within None) instead of asserting a bound
+        the theorem never claimed."""
+        rec = summarize_campaign(self._synthetic_result([10, 4]),
+                                 quad, _cfg())
+        rows = {r["scenario"]: r for r in rec["guard_bound"]}
+        assert rows["churn"]["alpha_ever"] == pytest.approx(10 / 16)
+        assert rows["churn"]["in_regime"] is False
+        assert rows["churn"]["within"] is None
+        assert rows["static"]["in_regime"] is True
+        assert isinstance(rows["static"]["within"], bool)
+
+    def test_m_eff_and_realized_v(self, het_quad):
+        """Bound rows evaluate at the realized reporter count and the
+        heterogeneity-inflated V, and record both."""
+        rec = summarize_campaign(
+            self._synthetic_result([4, 4], report_frac=[0.75, 1.0]),
+            het_quad, _cfg())
+        rows = {r["scenario"]: r for r in rec["guard_bound"]}
+        assert rows["churn"]["m_eff"] == pytest.approx(12.0)
+        assert rows["static"]["m_eff"] == pytest.approx(16.0)
+        v_real = het_quad.het["V0"] + 0.0 * het_quad.het["cmax"]
+        assert rows["churn"]["V_realized"] == pytest.approx(v_real)
+
+    def test_entry_label_suffixes_profiles(self):
+        from repro.scenarios.report import _entry_label
+        assert _entry_label({"scenario": "alie", "profile": "iid"}) == "alie"
+        assert _entry_label({"scenario": "alie"}) == "alie"
+        assert (_entry_label({"scenario": "alie", "profile": "stragglers"})
+                == "alie+stragglers")
+
+
+class TestHeterogenizedProblem:
+    def test_zero_row_sum_and_provenance(self, quad, het_quad):
+        assert het_quad.het is not None
+        assert het_quad.het["V0"] == pytest.approx(quad.V)
+        assert het_quad.V == pytest.approx(
+            quad.V + 0.5 * het_quad.het["cmax"])
+
+    def test_zero_skew_gradient_is_bitwise_unchanged(self, het_quad):
+        key = jax.random.PRNGKey(0)
+        x = jnp.ones(16)
+        g0 = het_quad.stoch_grad(key, x)
+        g = het_quad.het_grad(key, x, jnp.float32(0.0),
+                              jnp.asarray(0, jnp.int32))
+        assert _bytes(g) == _bytes(g0)
+
+
+class TestShardingSpecsRegression:
+    """eval_shape-based regression (DESIGN.md §13): make_train_specs must
+    mirror init_train_state exactly — including the stale-gradient buffer —
+    and route (m,)-profile / (W,d)-buffer leaves to the worker axes."""
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+
+    def test_specs_match_init_state_with_stale_buffer(self, mesh):
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.distributed.sharding import LOGICAL_RULES_SINGLE_POD
+        from repro.distributed.specs import make_train_specs
+        from repro.distributed.trainer import init_train_state
+        from repro.models import build_model
+        from repro.optim import adamw
+
+        mcfg = get_config("internlm2-1.8b").reduced(max_d_model=128)
+        model = build_model(mcfg)
+        W = 8
+        cfg = SolverConfig(m=W, T=16, eta=1e-3, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           guard_backend="dp_exact",
+                           max_delay=2, partial_participation=True)
+        adv = _adv(scenario_static("sign_flip"),
+                   profile=worker_profile(W, delay=2, p_report=0.9))
+        opt = adamw(1e-3)
+        shape = InputShape(name="t", seq_len=32, global_batch=W, kind="train")
+        rules = LOGICAL_RULES_SINGLE_POD
+
+        state_sds, _, rank_sds, _ = make_train_specs(
+            model, cfg, "adamw", shape, rules, mesh, adversary=adv)
+        state_abs = jax.eval_shape(
+            lambda k: init_train_state(model, opt, cfg, k, adversary=adv),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+        assert (jax.tree_util.tree_structure(state_sds)
+                == jax.tree_util.tree_structure(state_abs))
+        jax.tree_util.tree_map(
+            lambda s, a: (s.shape, jnp.dtype(s.dtype)),
+            state_sds, state_abs)  # structural zip must not raise
+        mism = [
+            (s.shape, a.shape, s.dtype, a.dtype)
+            for s, a in zip(jax.tree_util.tree_leaves(state_sds),
+                            jax.tree_util.tree_leaves(state_abs))
+            if s.shape != a.shape or jnp.dtype(s.dtype) != jnp.dtype(a.dtype)
+        ]
+        assert not mism, mism
+
+        # the stale buffer is worker × flat_grad, not replicated
+        d = state_sds.anchor.shape[0]
+        assert state_sds.grad_buf.shape == (W, d)
+        assert state_sds.grad_buf.sharding.spec == P(("data",), "model")
+        assert rank_sds.sharding.spec == P(("data",))
+
+    def test_specs_omit_buffer_when_gate_cold(self, mesh):
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.distributed.sharding import LOGICAL_RULES_SINGLE_POD
+        from repro.distributed.specs import make_train_specs
+        from repro.models import build_model
+
+        mcfg = get_config("internlm2-1.8b").reduced(max_d_model=128)
+        model = build_model(mcfg)
+        W = 8
+        cfg = SolverConfig(m=W, T=16, eta=1e-3, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           guard_backend="dp_exact", max_delay=2)
+        shape = InputShape(name="t", seq_len=32, global_batch=W, kind="train")
+        state_sds, _, _, _ = make_train_specs(
+            model, cfg, "adamw", shape, LOGICAL_RULES_SINGLE_POD, mesh)
+        assert state_sds.grad_buf == ()
+
+    def test_profile_leaves_land_on_worker_axis(self, mesh):
+        from repro.distributed.sharding import LOGICAL_RULES_SINGLE_POD
+        from repro.distributed.specs import _flat_state_specs
+
+        W = 8
+        prof_abs = jax.eval_shape(lambda: worker_profile(W, delay=1))
+        specs = _flat_state_specs(prof_abs, W, LOGICAL_RULES_SINGLE_POD, mesh)
+        for leaf in jax.tree_util.tree_leaves(specs):
+            assert leaf.shape == (W,)
+            assert leaf.sharding.spec == P(("data",))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis invariants (same gating convention as test_properties.py)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           alpha=st.sampled_from([0.0, 0.125, 0.25]))
+    def test_full_participation_zero_delay_is_identity(seed, alpha):
+        """Any profile with p_report=1 and delay=0 (skew 0) reproduces the
+        profile=None trajectory bit-identically, for any seed/α."""
+        prob = make_quadratic_problem(d=8, sigma=1.0, L=8.0, V=1.0, seed=2)
+        cfg = SolverConfig(m=8, T=40, eta=0.05, alpha=alpha,
+                           aggregator="byzantine_sgd", attack="sign_flip")
+        key = jax.random.PRNGKey(seed)
+        scn = scenario_static("sign_flip")
+        base = run_sgd(prob, cfg, key, adversary=_adv(scn, alpha=alpha))
+        armed_cfg = SolverConfig(m=8, T=40, eta=0.05, alpha=alpha,
+                                 aggregator="byzantine_sgd",
+                                 attack="sign_flip", max_delay=4,
+                                 partial_participation=True)
+        armed = run_sgd(prob, armed_cfg, key,
+                        adversary=_adv(scn, alpha=alpha,
+                                       profile=profile_iid(8)))
+        assert _bytes(armed.gaps) == _bytes(base.gaps)
+        assert _bytes(armed.x_final) == _bytes(base.x_final)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), m=st.integers(3, 24))
+    def test_masked_median_full_mask_matches_jnp(seed, m):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (m,)) * 3.0
+        full = masked_median(x, jnp.ones(m, dtype=bool))
+        assert _bytes(full) == _bytes(jnp.median(x))
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           m=st.integers(4, 16), n_mask=st.integers(1, 3))
+    def test_masked_median_equals_median_of_subset(seed, m, n_mask):
+        n_mask = min(n_mask, m - 1)
+        x = jax.random.normal(jax.random.PRNGKey(seed), (m,)) * 3.0
+        mask = jnp.arange(m) >= n_mask
+        sub = jnp.median(x[n_mask:])
+        np.testing.assert_allclose(np.asarray(masked_median(x, mask)),
+                                   np.asarray(sub), rtol=1e-6, atol=1e-7)
+
+except ImportError:
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise
