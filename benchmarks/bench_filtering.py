@@ -19,9 +19,10 @@ import numpy as np
 from benchmarks.common import emit, time_fn, write_json
 from repro.core.byzantine_sgd import ByzantineGuard, GuardConfig
 from repro.core.solver import SolverConfig, run_sgd
-from repro.data.problems import make_quadratic_problem
-from repro.kernels import ops
+from repro.data.problems import make_generated_problem, make_quadratic_problem
+from repro.kernels import gradgen, ops, ref
 from repro.roofline.guard_cost import backend_cost, stats_elem_bytes
+from repro.roofline.guard_cost import steady_state_us
 
 
 def bench_detection_latency() -> None:
@@ -72,6 +73,38 @@ def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
     xk = 0.01 * jax.random.normal(k2, (d,), jnp.float32)
     grads2 = jax.random.normal(k3, (m, d), jnp.float32)
 
+    # in-kernel generation point (DESIGN.md §14): the same guard shape, but
+    # rows regenerated from the counter-based PRNG inside the sweep instead
+    # of read from HBM.  An ALIE coalition on the first quarter of the fleet
+    # exercises the per-strip attack statistics (honest mean/std) in-kernel.
+    from repro.core.attacks import alie_z_max
+
+    gprob = make_generated_problem(d=d, sigma=1.0, L=8.0,
+                                   V=float(np.sqrt(2.0 * d)), seed=0)
+    wk1 = gradgen.key_bits(jax.random.split(jax.random.PRNGKey(5), m))
+    wk2 = gradgen.key_bits(jax.random.split(jax.random.PRNGKey(6), m))
+    gen_mask = jnp.arange(m) < m // 4
+    gen_slot = jnp.where(gen_mask, 1, 0).astype(jnp.int32)
+    tg = gradgen.mean_grad(gprob.gen.h, xk, gprob.gen.x_star)
+    gen_params = (
+        jnp.zeros((gradgen.GEN_NPARAMS,), jnp.float32)
+        .at[gradgen.P_ID_A].set(4.0)  # ATTACK_TABLE id: alie
+        .at[gradgen.P_Z_A].set(alie_z_max(m, jnp.sum(gen_mask)))
+        .at[gradgen.P_TGNRM].set(jnp.maximum(jnp.linalg.norm(tg), 1e-12))
+        .at[gradgen.P_NSCALE].set(gprob.gen.noise_scale)
+    )
+    zeros_m = jnp.zeros((m,), jnp.float32)
+
+    def genctx(keys):
+        return gradgen.GenStepCtx(worker_keys=keys, skewsign=zeros_m,
+                                  slot=gen_slot, params=gen_params,
+                                  w_byz=gen_mask.astype(jnp.float32))
+
+    def gen_rows(keys):
+        return jax.jit(ref.gen_rows_ref)(
+            xk, gprob.gen.h, gprob.gen.x_star, gprob.gen.het_dir,
+            keys, zeros_m, gen_slot, gen_params)
+
     per_dtype: dict[str, dict] = {}
     fused_alive: dict[str, jax.Array] = {}
     fused_xi: dict[str, jax.Array] = {}
@@ -100,8 +133,29 @@ def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
         xi_err = float(jnp.max(jnp.abs(xi_f - xi_d)))
         good_eq = bool(jnp.all(sf.alive == sd.alive))
 
+        # gen point: identical row history delivered two ways — materialized
+        # strips through the fused guard vs in-kernel regeneration through
+        # gen_step (the differential oracle at the headline shape)
+        geng = ByzantineGuard(cfg, use_fused=True, d_block=d_block,
+                              stats_dtype=sdt, gen_spec=gprob.gen)
+        gen_step = jax.jit(geng.gen_step)
+        state_g = gen_step(geng.init(d), genctx(wk1), xk, x1)[0]
+        t_gen = time_fn(gen_step, state_g, genctx(wk2), xk, x1,
+                        warmup=1, iters=iters)
+        sg, xi_g, _, _ = jax.block_until_ready(
+            gen_step(state_g, genctx(wk2), xk, x1))
+        state_fm = fused_step(fused.init(d), gen_rows(wk1), xk, x1)[0]
+        sm, xi_m, _ = jax.block_until_ready(
+            fused_step(state_fm, gen_rows(wk2), xk, x1))
+        gen_agree = {
+            "good_k_equal": bool(jnp.all(sg.alive == sm.alive)),
+            "xi_max_abs_err": float(jnp.max(jnp.abs(xi_g - xi_m))),
+            "n_alive": int(jnp.sum(sg.alive)),
+        }
+
         cd = backend_cost("dense", m, d, sdt)
         cf = backend_cost("fused", m, d, sdt)
+        cg = backend_cost("gen", m, d, sdt)
         per_dtype[sdt] = {
             "elem_bytes": stats_elem_bytes(sdt),
             # analytic HBM-traffic model (repro.roofline.guard_cost), NOT
@@ -114,16 +168,27 @@ def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
                           "step": cd.step_bytes},
                 "fused": {"stats": cf.stats_bytes, "xi": cf.xi_bytes,
                           "step": cf.step_bytes},
+                "gen": {"stats": cg.stats_bytes, "xi": cg.xi_bytes,
+                        "step": cg.step_bytes},
                 "stats_ratio": cd.stats_bytes / cf.stats_bytes,
                 "step_ratio": cd.step_bytes / cf.step_bytes,
+                "gen_step_ratio": cf.step_bytes / cg.step_bytes,
             },
-            "wallclock_us": {"dense": t_dense, "fused": t_fused},
+            "wallclock_us": {"dense": t_dense, "fused": t_fused,
+                             "gen": t_gen},
+            # measured / bandwidth-modeled ratio of the gen step — the
+            # measured-vs-modeled band; only a roofline statement on TPU
+            # (on CPU the fused paths run the Pallas interpreter, see
+            # fused_runs_interpret)
+            "gen_measured_over_model": t_gen / max(
+                steady_state_us(cg), 1e-12),
             "agreement": {"gram_B_rel_err": gb_err,
                           "xi_max_abs_err": xi_err,
                           "good_k_equal": good_eq,
                           # visible guard against the all-filtered
                           # degenerate state (where agreement is vacuous)
                           "n_alive": int(jnp.sum(sf.alive))},
+            "gen_vs_fused": gen_agree,
         }
         emit(f"filter/guard_step_dense_{sdt}", t_dense,
              f"model_stats_bytes={cd.stats_bytes}")
@@ -131,6 +196,12 @@ def bench_guard_pipeline(m: int = 32, d: int = 1 << 20, iters: int = 5,
              f"model_stats_bytes={cf.stats_bytes},"
              f"model_stats_ratio={cd.stats_bytes / cf.stats_bytes:.2f},"
              f"model_step_ratio={cd.step_bytes / cf.step_bytes:.2f},"
+             f"interpret={ops.interpret_mode()}")
+        emit(f"filter/guard_step_gen_{sdt}", t_gen,
+             f"model_step_bytes={cg.step_bytes},"
+             f"model_gen_step_ratio={cf.step_bytes / cg.step_bytes:.2f},"
+             f"good_k_equal={gen_agree['good_k_equal']},"
+             f"xi_err={gen_agree['xi_max_abs_err']:.2e},"
              f"interpret={ops.interpret_mode()}")
 
     # the dtype axis headline (ISSUE 5): fused@bf16 must model ≤ 0.55× the

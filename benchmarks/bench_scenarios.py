@@ -35,9 +35,20 @@ data skew, periodic stragglers, and partial participation swept as a named
 ``heterogeneous`` record section), with the Theorem-3.8 check at each
 row's realized skew-inflated V and effective reporter count.
 
+Sixth deliverable (DESIGN.md §14): the **mega campaign** — the full
+(scenario × α × seed) grid 10×'d to tens of thousands of runs under ONE
+traced campaign, peak device memory bounded by run-axis chunking
+(``lax.map`` over chunks of the vmapped grid) and the ``gen``
+pseudo-backend regenerating worker gradients inside the guard sweep so
+the (N, m, d) batch never materializes.  The record carries the compiled
+program's memory analysis next to a chunk-sized reference compile and
+*asserts* the chunked temp allocation stays within 2× of it — the
+sublinear-in-runs peak-memory claim lives in the artifact it gates.
+
 ``--mini`` is the CI tier-2 shape: 5 scenarios (3 dynamic) × 2 seeds at
-small T, two guard backends, one non-iid skew level in the heterogeneous
-slice, looped comparison on the matrix kept.
+small T, the guard backends (gen included), one non-iid skew level in the
+heterogeneous slice, looped comparison on the matrix kept, and a
+guard-only ~2k-run mini-mega grid with the peak-memory assertion.
 """
 from __future__ import annotations
 
@@ -49,7 +60,11 @@ import jax
 from benchmarks.common import emit
 from repro.core.guard_backends import parse_backend_spec
 from repro.core.solver import SolverConfig
-from repro.data.problems import heterogenize_problem, make_quadratic_problem
+from repro.data.problems import (
+    heterogenize_problem,
+    make_generated_problem,
+    make_quadratic_problem,
+)
 from repro.kernels import ops
 from repro.obs import EventLog, TelemetryConfig, roofline_rows
 from repro.roofline.guard_cost import backend_cost, steady_state_us
@@ -85,14 +100,19 @@ MATRIX_ATTACKS = ["none", "sign_flip", "random_gaussian", "alie",
                   "inner_product", "hidden_shift"]
 # the guard-backend sweep: dense oracle, fused Pallas pipeline at both
 # statistics precisions (DESIGN.md §5 Numerics — the bf16 row records the
-# accuracy cost of the halved guard traffic), distributed CountSketch
-# guard (dp_exact is covered by the tier-1 parity tests; it models
-# collective savings, not local-traffic savings, so the leaderboard
-# sweeps the local realizations)
-BACKENDS = ["dense", "fused", "fused@bf16", "dp_sketch"]
-MINI_BACKENDS = ["dense", "fused", "fused@bf16"]
+# accuracy cost of the halved guard traffic), the in-kernel-generation
+# pseudo-backend (DESIGN.md §14 — fused + generate='kernel', worker
+# strips regenerated inside the sweep), distributed CountSketch guard
+# (dp_exact is covered by the tier-1 parity tests; it models collective
+# savings, not local-traffic savings, so the leaderboard sweeps the local
+# realizations)
+BACKENDS = ["dense", "fused", "fused@bf16", "gen", "dp_sketch"]
+MINI_BACKENDS = ["dense", "fused", "fused@bf16", "gen"]
 # headline shape of the DESIGN.md §5 roofline claim
 MODEL_SHAPE = {"m": 32, "d": 1 << 20}
+# run-axis chunk width of the mega campaign (DESIGN.md §14): peak device
+# memory scales with this, not with the grid's tens of thousands of runs
+MEGA_CHUNK = 120
 
 
 def scenario_zoo(T: int, m: int) -> tuple[list, dict]:
@@ -126,7 +146,11 @@ def scenario_zoo(T: int, m: int) -> tuple[list, dict]:
 def campaign_leaderboard(mini: bool, backends: list[str] | None = None) -> dict:
     m = 16
     T = 300 if mini else 1500
-    prob = make_quadratic_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
+    # generated problem (counter-based PRNG sampler, DESIGN.md §14): the
+    # same worker-gradient distribution whether rows are materialized on
+    # the host (dense/fused/dp_sketch variants) or regenerated inside the
+    # guard sweep (the "gen" variant) — one leaderboard, all realizations
+    prob = make_generated_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
     # sketch_dim < d so the dp_sketch variant actually exercises sketch
     # compression (k=8 at d=16 is a 2x fold; the default k=4096 > d would
     # make the CountSketch lossless and silently measure the exact guard);
@@ -175,6 +199,97 @@ def campaign_leaderboard(mini: bool, backends: list[str] | None = None) -> dict:
         emit(f"scenarios/degraded/{row['aggregator']}/{row['dynamic']}",
              row["gap_dynamic"] * 1e6,
              f"static_gap={row['gap_static']:.5f},ratio={row['ratio']:.1f}")
+    return record
+
+
+def _slice_grid(grid, n: int):
+    """First-``n``-rows view of a stacked grid — the chunk-sized reference
+    compile of the mega campaign's peak-memory assertion."""
+    from repro.scenarios.spec import CampaignGrid
+    return CampaignGrid(
+        jax.tree.map(lambda x: x[:n], grid.scenarios),
+        grid.alpha[:n], grid.seeds[:n], grid.entries[:n],
+        None if grid.profiles is None
+        else jax.tree.map(lambda x: x[:n], grid.profiles),
+    )
+
+
+def mega_campaign(mini: bool, backends: list[str] | None = None,
+                  chunk_size: int = MEGA_CHUNK) -> dict:
+    """The 10×-grid deliverable (DESIGN.md §14): the full scenario zoo ×
+    a dense α grid × a deep seed axis, under ONE traced chunked campaign.
+
+    Full shape: 10 scenarios × 6 α × 16 seeds = 960 grid rows × 14
+    variants (every aggregator, the guard expanded across all five
+    backend realizations, in-kernel generation included) = 13 440 runs.
+    Mini (CI tier-2): guard-only, 10 × 4 α × 12 seeds × 4 backends =
+    1 920 runs at small T.
+
+    Peak memory is the point: the chunked campaign's XLA temp allocation
+    is compared against a *chunk-sized reference grid* compiled unchunked
+    — the assertion that the mega grid's temp bytes stay ≤ 2× the
+    reference is what "peak memory sublinear in runs" means, and it fails
+    the benchmark loudly rather than decorating it.
+    """
+    m = 16
+    T = 100 if mini else 1500
+    prob = make_generated_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
+    cfg = SolverConfig(m=m, T=T, eta=0.05, alpha=0.25,
+                       aggregator="byzantine_sgd", attack="sign_flip",
+                       guard_opts=(("sketch_dim", 8),))
+    scenarios, static_of = scenario_zoo(T, m)
+    if mini:
+        alphas, seeds = [0.0625, 0.125, 0.1875, 0.25], range(12)
+        aggs: list[str] = ["byzantine_sgd"]
+        static_of = None
+    else:
+        alphas = [0.0625, 0.125, 0.1875, 0.25, 0.3125, 0.375]
+        seeds = range(16)
+        aggs = AGGREGATORS
+    if backends is None:
+        backends = MINI_BACKENDS if mini else BACKENDS
+
+    grid = expand_grid(scenarios, alphas, list(seeds))
+    result = run_campaign(prob, cfg, grid, aggs, backends=backends,
+                          chunk_size=chunk_size)
+    ref_n = min(chunk_size, grid.n_runs)
+    ref = run_campaign(prob, cfg, _slice_grid(grid, ref_n), aggs,
+                       backends=backends)
+
+    record = summarize_campaign(result, prob, cfg, static_of=static_of)
+    n_variants = len(result.stats)
+    total_runs = grid.n_runs * n_variants
+    peak_ratio = peak_bounded = None
+    if result.memory and ref.memory:
+        peak_ratio = (result.memory["temp_size_in_bytes"]
+                      / max(ref.memory["temp_size_in_bytes"], 1))
+        peak_bounded = bool(peak_ratio <= 2.0)
+    record["grid"] = {
+        "n_runs": grid.n_runs,
+        "n_variants": n_variants,
+        "total_runs": total_runs,
+        "chunk_size": chunk_size,
+        "n_chunks": -(-grid.n_runs // chunk_size),
+        "T": T,
+        "backends": list(backends),
+        "wall_s": result.wall_s,
+        "compile_s": result.compile_s,
+        "memory": result.memory,
+        "reference_runs": ref_n,
+        "reference_memory": ref.memory,
+        "peak_temp_ratio_vs_reference": peak_ratio,
+        "peak_memory_bounded": peak_bounded,
+    }
+    emit("scenarios/mega_campaign", result.wall_s * 1e6,
+         f"runs={total_runs},chunks={record['grid']['n_chunks']},"
+         f"chunk_size={chunk_size},compile_s={result.compile_s:.1f},"
+         f"peak_temp_ratio={peak_ratio if peak_ratio is None else round(peak_ratio, 3)},"
+         f"bounded={peak_bounded}")
+    if peak_bounded is False:
+        raise SystemExit(
+            f"mega campaign peak-memory assertion failed: chunked temp "
+            f"bytes {result.memory['temp_size_in_bytes']} exceed 2x the "
+            f"{ref_n}-run reference's {ref.memory['temp_size_in_bytes']}")
     return record
 
 
@@ -432,6 +547,7 @@ def main(mini: bool = False, skip_looped: bool = False,
          backends: list[str] | None = None,
          trace_out: str | None = None) -> dict:
     record = campaign_leaderboard(mini, backends=backends)
+    record["mega"] = mega_campaign(mini, backends=backends)
     record["heterogeneous"] = heterogeneous_campaign(mini)
     record["matrix6x6_wallclock"] = matrix_wallclock(mini, skip_looped)
     record["mini"] = mini

@@ -26,13 +26,35 @@ def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def device_memory_stats() -> dict | None:
+    """Peak / in-use device memory of the default device, in bytes —
+    ``None`` when the platform does not report allocator statistics (CPU
+    JAX usually does not; TPU/GPU do).  Best-effort by design: memory
+    accounting must never be the reason a benchmark fails."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:  # noqa: BLE001 — platform-dependent, optional
+        return None
+    if not stats:
+        return None
+    keep = ("peak_bytes_in_use", "bytes_in_use", "largest_alloc_size",
+            "bytes_limit", "pool_bytes")
+    out = {k: int(v) for k, v in stats.items() if k in keep}
+    return out or None
+
+
 def write_json(path: str, record: dict) -> None:
     """Write a ``BENCH_*.json`` record with a provenance ``meta`` block
     (commit SHA, jax/jaxlib versions, device kind, timestamp — DESIGN.md
-    §12), so every benchmark artifact says which code on which machine
-    produced it.  An existing ``meta`` key is kept (caller stamped richer
-    fields)."""
+    §12) plus the device allocator's peak-memory counters where the
+    platform reports them, so every benchmark artifact says which code on
+    which machine produced it and how much device memory the run actually
+    held.  An existing ``meta`` key is kept (caller stamped richer fields)
+    but still gains the memory counters if it lacks them."""
     record.setdefault("meta", provenance_meta())
+    mem = device_memory_stats()
+    if mem is not None and isinstance(record.get("meta"), dict):
+        record["meta"].setdefault("device_memory", mem)
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     print(f"wrote {path}")

@@ -17,6 +17,21 @@ def _fmt_gap(row: dict) -> str:
     return f"{row['gap_med']:.5f}{mark}"
 
 
+# mega-campaign grids put hundreds of rows behind every table; render at
+# most this many and close the table with a summary footer pointing at
+# the JSON record (which always carries the full data)
+MAX_TABLE_ROWS = 40
+
+
+def _cap(rows: list, what: str) -> tuple[list, str | None]:
+    """First ``MAX_TABLE_ROWS`` rows + a footer naming how many were cut."""
+    if len(rows) <= MAX_TABLE_ROWS:
+        return rows, None
+    return rows[:MAX_TABLE_ROWS], (
+        f"\n… {len(rows) - MAX_TABLE_ROWS} more {what} rows not shown "
+        f"({len(rows)} total); see the JSON record for the full table.")
+
+
 def _guard_bound_lines(guard_bound: list[dict]) -> list[str]:
     lines = []
     lines.append("\n## ByzantineSGD vs the Theorem-3.8 bound\n")
@@ -28,6 +43,7 @@ def _guard_bound_lines(guard_bound: list[dict]) -> list[str]:
     lines.append("| guard | scenario | α | α_ever | V | m_eff "
                  "| gap med | bound | within |")
     lines.append("|---" * 9 + "|")
+    guard_bound, footer = _cap(guard_bound, "guard-bound")
     for g in guard_bound:
         if g.get("in_regime", True):
             mark = "✓" if g["within"] else "✗"
@@ -43,6 +59,8 @@ def _guard_bound_lines(guard_bound: list[dict]) -> list[str]:
             f"| {g['gap_med']:.5f} | {g['bound']:.4f} "
             f"| {mark} |"
         )
+    if footer:
+        lines.append(footer)
     return lines
 
 
@@ -112,24 +130,64 @@ def render(rec: dict) -> str:
         lines.append("| scenario | aggregator | gap med | detect p50 "
                      "| ever filtered good |")
         lines.append("|---" * 5 + "|")
-        for r in het["leaderboard"]:
+        het_rows, het_footer = _cap(het["leaderboard"], "heterogeneous")
+        for r in het_rows:
             lines.append(
                 f"| {r['scenario']} | {r['aggregator']} "
                 f"| {r['gap_med']:.5f} | {r['detect_p50']} "
                 f"| {'yes' if r['ever_filtered_good'] else 'no'} |"
             )
+        if het_footer:
+            lines.append(het_footer)
         if het.get("guard_bound"):
             lines.extend(_guard_bound_lines(het["guard_bound"]))
+
+    mega = rec.get("mega")
+    if mega and mega.get("grid"):
+        g = mega["grid"]
+        lines.append("\n## Mega campaign — chunked 10× grid (DESIGN.md §14)\n")
+        ratio = g.get("peak_temp_ratio_vs_reference")
+        bounded = g.get("peak_memory_bounded")
+        lines.append(
+            f"{g['total_runs']} runs ({g['n_runs']} grid rows × "
+            f"{g['n_variants']} variants, T={g['T']}) under one traced "
+            f"campaign: `lax.map` over {g['n_chunks']} chunks of "
+            f"{g['chunk_size']}; backends: {', '.join(g['backends'])}.\n"
+        )
+        if ratio is not None:
+            lines.append(
+                f"peak temp memory vs the {g['reference_runs']}-run "
+                f"unchunked reference: {ratio:.2f}× "
+                f"({'✓ bounded' if bounded else '✗ NOT bounded'}, "
+                f"assertion ≤ 2×); wall {g['wall_s']:.1f}s "
+                f"+ {g['compile_s']:.1f}s compile.\n"
+            )
+        if mega.get("aggregator_ranking"):
+            lines.append("| aggregator | mean rank | median gap | worst gap "
+                         "| breaks | cells |")
+            lines.append("|---" * 6 + "|")
+            for r in mega["aggregator_ranking"]:
+                lines.append(
+                    f"| {r['aggregator']} | {r['mean_rank']:.2f} "
+                    f"| {r['gap_med_median']:.5f} "
+                    f"| {r['gap_med_worst']:.5f} "
+                    f"| {r['n_breaks']} | {r['n_cells']} |"
+                )
+        if mega.get("guard_bound"):
+            lines.extend(_guard_bound_lines(mega["guard_bound"]))
 
     lines.append("\n## Detection latency (ByzantineSGD), steps to full filter\n")
     lines.append("| guard | scenario | α | p50 | p90 | detect rate |")
     lines.append("|---" * 6 + "|")
-    for r in rec["leaderboard"]:
-        if not r["aggregator"].startswith("byzantine_sgd"):
-            continue
+    lat_rows, lat_footer = _cap(
+        [r for r in rec["leaderboard"]
+         if r["aggregator"].startswith("byzantine_sgd")], "detection-latency")
+    for r in lat_rows:
         lines.append(f"| {r['aggregator']} | {r['scenario']} | {r['alpha']} "
                      f"| {r['detect_p50']} | {r['detect_p90']} "
                      f"| {r['detect_rate']:.2f} |")
+    if lat_footer:
+        lines.append(lat_footer)
 
     ba = rec.get("backend_axis")
     if ba:

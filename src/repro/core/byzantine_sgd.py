@@ -314,10 +314,14 @@ class ByzantineGuard:
 
     def __init__(self, cfg: GuardConfig, use_fused: bool = False,
                  d_block: int = 2048, gram_resync_every: int = 64,
-                 stats_dtype: str = "f32"):
+                 stats_dtype: str = "f32", gen_spec=None):
         self.cfg = cfg
         self.use_fused = use_fused
         self.d_block = d_block
+        # on-device generation (DESIGN.md §14): when a GenSpec rides along,
+        # gen_step regenerates the gradient strips inside the sweep instead
+        # of step reading a materialized (m, d) batch
+        self.gen_spec = gen_spec
         # fused path: every N-th step re-derive gram_B from B instead of
         # rank-updating, zeroing accumulated f32 rounding (0 disables);
         # amortized cost is one extra B read per N steps.  Under bf16
@@ -432,6 +436,80 @@ class ByzantineGuard:
 
         new_state = GuardState(A=A, B=B, alive=good_k, k=k, gram_B=gram_b)
         return new_state, xi, diag
+
+    def gen_step(
+        self,
+        state: GuardState,
+        genctx,             # repro.kernels.gradgen.GenStepCtx
+        x_k: jax.Array,     # (d,)
+        x_1: jax.Array,     # (d,)
+    ) -> tuple[GuardState, jax.Array, jax.Array, dict]:
+        """:meth:`step` with the gradient batch *generated in-kernel*
+        (DESIGN.md §14): the worker strips are rebuilt from the GenSpec +
+        per-step :class:`~repro.kernels.gradgen.GenStepCtx` inside the
+        fused sweep and the ξ pass, so no (m, d) array crosses HBM — the
+        guard's per-step traffic is the two B strips.  Returns
+        ``(state, ξ, byz_sum, diag)`` where ``byz_sum = Σᵢ w_byz[i]·∇ᵢ``
+        is the adversary's feedback row-sum (the one consumer of the
+        attacked batch outside the guard).  Filter numerics mirror the
+        fused path: strips round through the stats dtype before the
+        accumulators, the incremental Gram re-anchors every
+        ``gram_resync_every`` steps.
+        """
+        if self.gen_spec is None:
+            raise ValueError("gen_step needs a GenSpec (pass gen_spec=...)")
+        cfg = self.cfg
+        m = cfg.m
+        gen = self.gen_spec
+        k = state.k + 1
+        delta = (x_k - x_1).astype(self.stats_dtype)
+
+        with jax.named_scope("guard/stats_sweep"):
+            gram_g, cross, a_inc, B = ops.fused_guard_gen(
+                state.B, delta, x_k, gen.h, gen.x_star, gen.het_dir,
+                genctx.worker_keys, genctx.skewsign, genctx.slot,
+                genctx.params, d_block=self.d_block,
+            )
+            A = state.A + a_inc
+            gram_b = state.gram_B + cross + cross.T + gram_g
+        if self.gram_resync_every > 0:
+            with jax.named_scope("guard/resync"):
+                is_resync = k % self.gram_resync_every == 0
+                derived = jax.lax.cond(
+                    is_resync,
+                    lambda: _gram32(B),
+                    lambda: gram_b,
+                )
+                gram_drift = jnp.where(
+                    is_resync,
+                    jnp.linalg.norm(derived - gram_b),
+                    jnp.float32(jnp.nan),
+                )
+                gram_b = derived
+        else:
+            gram_drift = jnp.full((), jnp.nan, jnp.float32)
+
+        with jax.named_scope("guard/filter"):
+            good_k, diag = filter_update(
+                A, gram_b, gram_g, state.alive, k, cfg, None
+            )
+        diag["gram_drift"] = gram_drift
+
+        contrib = good_k
+        denom = jnp.where(
+            cfg.mean_over_alive, jnp.maximum(jnp.sum(contrib), 1), m
+        ).astype(jnp.float32)
+        with jax.named_scope("guard/aggregate"):
+            xi, byz_sum = ops.gen_xi(
+                contrib.astype(jnp.float32) / denom, genctx.w_byz,
+                x_k, gen.h, gen.x_star, gen.het_dir,
+                genctx.worker_keys, genctx.skewsign, genctx.slot,
+                genctx.params, d_block=self.d_block,
+                stats_dtype=str(self.stats_dtype),
+            )
+
+        new_state = GuardState(A=A, B=B, alive=good_k, k=k, gram_B=gram_b)
+        return new_state, xi, byz_sum, diag
 
 
 def _gram32(x: jax.Array) -> jax.Array:

@@ -189,16 +189,47 @@ def _dense_backend(problem, cfg, telemetry=None):
     return _wrap_byzantine_guard(guard, problem.d, telemetry)
 
 
+def _wrap_gen_guard(guard: ByzantineGuard, d: int, telemetry=None):
+    """Generating-step wrapper (DESIGN.md §14): same shape as
+    :func:`_wrap_byzantine_guard` but the step consumes a
+    :class:`~repro.kernels.gradgen.GenStepCtx` instead of a materialized
+    (m, d) batch, and returns the adversary's feedback row-sum as a fifth
+    element (sixth is the probe frame)."""
+    state0 = guard.init(d)
+    probe = telemetry_on(telemetry)
+    m = guard.cfg.m
+
+    def step(state, genctx, x, x1, report=None):
+        # report must be None by the solver's gen gate (partial
+        # participation needs the materialized batch)
+        state, xi, byz_sum, diag = guard.gen_step(state, genctx, x, x1)
+        if not probe:
+            return state, xi, diag["n_alive"], state.alive, byz_sum
+        return (state, xi, diag["n_alive"], state.alive, byz_sum,
+                guard_frame(m, diag, state.alive))
+
+    return state0, step
+
+
 @register_guard_backend("fused")
 def _fused_backend(problem, cfg, telemetry=None, d_block: int | None = None,
                    gram_resync_every: int = 64):
+    gen_on = getattr(cfg, "generate", "off") == "kernel"
     guard = ByzantineGuard(
         _guard_config(problem, cfg),
         use_fused=True,
         d_block=d_block if d_block is not None else default_d_block(problem.d),
         gram_resync_every=gram_resync_every,
         stats_dtype=cfg.stats_dtype,
+        gen_spec=problem.gen if gen_on else None,
     )
+    if gen_on:
+        # generate="kernel" is NOT a separate registry entry: registered
+        # backends share the grads-consuming step contract (and the
+        # conformance suite calls every name with it) — the generating
+        # step's different signature rides the fused factory behind the
+        # SolverConfig gate instead
+        return _wrap_gen_guard(guard, problem.d, telemetry)
     return _wrap_byzantine_guard(guard, problem.d, telemetry)
 
 

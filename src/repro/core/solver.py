@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core.guard_backends import make_guard_backend
+from repro.kernels import gradgen
 from repro.obs.telemetry import (
     Telemetry,
     baseline_frame,
@@ -64,6 +65,10 @@ class Problem(NamedTuple):
     sigma: float = 0.0  # strong convexity (0 = merely convex)
     het_grad: Callable | None = None  # (key, x, skew, w) -> g (non-iid axis)
     het: dict | None = None           # {'V0','cmax','skew_max'} provenance
+    gen: object | None = None         # repro.kernels.gradgen.GenSpec when the
+    #                                   problem is counter-generatable
+    #                                   (DESIGN.md §14); required by
+    #                                   SolverConfig.generate="kernel"
 
 
 def ceil_byzantine_count(alpha: float, m: int) -> int:
@@ -113,6 +118,15 @@ class SolverConfig(NamedTuple):
     partial_participation: bool = False  # static gate for the per-step
     #                             reporting mask; False = everyone reports
     #                             (no report mask in the trace)
+    generate: str = "off"       # "off" | "kernel" (DESIGN.md §14): "kernel"
+    #                             regenerates every worker gradient inside
+    #                             the fused guard sweep from counter-based
+    #                             PRNG bits — the (m, d) batch never lands
+    #                             in HBM.  Requires problem.gen, a scenario
+    #                             adversary, aggregator="byzantine_sgd",
+    #                             guard_backend="fused"; statically gated
+    #                             so "off" traces the pre-gen program
+    #                             byte-for-byte
 
     @property
     def n_byzantine(self) -> int:
@@ -372,6 +386,48 @@ def run_sgd(
     het_on = profile is not None and problem.het_grad is not None
     stale_on = profile is not None and cfg.max_delay > 0
     part_on = profile is not None and cfg.partial_participation
+    # on-device generation gate (DESIGN.md §14): a static Python decision —
+    # "off" leaves the materializing trace untouched byte-for-byte
+    if cfg.generate not in ("off", "kernel"):
+        raise ValueError(f"generate must be 'off' or 'kernel', "
+                         f"got {cfg.generate!r}")
+    gen_on = cfg.generate == "kernel"
+    if gen_on:
+        if problem.gen is None:
+            raise ValueError("generate='kernel' needs a counter-generatable "
+                             "problem (make_generated_problem)")
+        if adversary is None or not hasattr(adversary, "gen_attack_ctx"):
+            raise ValueError("generate='kernel' needs a scenario adversary "
+                             "(ScenarioAdversary) — the static attack path "
+                             "is not parameterized for in-kernel generation")
+        if cfg.aggregator != "byzantine_sgd" or cfg.guard_backend != "fused":
+            raise ValueError("generate='kernel' requires "
+                             "aggregator='byzantine_sgd' with "
+                             "guard_backend='fused', got "
+                             f"{cfg.aggregator!r}/{cfg.guard_backend!r}")
+        if cfg.max_delay or cfg.partial_participation:
+            raise ValueError("generate='kernel' does not compose with "
+                             "staleness buffers or partial participation "
+                             "(both need the materialized batch)")
+        if het_on and problem.gen.het_sign is None:
+            raise ValueError("generate='kernel' with a heterogeneous "
+                             "profile needs heterogenize_generated (rank-1 "
+                             "skew); heterogenize_problem's dense bias "
+                             "cannot stream through a strip")
+        # attack ids must come from the generatable subset; only checkable
+        # here when the scenario is concrete (a vmapped campaign row passes
+        # tracers — bad ids there fall through to the honest row)
+        try:
+            ids = (int(adversary.scenario.attack_a),
+                   int(adversary.scenario.attack_b))
+        except jax.errors.ConcretizationTypeError:
+            ids = None
+        if ids is not None:
+            bad = [i for i in ids if i not in gradgen.GEN_SUPPORTED_IDS]
+            if bad:
+                raise ValueError(
+                    f"attack ids {bad} are not in-kernel generatable "
+                    f"(supported: {gradgen.GEN_SUPPORTED_IDS})")
     key, mask_key = jax.random.split(key)
     rank = byz_rank(mask_key, cfg.m)
     if adversary is None:
@@ -393,56 +449,94 @@ def run_sgd(
         tel = extras.pop(0) if tel_on else None
         prev_xi, prev_alive, prev_n_alive = fb
         rng, gkey, akey = jax.random.split(rng, 3)
-        worker_keys = jax.random.split(gkey, cfg.m)
-        if het_on:
-            # non-iid honest sampling: worker w draws from its skewed
-            # distribution (mean ∇f + skew[w]·C[w]) — same RNG stream as
-            # the iid path, so skew ≡ 0 reproduces it bit-for-bit
-            grads = jax.vmap(
-                lambda wk, s, w: problem.het_grad(wk, x, s, w)
-            )(worker_keys, profile.skew, jnp.arange(cfg.m))
-        else:
-            grads = jax.vmap(lambda wk: problem.stoch_grad(wk, x))(worker_keys)
-        if stale_on:
-            # periodic-refresh staleness: worker w recomputes its gradient
-            # only when its schedule fires; between refreshes the scan
-            # carries the stale row (computed at an older iterate).  With
-            # delay ≡ 0 the refresh mask is all-True and buf ≡ fresh.
-            refresh = adversary.refresh_at(k, cfg.max_delay)
-            buf = jnp.where(refresh[:, None], grads, buf)
-            grads = buf
-        ctx = {
-            "true_grad": problem.grad(x), "V": problem.V, "step": k,
-            "alive": prev_alive, "n_alive": prev_n_alive, "prev_xi": prev_xi,
-        }
-        if adversary is None:
-            mask_k = static_mask
-            grads = attack_fn(akey, grads, mask_k, ctx, **attack_kwargs)
-        else:
+        if gen_on:
+            # on-device generation (DESIGN.md §14): no (m, d) batch — the
+            # guard's two generating kernels rebuild every worker row from
+            # the same key chain (split(gkey, m)) the materializing path
+            # hands stoch_grad.  akey is still split above so the rng
+            # stream matches step-for-step (the generatable attacks are
+            # key-free, exactly like their materialized counterparts).
+            worker_keys = jax.random.split(gkey, cfg.m)
             mask_k = adversary.mask_at(rank, k)
-            grads = adversary.attack(akey, grads, mask_k, ctx, adv_state)
-        if part_on:
-            # the reporting mask is *distinct* from the Byzantine mask:
-            # honest workers skip steps per p_report, Byzantine workers
-            # always report (worst case).  fold_in keeps the existing
-            # gkey/akey streams untouched, so arming the machinery with
-            # p_report ≡ 1 stays on the pre-profile trajectory.
-            pkey = jax.random.fold_in(akey, 7919)
-            report = adversary.report_at(pkey, mask_k)
-            n_rep = jnp.sum(report).astype(jnp.int32)
+            ctx = {
+                "true_grad": problem.grad(x), "V": problem.V, "step": k,
+                "alive": prev_alive, "n_alive": prev_n_alive,
+                "prev_xi": prev_xi,
+            }
+            slot, params, w_byz = adversary.gen_attack_ctx(
+                mask_k, ctx, adv_state, problem.gen.noise_scale
+            )
+            skewsign = (profile.skew * problem.gen.het_sign if het_on
+                        else jnp.zeros((cfg.m,), jnp.float32))
+            genctx = gradgen.GenStepCtx(
+                worker_keys=gradgen.key_bits(worker_keys),
+                skewsign=skewsign, slot=slot, params=params, w_byz=w_byz,
+            )
+            if tel_on:
+                agg_state, xi, n_alive, alive, byz_sum, frame = agg_step(
+                    agg_state, genctx, x, x1, None
+                )
+            else:
+                agg_state, xi, n_alive, alive, byz_sum = agg_step(
+                    agg_state, genctx, x, x1, None
+                )
+            # the adversary's feedback signal, regenerated in-kernel: the
+            # same Σ mask·rows / max(n_byz, 1) the host update computes
+            byz_row = byz_sum / jnp.maximum(jnp.sum(mask_k), 1)
+            adv_state = adversary.update_state_from_byz_row(
+                adv_state, mask_k, byz_row, xi, alive, n_alive, ctx
+            )
         else:
-            report = None
+            worker_keys = jax.random.split(gkey, cfg.m)
+            if het_on:
+                # non-iid honest sampling: worker w draws from its skewed
+                # distribution (mean ∇f + skew[w]·C[w]) — same RNG stream as
+                # the iid path, so skew ≡ 0 reproduces it bit-for-bit
+                grads = jax.vmap(
+                    lambda wk, s, w: problem.het_grad(wk, x, s, w)
+                )(worker_keys, profile.skew, jnp.arange(cfg.m))
+            else:
+                grads = jax.vmap(lambda wk: problem.stoch_grad(wk, x))(worker_keys)
+            if stale_on:
+                # periodic-refresh staleness: worker w recomputes its gradient
+                # only when its schedule fires; between refreshes the scan
+                # carries the stale row (computed at an older iterate).  With
+                # delay ≡ 0 the refresh mask is all-True and buf ≡ fresh.
+                refresh = adversary.refresh_at(k, cfg.max_delay)
+                buf = jnp.where(refresh[:, None], grads, buf)
+                grads = buf
+            ctx = {
+                "true_grad": problem.grad(x), "V": problem.V, "step": k,
+                "alive": prev_alive, "n_alive": prev_n_alive, "prev_xi": prev_xi,
+            }
+            if adversary is None:
+                mask_k = static_mask
+                grads = attack_fn(akey, grads, mask_k, ctx, **attack_kwargs)
+            else:
+                mask_k = adversary.mask_at(rank, k)
+                grads = adversary.attack(akey, grads, mask_k, ctx, adv_state)
+            if part_on:
+                # the reporting mask is *distinct* from the Byzantine mask:
+                # honest workers skip steps per p_report, Byzantine workers
+                # always report (worst case).  fold_in keeps the existing
+                # gkey/akey streams untouched, so arming the machinery with
+                # p_report ≡ 1 stays on the pre-profile trajectory.
+                pkey = jax.random.fold_in(akey, 7919)
+                report = adversary.report_at(pkey, mask_k)
+                n_rep = jnp.sum(report).astype(jnp.int32)
+            else:
+                report = None
 
-        if tel_on:
-            agg_state, xi, n_alive, alive, frame = agg_step(
-                agg_state, grads, x, x1, report
-            )
-        else:
-            agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1, report)
-        if adversary is not None:
-            adv_state = adversary.update_state(
-                adv_state, mask_k, grads, xi, alive, n_alive, ctx
-            )
+            if tel_on:
+                agg_state, xi, n_alive, alive, frame = agg_step(
+                    agg_state, grads, x, x1, report
+                )
+            else:
+                agg_state, xi, n_alive, alive = agg_step(agg_state, grads, x, x1, report)
+            if adversary is not None:
+                adv_state = adversary.update_state(
+                    adv_state, mask_k, grads, xi, alive, n_alive, ctx
+                )
 
         x_new = x - cfg.eta * xi
         # Fact 2.5 projected step: ball of radius D around x_1

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.solver import Problem
+from repro.kernels import gradgen
 
 
 def _sphere_noise(key: jax.Array, d: int, V: float) -> jax.Array:
@@ -105,6 +106,95 @@ def heterogenize_problem(
         het_grad=het_grad,
         het={"V0": float(problem.V), "cmax": cmax,
              "skew_max": float(skew_max)},
+    )
+
+
+def make_generated_problem(
+    d: int = 16, sigma: float = 1.0, L: float = 10.0, V: float = 1.0,
+    D: float | None = None, seed: int = 0,
+) -> Problem:
+    """The quadratic family restated in *counter-generatable* form
+    (DESIGN.md §14): f(x) = ½ Σⱼ hⱼ (xⱼ − x*ⱼ)² with hⱼ log-spaced in
+    [σ, L] (diagonal H — same spectrum as :func:`make_quadratic_problem`,
+    rotated into the coordinate basis so a kernel strip can evaluate its
+    slice of ∇f locally), and stochastic gradient = ∇f(x) + noise where
+    noise_j = (V/√d)·uniform(−1, 1) from Threefry counters keyed on
+    (worker key, coordinate j) — mean-zero and ‖noise‖ ≤ V a.s.
+    (Assumption 2.2, box instead of sphere).
+
+    ``stoch_grad`` consumes the standard per-worker key from the solver's
+    chain but draws every coordinate through
+    :mod:`repro.kernels.gradgen` — the *same* expressions the fused guard
+    sweep regenerates in-kernel, so the host and device sides agree
+    bit-for-bit under jit.  The returned problem carries the
+    :class:`~repro.kernels.gradgen.GenSpec` in ``Problem.gen``, which is
+    what ``SolverConfig.generate="kernel"`` requires.
+    """
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(np.geomspace(sigma, L, d), jnp.float32)
+    x_star = jnp.asarray(rng.normal(size=(d,)) / np.sqrt(d), jnp.float32)
+    x1 = jnp.zeros((d,), jnp.float32)
+    if D is None:
+        D = float(2.0 * np.linalg.norm(np.asarray(x_star)))
+    noise_scale = jnp.float32(V) / jnp.sqrt(jnp.float32(d))
+    coords = jnp.arange(d, dtype=jnp.uint32)
+
+    def f(x):
+        r = x - x_star
+        return 0.5 * jnp.sum(h * r * r)
+
+    def grad(x):
+        return gradgen.mean_grad(h, x, x_star)
+
+    def stoch_grad(key, x):
+        kd = gradgen.key_bits(key)
+        return (gradgen.mean_grad(h, x, x_star)
+                + gradgen.noise_row(kd, coords, noise_scale))
+
+    gen = gradgen.GenSpec(h=h, x_star=x_star, noise_scale=noise_scale,
+                          het_dir=jnp.zeros((d,), jnp.float32))
+    return Problem(d=d, f=f, grad=grad, stoch_grad=stoch_grad, x1=x1,
+                   x_star=x_star, D=D, V=V, L=L, sigma=sigma, gen=gen)
+
+
+def heterogenize_generated(
+    problem: Problem, m: int, skew_max: float, seed: int = 0,
+) -> Problem:
+    """:func:`heterogenize_problem` for generated problems — the bias
+    matrix is constrained to rank 1, ``C[w] = sign[w] · dir`` with a fixed
+    unit direction and alternating ±1 worker signs (exact zero fleet sum),
+    so a kernel strip folds worker w's bias in as the O(1)-per-worker
+    scalar ``skew·sign[w]`` times the streamed ``dir`` strip.  Multiplying
+    by ±1 is exact in IEEE arithmetic, so ``skew·(sign·dir)`` on the host
+    and ``(skew·sign)·dir`` in the kernel are bitwise identical.
+    """
+    if problem.gen is None:
+        raise ValueError("heterogenize_generated needs a generated problem "
+                         "(make_generated_problem); use heterogenize_problem "
+                         "for dense bias matrices")
+    if skew_max < 0:
+        raise ValueError(f"skew_max must be >= 0, got {skew_max}")
+    if m % 2:
+        raise ValueError(f"rank-1 zero-sum signs need even m, got {m}")
+    rng = np.random.default_rng(seed)
+    dvec = rng.normal(size=problem.d)
+    dvec /= max(np.linalg.norm(dvec), 1e-12)
+    dir_j = jnp.asarray(dvec, jnp.float32)
+    sign = jnp.asarray(np.where(np.arange(m) % 2 == 0, 1.0, -1.0), jnp.float32)
+    C_j = sign[:, None] * dir_j[None, :]
+    cmax = float(np.linalg.norm(dvec))
+    base = problem.stoch_grad
+
+    def het_grad(key, x, skew, w):
+        g = base(key, x)
+        return jnp.where(skew != 0.0, g + skew * C_j[w], g)
+
+    return problem._replace(
+        V=problem.V + skew_max * cmax,
+        het_grad=het_grad,
+        het={"V0": float(problem.V), "cmax": cmax,
+             "skew_max": float(skew_max)},
+        gen=problem.gen._replace(het_dir=dir_j, het_sign=sign),
     )
 
 

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.gradgen import GEN_NPARAMS, gen_worker_rows
+
 
 def _fused_guard_kernel(g_ref, b_ref, delta_ref,
                         gram_g_ref, cross_ref, a_inc_ref, b_new_ref):
@@ -129,3 +131,226 @@ def fused_guard_pallas(
             interpret=interpret,
         )(grads, B, delta)
     return gram_g[:m, :m], cross[:m, :m], a_inc[:m], b_new[:m, :d]
+
+
+# ---------------------------------------------------------------------------
+# generating variants (DESIGN.md §14): the gradient strips are regenerated
+# in-kernel from (key, coordinate) counters instead of being read from HBM
+# ---------------------------------------------------------------------------
+
+
+def _gen_strip(x_ref, h_ref, xs_ref, hd_ref, keys_ref, skew_ref, slot_ref,
+               params_ref, *, d_block, d):
+    """Shared kernel prologue: regenerate this grid step's attacked worker
+    strip (mp, d_blk) f32 via :func:`repro.kernels.gradgen.gen_worker_rows`."""
+    i = pl.program_id(0)
+    # TPU iota must be rank ≥ 2: a (1, d_blk) row of global coordinates
+    j = (i * d_block + jax.lax.broadcasted_iota(jnp.int32, (1, d_block), 1)
+         ).astype(jnp.uint32)
+    return gen_worker_rows(
+        x_ref[...].astype(jnp.float32),
+        h_ref[...].astype(jnp.float32),
+        xs_ref[...].astype(jnp.float32),
+        hd_ref[...].astype(jnp.float32),
+        keys_ref[...],
+        skew_ref[...].astype(jnp.float32),
+        slot_ref[...],
+        params_ref[...].astype(jnp.float32),
+        j, d,
+    )
+
+
+def _fused_guard_gen_kernel(b_ref, delta_ref, x_ref, h_ref, xs_ref, hd_ref,
+                            keys_ref, skew_ref, slot_ref, params_ref,
+                            gram_g_ref, cross_ref, a_inc_ref, b_new_ref,
+                            *, d_block, d):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_g_ref[...] = jnp.zeros_like(gram_g_ref)
+        cross_ref[...] = jnp.zeros_like(cross_ref)
+        a_inc_ref[...] = jnp.zeros_like(a_inc_ref)
+
+    rows = _gen_strip(x_ref, h_ref, xs_ref, hd_ref, keys_ref, skew_ref,
+                      slot_ref, params_ref, d_block=d_block, d=d)
+    # mirror the materializing path's storage rounding: the host casts the
+    # attacked grads to stats_dtype before the sweep, which then upcasts —
+    # round-trip through B's dtype so bf16 statistics stay pinned to it
+    g = rows.astype(b_new_ref.dtype).astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    dlt = delta_ref[...].astype(jnp.float32)
+
+    contract = (((1,), (1,)), ((), ()))
+    gram_g_ref[...] += jax.lax.dot_general(
+        g, g, contract, preferred_element_type=jnp.float32
+    )
+    cross_ref[...] += jax.lax.dot_general(
+        b, g, contract, preferred_element_type=jnp.float32
+    )
+    a_inc_ref[...] += jnp.sum(g * dlt[None, :], axis=1)
+    b_new_ref[...] = (b + g).astype(b_new_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def fused_guard_gen_pallas(
+    B: jax.Array,          # (m, d) martingale matrix B_{k-1}
+    delta: jax.Array,      # (d,)   x_k − x_1
+    x: jax.Array,          # (d,)   current iterate
+    h: jax.Array,          # (d,)   diagonal curvature
+    x_star: jax.Array,     # (d,)   optimum
+    het_dir: jax.Array,    # (d,)   rank-1 skew direction (zeros if iid)
+    keys: jax.Array,       # (m, 2) uint32 worker key words
+    skewsign: jax.Array,   # (m,)   f32 skew·sign per worker
+    slot: jax.Array,       # (m,)   int32 attack slot per worker
+    params: jax.Array,     # (GEN_NPARAMS,) f32 attack parameters
+    d_block: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`fused_guard_pallas` with the ``grads`` operand *generated*
+    in-kernel — same four outputs, but the (m, d) gradient batch never
+    exists in HBM, so the sweep reads/writes only the two B strips:
+    2·m·d·e bytes vs the materializing kernel's 3·m·d·e (plus the batch's
+    own producer traffic).  Padded worker rows carry ``slot = −1`` and
+    padded coordinates are masked against the static true ``d`` inside the
+    generator, since generated values (unlike zero-padded inputs) are
+    nonzero in the padding."""
+    m, d = B.shape
+    if keys.shape != (m, 2):
+        raise ValueError(f"keys shape {keys.shape} != {(m, 2)}")
+    if params.shape != (GEN_NPARAMS,):
+        raise ValueError(f"params shape {params.shape} != {(GEN_NPARAMS,)}")
+    m_pad = (-m) % 8
+    d_pad = (-d) % d_block
+    if m_pad:
+        B = jnp.pad(B, ((0, m_pad), (0, 0)))
+        keys = jnp.pad(keys, ((0, m_pad), (0, 0)))
+        skewsign = jnp.pad(skewsign, (0, m_pad))
+        slot = jnp.pad(slot, (0, m_pad), constant_values=-1)
+    if d_pad:
+        B = jnp.pad(B, ((0, 0), (0, d_pad)))
+        delta = jnp.pad(delta, (0, d_pad))
+        x = jnp.pad(x, (0, d_pad))
+        h = jnp.pad(h, (0, d_pad))
+        x_star = jnp.pad(x_star, (0, d_pad))
+        het_dir = jnp.pad(het_dir, (0, d_pad))
+    mp, dp = B.shape
+
+    kernel = functools.partial(_fused_guard_gen_kernel, d_block=d_block, d=d)
+    with jax.named_scope("guard/pallas_fused_guard_gen"):
+        gram_g, cross, a_inc, b_new = pl.pallas_call(
+            kernel,
+            grid=(dp // d_block,),
+            in_specs=[
+                pl.BlockSpec((mp, d_block), lambda i: (0, i)),   # B
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # delta
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # x
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # h
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # x_star
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # het_dir
+                pl.BlockSpec((mp, 2), lambda i: (0, 0)),         # keys
+                pl.BlockSpec((mp,), lambda i: (0,)),             # skewsign
+                pl.BlockSpec((mp,), lambda i: (0,)),             # slot
+                pl.BlockSpec((GEN_NPARAMS,), lambda i: (0,)),    # params
+            ],
+            out_specs=[
+                pl.BlockSpec((mp, mp), lambda i: (0, 0)),
+                pl.BlockSpec((mp, mp), lambda i: (0, 0)),
+                pl.BlockSpec((mp,), lambda i: (0,)),
+                pl.BlockSpec((mp, d_block), lambda i: (0, i)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+                jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+                jax.ShapeDtypeStruct((mp,), jnp.float32),
+                jax.ShapeDtypeStruct((mp, dp), B.dtype),
+            ],
+            interpret=interpret,
+        )(B, delta, x, h, x_star, het_dir, keys, skewsign, slot, params)
+    return gram_g[:m, :m], cross[:m, :m], a_inc[:m], b_new[:m, :d]
+
+
+def _gen_xi_kernel(wxi_ref, wbyz_ref, x_ref, h_ref, xs_ref, hd_ref,
+                   keys_ref, skew_ref, slot_ref, params_ref,
+                   xi_ref, byz_ref, *, d_block, d, stats_dtype):
+    rows = _gen_strip(x_ref, h_ref, xs_ref, hd_ref, keys_ref, skew_ref,
+                      slot_ref, params_ref, d_block=d_block, d=d)
+    # ξ consumes the stats-rounded strips (what the materializing guard's
+    # filtered_mean sees); the adversary's byz-row feedback consumes the
+    # raw f32 rows (what the host adversary.update_state sees)
+    gs = rows.astype(stats_dtype).astype(jnp.float32)
+    w = wxi_ref[...].astype(jnp.float32)
+    xi_ref[...] = jnp.einsum("m,md->d", w, gs)
+    byz_ref[...] = jnp.sum(rows * wbyz_ref[...][:, None], axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d_block", "interpret", "stats_dtype"))
+def gen_xi_pallas(
+    w_xi: jax.Array,       # (m,) f32 aggregation weights (contrib / denom)
+    w_byz: jax.Array,      # (m,) f32 Byzantine mask weights
+    x: jax.Array,          # (d,)
+    h: jax.Array,          # (d,)
+    x_star: jax.Array,     # (d,)
+    het_dir: jax.Array,    # (d,)
+    keys: jax.Array,       # (m, 2) uint32
+    skewsign: jax.Array,   # (m,) f32
+    slot: jax.Array,       # (m,) int32
+    params: jax.Array,     # (GEN_NPARAMS,) f32
+    d_block: int = 2048,
+    interpret: bool = False,
+    stats_dtype: str = "float32",
+) -> tuple[jax.Array, jax.Array]:
+    """Second generating pass: the filtered mean ξ = Σᵢ w_xi[i]·∇ᵢ and the
+    Byzantine row-sum Σᵢ w_byz[i]·∇ᵢ (the adversary's feedback signal),
+    both regenerated from the same counters as the sweep so nothing (m, d)
+    is ever stored.  ``stats_dtype`` reproduces the materializing path's
+    storage rounding for ξ; the byz sum uses raw f32 rows exactly as the
+    host hands ``adversary.update_state`` the un-rounded attack output."""
+    m = keys.shape[0]
+    d = x.shape[0]
+    m_pad = (-m) % 8
+    d_pad = (-d) % d_block
+    if m_pad:
+        w_xi = jnp.pad(w_xi, (0, m_pad))
+        w_byz = jnp.pad(w_byz, (0, m_pad))
+        keys = jnp.pad(keys, ((0, m_pad), (0, 0)))
+        skewsign = jnp.pad(skewsign, (0, m_pad))
+        slot = jnp.pad(slot, (0, m_pad), constant_values=-1)
+    if d_pad:
+        x = jnp.pad(x, (0, d_pad))
+        h = jnp.pad(h, (0, d_pad))
+        x_star = jnp.pad(x_star, (0, d_pad))
+        het_dir = jnp.pad(het_dir, (0, d_pad))
+    mp = keys.shape[0]
+    dp = x.shape[0]
+
+    kernel = functools.partial(_gen_xi_kernel, d_block=d_block, d=d,
+                               stats_dtype=jnp.dtype(stats_dtype))
+    with jax.named_scope("guard/pallas_gen_xi"):
+        xi, byz = pl.pallas_call(
+            kernel,
+            grid=(dp // d_block,),
+            in_specs=[
+                pl.BlockSpec((mp,), lambda i: (0,)),             # w_xi
+                pl.BlockSpec((mp,), lambda i: (0,)),             # w_byz
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # x
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # h
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # x_star
+                pl.BlockSpec((d_block,), lambda i: (i,)),        # het_dir
+                pl.BlockSpec((mp, 2), lambda i: (0, 0)),         # keys
+                pl.BlockSpec((mp,), lambda i: (0,)),             # skewsign
+                pl.BlockSpec((mp,), lambda i: (0,)),             # slot
+                pl.BlockSpec((GEN_NPARAMS,), lambda i: (0,)),    # params
+            ],
+            out_specs=[
+                pl.BlockSpec((d_block,), lambda i: (i,)),
+                pl.BlockSpec((d_block,), lambda i: (i,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((dp,), jnp.float32),
+                jax.ShapeDtypeStruct((dp,), jnp.float32),
+            ],
+            interpret=interpret,
+        )(w_xi, w_byz, x, h, x_star, het_dir, keys, skewsign, slot, params)
+    return xi[:d], byz[:d]

@@ -12,7 +12,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.countsketch import countsketch_pallas
-from repro.kernels.fused_guard import fused_guard_pallas
+from repro.kernels.fused_guard import (
+    fused_guard_gen_pallas,
+    fused_guard_pallas,
+    gen_xi_pallas,
+)
 from repro.kernels.pairdist import gram_pallas
 from repro.kernels.robust_reduce import (
     coordinate_median_pallas,
@@ -67,6 +71,28 @@ def fused_guard(grads: jax.Array, B: jax.Array, delta: jax.Array,
                               interpret=interpret_mode())
 
 
+def fused_guard_gen(B, delta, x, h, x_star, het_dir,
+                    keys, skewsign, slot, params, d_block: int = 2048):
+    """Generating variant of :func:`fused_guard` (DESIGN.md §14): the
+    gradient strips are regenerated in-kernel from (key, coordinate)
+    counters — the (m, d) batch never lands in HBM, so the sweep's traffic
+    is the two B strips only (2·m·d·e bytes)."""
+    return fused_guard_gen_pallas(B, delta, x, h, x_star, het_dir,
+                                  keys, skewsign, slot, params,
+                                  d_block=d_block, interpret=interpret_mode())
+
+
+def gen_xi(w_xi, w_byz, x, h, x_star, het_dir,
+           keys, skewsign, slot, params,
+           d_block: int = 2048, stats_dtype: str = "float32"):
+    """Generating filtered-mean + Byzantine row-sum pass (see
+    fused_guard.py) — the ξ/feedback consumer of the generated strips."""
+    return gen_xi_pallas(w_xi, w_byz, x, h, x_star, het_dir,
+                         keys, skewsign, slot, params,
+                         d_block=d_block, interpret=interpret_mode(),
+                         stats_dtype=stats_dtype)
+
+
 ORACLES = {
     "gram": ref.gram_ref,
     "coordinate_median": ref.coordinate_median_ref,
@@ -74,4 +100,6 @@ ORACLES = {
     "filtered_mean": ref.filtered_mean_ref,
     "countsketch": ref.countsketch_ref,
     "fused_guard": ref.fused_guard_ref,
+    "fused_guard_gen": ref.fused_guard_gen_ref,
+    "gen_xi": ref.gen_xi_ref,
 }

@@ -50,6 +50,45 @@ def fused_guard_ref(
     return g @ g.T, b @ g.T, g @ dlt, (b + g).astype(B.dtype)
 
 
+def gen_rows_ref(x, h, x_star, het_dir, keys, skewsign, slot, params):
+    """Host oracle for the in-kernel gradient generator: materialize the
+    full (m, d) attacked batch via the *same*
+    :func:`repro.kernels.gradgen.gen_worker_rows` body the Pallas kernels
+    call per strip — one invocation with ``j = arange(d)``."""
+    from repro.kernels import gradgen
+
+    d = x.shape[0]
+    j = jnp.arange(d, dtype=jnp.uint32)
+    return gradgen.gen_worker_rows(
+        x.astype(jnp.float32), h.astype(jnp.float32),
+        x_star.astype(jnp.float32), het_dir.astype(jnp.float32),
+        keys, skewsign.astype(jnp.float32), slot,
+        params.astype(jnp.float32), j, d)
+
+
+def fused_guard_gen_ref(B, delta, x, h, x_star, het_dir,
+                        keys, skewsign, slot, params):
+    """Materialize-then-sweep oracle for the generating guard kernel:
+    regenerate the batch, round it through the statistics storage dtype
+    (``B.dtype``) exactly as the materializing path does, and hand it to
+    :func:`fused_guard_ref`."""
+    rows = gen_rows_ref(x, h, x_star, het_dir, keys, skewsign, slot, params)
+    return fused_guard_ref(rows.astype(B.dtype), B, delta)
+
+
+def gen_xi_ref(w_xi, w_byz, x, h, x_star, het_dir,
+               keys, skewsign, slot, params, stats_dtype=jnp.float32):
+    """Oracle for the generating ξ pass: ``(Σ w_xi[i]·∇ᵢ, Σ w_byz[i]·∇ᵢ)``
+    — ξ over the stats-rounded rows (what the guard's filtered mean sees),
+    the Byzantine row-sum over the raw f32 rows (what the adversary's
+    feedback update sees)."""
+    rows = gen_rows_ref(x, h, x_star, het_dir, keys, skewsign, slot, params)
+    gs = rows.astype(stats_dtype).astype(jnp.float32)
+    xi = jnp.einsum("m,md->d", w_xi.astype(jnp.float32), gs)
+    byz = jnp.sum(rows * w_byz.astype(jnp.float32)[:, None], axis=0)
+    return xi, byz
+
+
 def sketch_sign(n: int, salt: int) -> jax.Array:
     """±1 per flat coordinate — the hash shared with repro.distributed."""
     idx = jax.lax.iota(jnp.uint32, n)

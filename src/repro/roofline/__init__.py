@@ -10,6 +10,7 @@ from repro.roofline.guard_cost import (
     GuardStepCost,
     dense_guard_cost,
     fused_guard_cost,
+    gen_guard_cost,
 )
 
 __all__ = [
@@ -20,4 +21,5 @@ __all__ = [
     "GuardStepCost",
     "dense_guard_cost",
     "fused_guard_cost",
+    "gen_guard_cost",
 ]

@@ -103,6 +103,41 @@ def dp_exact_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
     )
 
 
+# FLOPs to regenerate one gradient element in-kernel: 20 threefry rounds
+# (XOR + rotate + add ≈ 3 flops on 2 lanes) plus key-schedule injections,
+# uniform conversion, and the attack-row selects — ~128 flop/elem is the
+# model constant the measured-vs-modeled band in bench_filtering is checked
+# against.  Deliberately coarse: generation is *compute* traffic that
+# replaces the g-strip's HBM reads, and the roofline question is only
+# whether it fits under the bandwidth roof (it does: the fused-gen sweep's
+# arithmetic intensity rises ~(128+2m)/(2e) flops/byte vs the materialized
+# sweep's m/e — still under typical ridge points at small m, so the bytes
+# term below keeps predicting wall-clock).
+GEN_FLOPS_PER_ELEM = 128
+
+
+def gen_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
+    """Fused pipeline with in-kernel generation (DESIGN.md §14): the g strip
+    is regenerated from the counter-based PRNG inside both the statistics
+    sweep and the ξ pass, so *no* pass reads or writes gradients — the only
+    O(m·d) HBM traffic left is the B-strip read + write in the sweep:
+
+        fused-gen sweep   read B, write B              2·m·d·e
+        ─────────────────────────── statistics total   2·m·d·e  (3.0× less)
+        ξ (regenerates its own rows; O(d) out)         ~0
+        ─────────────────────────── step total         2·m·d·e  (3.5× less)
+
+    The generation itself costs FLOPs, not bytes — counted once per pass
+    (sweep + ξ) at :data:`GEN_FLOPS_PER_ELEM` each."""
+    mde = m * d * elem_bytes
+    return GuardStepCost(
+        stats_bytes=2 * mde,
+        xi_bytes=0,
+        flops=2 * m * m * d * 2 + 2 * m * d
+        + 2 * GEN_FLOPS_PER_ELEM * m * d,  # regenerate rows in sweep + ξ
+    )
+
+
 def dp_sketch_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
     """CountSketch guard: the only O(m·d) passes are the A dot, the two-pass
     mean-centering, and the fused sketch/norm fold; every Gram contraction
@@ -115,10 +150,14 @@ def dp_sketch_guard_cost(m: int, d: int, elem_bytes: int = 4) -> GuardStepCost:
     )
 
 
-# guard-backend name (repro.core.guard_backends) → per-step cost model
+# guard-backend name (repro.core.guard_backends) → per-step cost model.
+# "gen" is the campaign's pseudo-backend spelling for fused + generate
+# = 'kernel' (repro.scenarios.campaign.expand_variants) — a cost point on
+# this axis even though it is not a guard_backends registry entry.
 BACKEND_COSTS = {
     "dense": dense_guard_cost,
     "fused": fused_guard_cost,
+    "gen": gen_guard_cost,
     "dp_exact": dp_exact_guard_cost,
     "dp_sketch": dp_sketch_guard_cost,
 }

@@ -79,6 +79,14 @@ def _wrap(name: str):
 
 _BRANCHES = tuple(_wrap(name) for name in ATTACK_TABLE)
 
+# default magnitude knob per table id ("none" has no knob — 1.0 pads the
+# table); the generated path multiplies these by the per-step scale exactly
+# as _wrap does, so kernel-side attack rows reproduce the dispatch
+# bit-for-bit (repro.kernels.gradgen, DESIGN.md §14)
+_KNOB_DEFAULTS = tuple(
+    1.0 if knob is None else knob[1] for knob in _SCALE_KNOBS.values()
+)
+
 
 def _dispatch(aid, key, grads, mask, ctx, scale):
     # every branch returns in the *input* gradient dtype: attacks compute
@@ -189,6 +197,65 @@ class ScenarioAdversary(NamedTuple):
         # (tests pin the equivalence); honest rows are identical in ga/gb.
         return jnp.where((mask_k & use_b)[:, None], gb, ga)
 
+    def gen_attack_ctx(self, mask_k, ctx, state: AdvState, noise_scale):
+        """O(m) attack parameterization for the in-kernel generated path
+        (DESIGN.md §14) — the per-worker data :meth:`attack` would need if
+        it could not materialize the (m, d) batch.
+
+        Returns ``(slot, params, w_byz)``: per-worker slot (0 honest / 1
+        phase-a / 2 phase-b — the same ``mask_k & use_b`` row select the
+        dispatch applies), the :data:`repro.kernels.gradgen` parameter
+        vector (each phase's effective attack id + precomputed magnitude
+        knobs, matching ``_wrap``'s ``default·scale`` convention
+        expression-for-expression), and the f32 Byzantine mask for the
+        feedback row-sum.  ``retreat_on_filter`` (id 7) is remapped here —
+        its coalition-intact condition is a scalar, so it collapses to
+        inner_product or none before the kernel ever sees it.
+        ``random_gaussian`` (id 2) consumes a PRNG key per row and is not
+        generatable; the solver's gate rejects it when the scenario is
+        concrete, and a traced id 2 falls through to the honest row.
+        """
+        s = self.scenario
+        m = mask_k.shape[0]
+        scale = s.attack_scale * jnp.where(
+            s.adapt_rate > 0, state.adapt_scale, 1.0
+        )
+        n_byz_k = jnp.sum(mask_k)
+        crank = jnp.cumsum(mask_k) - 1
+        use_b = (ctx["step"] >= s.switch_step) | (
+            crank >= jnp.ceil(s.coalition_frac * n_byz_k)
+        )
+        slot = jnp.where(mask_k, jnp.where(use_b, 2, 1), 0).astype(jnp.int32)
+
+        tg = ctx["true_grad"]
+        tg_nrm = jnp.maximum(jnp.linalg.norm(tg), 1e-12)
+        zz = attack_lib.alie_z_max(m, n_byz_k)
+        V = ctx["V"]
+        # per-coordinate value of the zoo's ones(d)/√d direction — the same
+        # 1/√d division constant_drift / hidden_shift compute elementwise
+        inv_sqrt_d = 1.0 / jnp.sqrt(tg.shape[0])
+        # retreat_on_filter's scalar condition, hoisted out of the kernel
+        intact = jnp.sum(ctx["alive"] & mask_k) >= jnp.maximum(n_byz_k, 1)
+        knob_table = jnp.asarray(_KNOB_DEFAULTS, jnp.float32)
+
+        def pgroup(aid):
+            knob = knob_table[aid] * scale
+            aid_eff = jnp.where(
+                aid == 7, jnp.where(intact, 5, 0), aid
+            ).astype(jnp.float32)
+            return (aid_eff,
+                    -knob,                      # sign_flip factor
+                    knob * zz,                  # alie deviation z·z_max
+                    knob * V * inv_sqrt_d,      # drift / hidden constant
+                    (1.0 + knob) * V)           # inner_product pull
+
+        pa = pgroup(s.attack_a)
+        pb = pgroup(s.attack_b)
+        params = jnp.stack(
+            [*pa, *pb, tg_nrm, jnp.asarray(noise_scale, jnp.float32)]
+        ).astype(jnp.float32)
+        return slot, params, mask_k.astype(jnp.float32)
+
     # -- feedback ----------------------------------------------------------
     def update_state(
         self, state: AdvState, mask_k, grads_out, xi, alive, n_alive, ctx
@@ -205,11 +272,23 @@ class ScenarioAdversary(NamedTuple):
         the aggregator accepts.  No-op when adapt_rate == 0 or no worker is
         currently Byzantine (e.g. before a late join).
         """
-        s = self.scenario
-        m = mask_k.shape[0]
         n_byz_k = jnp.sum(mask_k)
         w = mask_k.astype(jnp.float32)[:, None]
         byz_row = jnp.sum(grads_out * w, axis=0) / jnp.maximum(n_byz_k, 1)
+        return self.update_state_from_byz_row(
+            state, mask_k, byz_row, xi, alive, n_alive, ctx
+        )
+
+    def update_state_from_byz_row(
+        self, state: AdvState, mask_k, byz_row, xi, alive, n_alive, ctx
+    ) -> AdvState:
+        """:meth:`update_state` from a precomputed coalition mean row —
+        the entry point of the generated path (DESIGN.md §14), where the
+        guard's ξ pass returns ``Σ mask·∇ᵢ`` directly and the (m, d) batch
+        never exists to reduce over.  Identical trace from the row on."""
+        s = self.scenario
+        m = mask_k.shape[0]
+        n_byz_k = jnp.sum(mask_k)
 
         dev = byz_row - ctx["true_grad"]
         resid = xi - (n_alive.astype(jnp.float32) / m) * ctx["true_grad"]

@@ -27,7 +27,19 @@ A backend entry may carry a statistics-precision suffix —
 ``SolverConfig.stats_dtype='bf16'`` (DESIGN.md §5 Numerics), keyed
 ``"byzantine_sgd@fused@bf16"`` — so one campaign records the accuracy
 cost of the halved guard traffic next to the f32 rows instead of
-assuming it.
+assuming it.  The pseudo-backend ``"gen"`` (``"gen@bf16"``) selects the
+fused realization with in-kernel gradient generation
+(``SolverConfig.generate='kernel'``, DESIGN.md §14): worker strips are
+regenerated from the counter-based PRNG inside the guard sweep, so the
+(N, m, d) gradient batch never materializes.
+
+**Run-axis chunking** (DESIGN.md §14).  ``chunk_size=c`` maps the grid
+through ``lax.map`` over ⌈N/c⌉ chunks of a c-wide ``vmap`` instead of one
+N-wide ``vmap`` — still a single trace and a single compile, but peak
+device memory scales with c, not N, which is what lets ``bench_scenarios``
+grow to tens of thousands of rows.  Chunking is bit-transparent: any
+``chunk_size`` (including 1 and N) produces bit-identical
+:class:`RunStats`, telemetry rings included — pinned by test.
 """
 from __future__ import annotations
 
@@ -69,6 +81,10 @@ class CampaignResult(NamedTuple):
     wall_s: float                # steady-state wall-clock of the one-jit call
     compile_s: float             # first-call (trace + compile) overhead
     n_runs: int                  # grid rows per aggregator
+    memory: dict | None = None   # compiled-program memory analysis (arg /
+    #                              output / temp bytes) when the backend
+    #                              exposes it; the temp term is what run-axis
+    #                              chunking bounds (DESIGN.md §14)
 
 
 def _summarize(problem: Problem, cfg: SolverConfig, res, return_gaps: bool):
@@ -118,12 +134,18 @@ def expand_variants(
     per entry of ``backends`` (when given); ``"agg@backend"`` spellings pass
     through verbatim; stateless aggregators ignore the backend axis.  A
     backend may carry a ``@<stats_dtype>`` suffix (``"fused@bf16"``), which
-    sets ``SolverConfig.stats_dtype`` for that variant.
+    sets ``SolverConfig.stats_dtype`` for that variant.  The pseudo-backend
+    ``"gen"`` is spelled like a backend on the campaign axis but resolves to
+    the fused realization with ``generate='kernel'`` — on-device strip
+    generation is a property of how the fused guard sources its rows, not a
+    separate step contract, so it is not a registry entry (DESIGN.md §14).
     """
     def _guard_cfg(spec: str) -> SolverConfig:
         be, sdt = parse_backend_spec(spec)
+        generate = "kernel" if be == "gen" else base_cfg.generate
+        be = "fused" if be == "gen" else be
         return base_cfg._replace(
-            aggregator=GUARD_AGGREGATOR, guard_backend=be,
+            aggregator=GUARD_AGGREGATOR, guard_backend=be, generate=generate,
             stats_dtype=sdt if sdt is not None else base_cfg.stats_dtype,
         )
 
@@ -144,6 +166,38 @@ def expand_variants(
     return cfgs
 
 
+def _chunked_vmap(one, axes, n: int, chunk_size: int | None):
+    """``vmap(one)`` over the leading grid axis, optionally through
+    ``lax.map`` over ⌈n/chunk_size⌉ chunks so only one chunk of runs is
+    live on device at a time.
+
+    The grid is padded up to a whole number of chunks by *repeating the
+    last run* (never zeros — a zero Scenario is a real, different run and
+    padding must not invent work the trace could diverge on), and the
+    padded rows are sliced off the result.  Per-run math is untouched —
+    each run sees exactly the leaves it would under a flat vmap — which is
+    why any chunk size is bit-identical to the unchunked campaign.
+    """
+    if chunk_size is None or chunk_size >= n:
+        return jax.vmap(lambda t: one(*t))(axes)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    pad = (-n) % chunk_size
+    n_chunks = (n + pad) // chunk_size
+
+    def prep(x):
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])])
+        return x.reshape((n_chunks, chunk_size) + x.shape[1:])
+
+    chunked = jax.lax.map(lambda t: jax.vmap(lambda u: one(*u))(t),
+                          jax.tree.map(prep, axes))
+    return jax.tree.map(
+        lambda x: x.reshape((n_chunks * chunk_size,) + x.shape[2:])[:n],
+        chunked)
+
+
 def build_campaign_fn(
     problem: Problem,
     base_cfg: SolverConfig,
@@ -151,6 +205,7 @@ def build_campaign_fn(
     return_gaps: bool = False,
     backends: Sequence[str] | None = None,
     telemetry=None,
+    chunk_size: int | None = None,
 ):
     """The jittable ``campaign(grid) -> {variant: RunStats}`` function.
 
@@ -162,7 +217,10 @@ def build_campaign_fn(
     ``telemetry`` (a :class:`repro.obs.TelemetryConfig`) arms the flight
     recorder in every run — the per-cell rings vmap like any other carry,
     so one armed campaign yields an (N, ring_size, …) forensics block per
-    variant at the cost of the extra device memory.
+    variant at the cost of the extra device memory.  ``chunk_size`` bounds
+    peak memory by running the grid as ``lax.map`` over chunks of a
+    ``chunk_size``-wide vmap (DESIGN.md §14) — still one trace, and
+    bit-identical to the unchunked campaign for any chunk size.
     """
     cfgs = expand_variants(base_cfg, aggregators, backends)
 
@@ -171,6 +229,8 @@ def build_campaign_fn(
         # object crosses the jit boundary; row metadata rides the treedef.
         # grid.profiles is either None (homogeneous fleet, zero extra
         # leaves) or a stacked WorkerProfile vmapped like every other axis.
+        axes = (grid.scenarios, grid.alpha, grid.seeds, grid.profiles)
+        n = grid.alpha.shape[0]
         out = {}
         for name, cfg in cfgs.items():  # static unroll — one trace total
 
@@ -180,11 +240,32 @@ def build_campaign_fn(
                               adversary=adv, telemetry=telemetry)
                 return _summarize(problem, cfg, res, return_gaps)
 
-            out[name] = jax.vmap(one)(grid.scenarios, grid.alpha, grid.seeds,
-                                      grid.profiles)
+            out[name] = _chunked_vmap(one, axes, n, chunk_size)
         return out
 
     return campaign
+
+
+def compiled_memory(compiled) -> dict | None:
+    """Byte-level memory analysis of a compiled campaign — argument/output
+    footprint plus the XLA temp allocation, which is the term run-axis
+    chunking bounds.  ``None`` when the backend does not expose the
+    analysis (the field stays a no-op on such platforms)."""
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_size_in_bytes": int(ma.argument_size_in_bytes),
+            "output_size_in_bytes": int(ma.output_size_in_bytes),
+            "temp_size_in_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_size_in_bytes": int(
+                ma.generated_code_size_in_bytes),
+        }
+    except Exception:
+        return None
+    mem["peak_bytes"] = (mem["argument_size_in_bytes"]
+                         + mem["output_size_in_bytes"]
+                         + mem["temp_size_in_bytes"])
+    return mem
 
 
 def run_campaign(
@@ -195,16 +276,20 @@ def run_campaign(
     return_gaps: bool = False,
     backends: Sequence[str] | None = None,
     telemetry=None,
+    chunk_size: int | None = None,
 ) -> CampaignResult:
     """Execute the full grid for every (aggregator × backend) variant under
     one jit.
 
     Trace + compile are paid once for the whole campaign and measured
     separately via AOT lowering (``compile_s``); ``wall_s`` is the pure
-    execution of all ``n_variants × grid.n_runs`` runs.
+    execution of all ``n_variants × grid.n_runs`` runs.  ``chunk_size``
+    caps how many runs are in flight at once (:func:`_chunked_vmap`);
+    the resulting peak-memory profile is recorded in ``memory``.
     """
     fn = jax.jit(build_campaign_fn(problem, base_cfg, aggregators,
-                                   return_gaps, backends, telemetry))
+                                   return_gaps, backends, telemetry,
+                                   chunk_size))
     t0 = time.perf_counter()
     compiled = fn.lower(grid).compile()
     t1 = time.perf_counter()
@@ -216,6 +301,7 @@ def run_campaign(
         wall_s=t2 - t1,
         compile_s=t1 - t0,
         n_runs=grid.n_runs,
+        memory=compiled_memory(compiled),
     )
 
 

@@ -315,6 +315,34 @@ def _grid_unflatten(rows, children):
 jax.tree_util.register_pytree_node(CampaignGrid, _grid_flatten, _grid_unflatten)
 
 
+def _stack_axis(axis: str, trees):
+    """Stack one grid axis' per-run pytrees along a new leading dim,
+    failing loudly — naming the axis and the offending run — when the
+    members disagree in structure or leaf shape (``jnp.stack``'s own error
+    names neither, which made a mis-sized profile in a mega-grid a
+    needle-in-a-haystack)."""
+    treedef0 = jax.tree.structure(trees[0])
+    paths0 = jax.tree_util.tree_leaves_with_path(trees[0])
+    for i, tree in enumerate(trees[1:], start=1):
+        treedef = jax.tree.structure(tree)
+        if treedef != treedef0:
+            raise ValueError(
+                f"expand_grid: axis {axis!r} member {i} has pytree "
+                f"structure {treedef}, but member 0 has {treedef0} — every "
+                f"member of a grid axis must share one structure")
+        for (path, leaf0), (_, leaf) in zip(
+                paths0, jax.tree_util.tree_leaves_with_path(tree)):
+            if jnp.shape(leaf) != jnp.shape(leaf0):
+                raise ValueError(
+                    f"expand_grid: axis {axis!r} stacks disagree in "
+                    f"leading shape: member {i} leaf "
+                    f"{jax.tree_util.keystr(path)!r} has shape "
+                    f"{jnp.shape(leaf)}, but member 0 has "
+                    f"{jnp.shape(leaf0)} (e.g. WorkerProfiles built for "
+                    f"different m)")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
 def expand_grid(
     named_scenarios: Sequence[tuple[str, Scenario]],
     alphas: Sequence[float],
@@ -339,10 +367,10 @@ def expand_grid(
                         profile=pname, **profile_knobs(prof)))
     if not rows:
         raise ValueError("empty grid")
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[r[0] for r in rows])
+    stacked = _stack_axis("scenarios", [r[0] for r in rows])
     alpha = jnp.asarray([r[1] for r in rows], jnp.float32)
     seed = jnp.asarray([r[2] for r in rows], jnp.int32)
     stacked_prof = None
     if profiles is not None:
-        stacked_prof = jax.tree.map(lambda *xs: jnp.stack(xs), *profs)
+        stacked_prof = _stack_axis("profiles", profs)
     return CampaignGrid(stacked, alpha, seed, entries, stacked_prof)

@@ -1,0 +1,466 @@
+"""On-device gradient generation (DESIGN.md §14).
+
+Four layers of pinning, innermost out:
+
+1. the counter-based PRNG: our pure-``jnp`` threefry-2x32 against the
+   Random123 known-answer vectors AND jax's own ``threefry_2x32`` — the
+   key-chain contract that makes in-kernel strips reproduce the host
+   sampler;
+2. the differential oracle: the generating Pallas kernels against the
+   materialize-then-sweep host references in interpret mode — the
+   regenerated *strips* are bit-exact (same threefry body, same
+   expression chain); the Gram/A/B reductions follow the fused-guard
+   suite's tolerance convention (block-wise accumulation order differs
+   from the oracle's single reduction by ~1 ulp);
+3. the host sampler: generated honest strips against
+   ``Problem.stoch_grad``'s own expression chain;
+4. end-to-end: ``run_sgd(generate='kernel')`` against the materializing
+   fused path across the scenario zoo — bit-exact for every non-adaptive
+   dynamic; the feedback-adaptive and heterogeneous runs carry a ~1-ulp
+   documented tolerance (the adversary's byz-row feedback and the rank-1
+   skew term fuse differently inside the two traces).
+
+Plus the off-state guarantee: ``generate='off'`` (the default) lowers to
+a trace in which the GenSpec contributes nothing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.solver import SolverConfig, run_sgd
+from repro.data.problems import (
+    heterogenize_generated,
+    make_generated_problem,
+)
+from repro.kernels import gradgen, ops, ref
+from repro.kernels.fused_guard import fused_guard_gen_pallas, gen_xi_pallas
+from repro.scenarios import spec
+from repro.scenarios.adversary import ScenarioAdversary
+
+
+# ---------------------------------------------------------------------------
+# layer 1 — the PRNG itself
+# ---------------------------------------------------------------------------
+
+# Random123 v1.09 known-answer vectors for threefry2x32, 20 rounds:
+# (ctr0, ctr1, key0, key1) -> (out0, out1)
+_KAT = [
+    ((0x00000000, 0x00000000, 0x00000000, 0x00000000),
+     (0x6B200159, 0x99BA4EFE)),
+    ((0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF),
+     (0x1CB996FC, 0xBB002BE7)),
+    ((0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344),
+     (0xC4923A9C, 0x483DF7A0)),
+]
+
+
+@pytest.mark.parametrize("inputs,want", _KAT)
+def test_threefry_random123_kat(inputs, want):
+    c0, c1, k0, k1 = inputs
+    x0, x1 = gradgen.threefry2x32(k0, k1, c0, c1)
+    assert (int(x0), int(x1)) == want
+
+
+def test_threefry_matches_jax_prng():
+    """Same bits as jax's own threefry-2x32 — the host key chain
+    (jax.random.split → key data) feeds our counter stream unchanged."""
+    from jax._src import prng as jax_prng
+
+    key = jnp.asarray([0xDEADBEEF, 0x12345678], jnp.uint32)
+    n = 64
+    counts = jnp.arange(n, dtype=jnp.uint32)
+    want = jax_prng.threefry_2x32(key, counts)
+    x0, x1 = gradgen.threefry2x32(key[0], key[1],
+                                  counts[: n // 2], counts[n // 2:])
+    got = jnp.concatenate([x0, x1])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_centered_uniform_open_interval():
+    bits = jnp.asarray([0, 1, 0x7FFFFFFF, 0x80000000, 0xFFFFFFFF],
+                       jnp.uint32)
+    u = np.asarray(gradgen.centered_uniform(bits))
+    assert np.all(u > -1.0) and np.all(u < 1.0)
+    # symmetric lattice: bitwise-complement bits mirror around 0
+    comp = np.asarray(gradgen.centered_uniform(~bits))
+    np.testing.assert_allclose(u, -comp, atol=2 ** -22)
+
+
+# ---------------------------------------------------------------------------
+# shared builders
+# ---------------------------------------------------------------------------
+
+def _rel_close(got, want, tol=1e-5):
+    """Same convention as tests/test_fused_guard.py: ‖got − want‖ ≤
+    tol·‖want‖ (+tol absolute for near-zero targets)."""
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    err = np.linalg.norm(got - want)
+    assert err <= tol * np.linalg.norm(want) + tol, (err, np.linalg.norm(want))
+
+def _gen_inputs(m, d, *, skew=False, seed=0):
+    """A concrete (problem-derived) input set for the generating kernels,
+    with an ALIE coalition on the first quarter of the fleet."""
+    from repro.core.attacks import alie_z_max
+
+    prob = make_generated_problem(d=d, sigma=1.0, L=8.0, V=1.0, seed=seed)
+    if skew:
+        prob = heterogenize_generated(prob, m=m, skew_max=0.4, seed=seed + 1)
+    g = prob.gen
+    keys = gradgen.key_bits(jax.random.split(jax.random.PRNGKey(seed + 7), m))
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 9), (d,),
+                                jnp.float32)
+    mask = jnp.arange(m) < max(m // 4, 1)
+    slot = jnp.where(mask, 1, 0).astype(jnp.int32)
+    tg = gradgen.mean_grad(g.h, x, g.x_star)
+    params = (
+        jnp.zeros((gradgen.GEN_NPARAMS,), jnp.float32)
+        .at[gradgen.P_ID_A].set(4.0)
+        .at[gradgen.P_Z_A].set(alie_z_max(m, jnp.sum(mask)))
+        .at[gradgen.P_TGNRM].set(jnp.maximum(jnp.linalg.norm(tg), 1e-12))
+        .at[gradgen.P_NSCALE].set(g.noise_scale)
+    )
+    skewsign = (0.3 * g.het_sign if skew
+                else jnp.zeros((m,), jnp.float32))
+    return prob, x, keys, skewsign, slot, params, mask
+
+
+# ---------------------------------------------------------------------------
+# layer 2 — generating kernels vs the jitted host oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d", [(8, 64), (16, 555), (16, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gen_sweep_kernel_matches_jitted_oracle(m, d, dtype):
+    prob, x, keys, skewsign, slot, params, _ = _gen_inputs(m, d)
+    g = prob.gen
+    key = jax.random.PRNGKey(m * 1000 + d)
+    B = (3.0 * jax.random.normal(key, (m, d), jnp.float32)).astype(dtype)
+    delta = jax.random.normal(jax.random.PRNGKey(1), (d,),
+                              jnp.float32).astype(dtype)
+    got = fused_guard_gen_pallas(
+        B, delta, x, g.h, g.x_star, g.het_dir, keys, skewsign, slot,
+        params, d_block=256, interpret=True)
+    want = jax.jit(ref.fused_guard_gen_ref)(
+        B, delta, x, g.h, g.x_star, g.het_dir, keys, skewsign, slot, params)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(got, want):
+        _rel_close(a, b, tol)
+    # the regenerated strip itself (B_new − B) is exact: same threefry
+    # body, same expression chain, elementwise update
+    np.testing.assert_array_equal(np.asarray(got[-1]), np.asarray(want[-1]))
+
+
+@pytest.mark.parametrize("m,d", [(8, 64), (16, 555)])
+@pytest.mark.parametrize("stats_dtype", ["float32", "bfloat16"])
+def test_gen_xi_kernel_matches_jitted_oracle(m, d, stats_dtype):
+    prob, x, keys, skewsign, slot, params, mask = _gen_inputs(m, d)
+    g = prob.gen
+    w_xi = jnp.where(mask, 0.0, 1.0 / m).astype(jnp.float32)
+    w_byz = mask.astype(jnp.float32)
+    got = gen_xi_pallas(
+        w_xi, w_byz, x, g.h, g.x_star, g.het_dir, keys, skewsign, slot,
+        params, d_block=256, interpret=True, stats_dtype=stats_dtype)
+    want = jax.jit(ref.gen_xi_ref, static_argnames="stats_dtype")(
+        w_xi, w_byz, x, g.h, g.x_star, g.het_dir, keys, skewsign, slot,
+        params, stats_dtype=stats_dtype)
+    tol = 1e-2 if stats_dtype == "bfloat16" else 1e-5
+    for a, b in zip(got, want):
+        _rel_close(a, b, tol)
+
+
+def test_gen_sweep_kernel_skewed_strip():
+    """Rank-1 heterogeneity folds in bit-exactly (± signs are exact)."""
+    m, d = 16, 512
+    prob, x, keys, skewsign, slot, params, _ = _gen_inputs(m, d, skew=True)
+    g = prob.gen
+    B = jnp.zeros((m, d), jnp.float32)
+    delta = jnp.zeros((d,), jnp.float32)
+    got = fused_guard_gen_pallas(
+        B, delta, x, g.h, g.x_star, g.het_dir, keys, skewsign, slot,
+        params, d_block=128, interpret=True)
+    want = jax.jit(ref.fused_guard_gen_ref)(
+        B, delta, x, g.h, g.x_star, g.het_dir, keys, skewsign, slot, params)
+    # zero B, zero delta: B_new IS the generated skewed strip — exact
+    np.testing.assert_array_equal(np.asarray(got[-1]), np.asarray(want[-1]))
+    for a, b in zip(got, want):
+        _rel_close(a, b, 1e-5)
+
+
+def test_ops_dispatch_and_oracle_registry():
+    assert "fused_guard_gen" in ops.ORACLES
+    assert "gen_xi" in ops.ORACLES
+
+
+# ---------------------------------------------------------------------------
+# layer 3 — generated honest rows ARE the host sampler
+# ---------------------------------------------------------------------------
+
+def test_honest_rows_match_host_stoch_grad():
+    m, d = 16, 777
+    prob = make_generated_problem(d=d, sigma=1.0, L=8.0, V=1.0, seed=3)
+    g = prob.gen
+    wkeys = jax.random.split(jax.random.PRNGKey(11), m)
+    x = 0.2 * jax.random.normal(jax.random.PRNGKey(13), (d,), jnp.float32)
+
+    host = jax.jit(lambda x: jax.vmap(
+        lambda k: prob.stoch_grad(k, x))(wkeys))(x)
+    gen = jax.jit(ref.gen_rows_ref)(
+        x, g.h, g.x_star, g.het_dir, gradgen.key_bits(wkeys),
+        jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.int32),
+        jnp.zeros((gradgen.GEN_NPARAMS,), jnp.float32)
+        .at[gradgen.P_TGNRM].set(1.0)
+        .at[gradgen.P_NSCALE].set(g.noise_scale))
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(gen))
+
+
+def test_het_rows_match_host_het_grad():
+    m, d = 16, 333
+    prob = heterogenize_generated(
+        make_generated_problem(d=d, sigma=1.0, L=8.0, V=1.0, seed=5),
+        m=m, skew_max=0.5, seed=6)
+    g = prob.gen
+    profile = spec.profile_linear_skew(m, 0.5)
+    wkeys = jax.random.split(jax.random.PRNGKey(17), m)
+    x = 0.2 * jax.random.normal(jax.random.PRNGKey(19), (d,), jnp.float32)
+
+    host = jax.jit(lambda x: jax.vmap(
+        lambda k, s, w: prob.het_grad(k, x, s, w))(
+            wkeys, profile.skew, jnp.arange(m)))(x)
+    gen = jax.jit(ref.gen_rows_ref)(
+        x, g.h, g.x_star, g.het_dir, gradgen.key_bits(wkeys),
+        profile.skew * g.het_sign, jnp.zeros((m,), jnp.int32),
+        jnp.zeros((gradgen.GEN_NPARAMS,), jnp.float32)
+        .at[gradgen.P_TGNRM].set(1.0)
+        .at[gradgen.P_NSCALE].set(g.noise_scale))
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(gen))
+
+
+# ---------------------------------------------------------------------------
+# layer 4 — end-to-end: generate='kernel' vs the materializing fused path
+# ---------------------------------------------------------------------------
+
+# (name, scenario, exact): ``exact`` marks dynamics whose two traces are
+# bit-identical.  ALIE-family attacks consume honest mean/std statistics
+# that the gen path reduces in-kernel per strip while the materializing
+# path reduces host-side over full rows — a different (but equally valid)
+# reduction order, so those runs agree to ~1 ulp rather than bit-for-bit.
+_E2E_SCENARIOS = [
+    ("static_sign_flip", spec.scenario_static("sign_flip"), True),
+    ("static_alie", spec.scenario_static("alie"), False),
+    ("static_alie_update", spec.scenario_static("alie_update"), False),
+    ("static_constant_drift", spec.scenario_static("constant_drift"), True),
+    ("static_hidden_shift", spec.scenario_static("hidden_shift"), True),
+    ("static_inner_product", spec.scenario_static("inner_product"), True),
+    ("retreat_on_filter", spec.scenario_static("retreat_on_filter"), True),
+    ("coalition", spec.scenario_coalition("sign_flip", "alie", 0.5), False),
+    ("churn", spec.scenario_churn("sign_flip", period=20, stride=2), True),
+    ("late_join", spec.scenario_late_join("alie", 15), False),
+    ("lie_low", spec.scenario_lie_low_then_strike("inner_product", 20), True),
+]
+
+
+def _run_pair(problem, scn, *, profile=None, T=40, alpha=0.25, seed=3):
+    adv = ScenarioAdversary(scn, jnp.asarray(alpha, jnp.float32), profile)
+    out = {}
+    for gen in ("off", "kernel"):
+        cfg = SolverConfig(m=16, alpha=alpha, T=T, eta=0.05,
+                           aggregator="byzantine_sgd",
+                           guard_backend="fused", generate=gen)
+        out[gen] = run_sgd(problem, cfg, jax.random.PRNGKey(seed),
+                           adversary=adv)
+    return out["off"], out["kernel"]
+
+
+@pytest.fixture(scope="module")
+def genprob():
+    return make_generated_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0)
+
+
+@pytest.mark.parametrize("name,scn,exact", _E2E_SCENARIOS,
+                         ids=[n for n, _, _ in _E2E_SCENARIOS])
+def test_e2e_gen_matches_materializing(genprob, name, scn, exact):
+    a, b = _run_pair(genprob, scn)
+    # filter decisions are identical in every scenario, exact or not
+    np.testing.assert_array_equal(np.asarray(a.n_alive),
+                                  np.asarray(b.n_alive))
+    np.testing.assert_array_equal(np.asarray(a.byz_mask),
+                                  np.asarray(b.byz_mask))
+    if exact:
+        np.testing.assert_array_equal(np.asarray(a.gaps),
+                                      np.asarray(b.gaps))
+        np.testing.assert_array_equal(np.asarray(a.x_final),
+                                      np.asarray(b.x_final))
+    else:
+        np.testing.assert_allclose(np.asarray(a.gaps), np.asarray(b.gaps),
+                                   rtol=0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a.x_final),
+                                   np.asarray(b.x_final),
+                                   rtol=0, atol=1e-6)
+
+
+def test_e2e_adaptive_documented_tolerance(genprob):
+    """Feedback-adaptive magnitude: the adversary's byz-row feedback is
+    computed in-kernel on the gen path and fuses differently from the
+    host reduction — filter decisions stay identical; iterates agree to
+    ~1 ulp."""
+    a, b = _run_pair(genprob, spec.scenario_adaptive("inner_product", 0.5),
+                     T=60)
+    np.testing.assert_array_equal(np.asarray(a.n_alive),
+                                  np.asarray(b.n_alive))
+    np.testing.assert_array_equal(np.asarray(a.byz_mask),
+                                  np.asarray(b.byz_mask))
+    np.testing.assert_allclose(np.asarray(a.gaps), np.asarray(b.gaps),
+                               rtol=0, atol=1e-6)
+
+
+def test_e2e_heterogeneous_documented_tolerance():
+    prob = heterogenize_generated(
+        make_generated_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=0),
+        m=16, skew_max=0.5, seed=1)
+    profile = spec.profile_linear_skew(16, 0.5)
+    a, b = _run_pair(prob, spec.scenario_static("alie"), profile=profile,
+                     T=60)
+    np.testing.assert_array_equal(np.asarray(a.n_alive),
+                                  np.asarray(b.n_alive))
+    np.testing.assert_allclose(np.asarray(a.gaps), np.asarray(b.gaps),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.x_final),
+                               np.asarray(b.x_final), rtol=0, atol=1e-6)
+
+
+def test_e2e_telemetry_armed_matches(genprob):
+    """The gen path's guard frames ride the same flight-recorder schema;
+    arming telemetry must not change decisions on either path."""
+    from repro.obs import TelemetryConfig
+
+    scn = spec.scenario_static("alie")
+    adv = ScenarioAdversary(scn, jnp.asarray(0.25, jnp.float32), None)
+    tel = TelemetryConfig(ring_size=16)
+    cfg = SolverConfig(m=16, alpha=0.25, T=40, eta=0.05,
+                       aggregator="byzantine_sgd", guard_backend="fused",
+                       generate="kernel")
+    off = run_sgd(genprob, cfg, jax.random.PRNGKey(3), adversary=adv)
+    on = run_sgd(genprob, cfg, jax.random.PRNGKey(3), adversary=adv,
+                 telemetry=tel)
+    assert on.telemetry is not None
+    np.testing.assert_array_equal(np.asarray(off.n_alive),
+                                  np.asarray(on.n_alive))
+    np.testing.assert_array_equal(np.asarray(off.x_final),
+                                  np.asarray(on.x_final))
+
+
+# ---------------------------------------------------------------------------
+# off-state: the GenSpec contributes nothing to the default trace
+# ---------------------------------------------------------------------------
+
+def test_off_state_trace_ignores_gen_spec(genprob):
+    scn = spec.scenario_static("alie")
+    adv = ScenarioAdversary(scn, jnp.asarray(0.25, jnp.float32), None)
+    cfg = SolverConfig(m=16, alpha=0.25, T=10, eta=0.05,
+                       aggregator="byzantine_sgd", guard_backend="fused")
+    j_with = jax.make_jaxpr(
+        lambda k: run_sgd(genprob, cfg, k, adversary=adv))(
+            jax.random.PRNGKey(0))
+    j_without = jax.make_jaxpr(
+        lambda k: run_sgd(genprob._replace(gen=None), cfg, k,
+                          adversary=adv))(jax.random.PRNGKey(0))
+    assert str(j_with) == str(j_without)
+
+
+def test_off_state_default_is_off():
+    assert SolverConfig(m=8, T=10, eta=0.1).generate == "off"
+
+
+# ---------------------------------------------------------------------------
+# validation — every unsupported composition fails loudly
+# ---------------------------------------------------------------------------
+
+def _gen_cfg(**kw):
+    base = dict(m=16, alpha=0.25, T=10, eta=0.05,
+                aggregator="byzantine_sgd", guard_backend="fused",
+                generate="kernel")
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+def _adv(attack="alie"):
+    return ScenarioAdversary(spec.scenario_static(attack),
+                             jnp.asarray(0.25, jnp.float32), None)
+
+
+class TestValidation:
+    def test_bad_generate_value(self, genprob):
+        with pytest.raises(ValueError, match="generate must be"):
+            run_sgd(genprob, _gen_cfg(generate="device"),
+                    jax.random.PRNGKey(0), adversary=_adv())
+
+    def test_needs_generatable_problem(self, genprob):
+        with pytest.raises(ValueError, match="counter-generatable"):
+            run_sgd(genprob._replace(gen=None), _gen_cfg(),
+                    jax.random.PRNGKey(0), adversary=_adv())
+
+    def test_needs_scenario_adversary(self, genprob):
+        with pytest.raises(ValueError, match="scenario adversary"):
+            run_sgd(genprob, _gen_cfg(), jax.random.PRNGKey(0))
+
+    def test_needs_fused_guard(self, genprob):
+        with pytest.raises(ValueError, match="guard_backend='fused'"):
+            run_sgd(genprob, _gen_cfg(guard_backend="dense"),
+                    jax.random.PRNGKey(0), adversary=_adv())
+
+    def test_rejects_staleness(self, genprob):
+        with pytest.raises(ValueError, match="staleness"):
+            run_sgd(genprob, _gen_cfg(max_delay=2), jax.random.PRNGKey(0),
+                    adversary=_adv())
+
+    def test_rejects_unsupported_attack_id(self, genprob):
+        with pytest.raises(ValueError, match="not in-kernel generatable"):
+            run_sgd(genprob, _gen_cfg(), jax.random.PRNGKey(0),
+                    adversary=_adv("random_gaussian"))
+
+    def test_het_profile_needs_generated_skew(self, genprob):
+        profile = spec.profile_linear_skew(16, 0.3)
+        adv = ScenarioAdversary(spec.scenario_static("alie"),
+                                jnp.asarray(0.25, jnp.float32), profile)
+        bad = genprob._replace(
+            het_grad=lambda key, x, skew, w: genprob.stoch_grad(key, x))
+        with pytest.raises(ValueError, match="heterogenize_generated"):
+            run_sgd(bad, _gen_cfg(), jax.random.PRNGKey(0), adversary=adv)
+
+
+class TestHeterogenizeGenerated:
+    def test_requires_gen_problem(self):
+        from repro.data.problems import make_quadratic_problem
+
+        quad = make_quadratic_problem(d=8, sigma=1.0, L=4.0, V=1.0, seed=0)
+        with pytest.raises(ValueError):
+            heterogenize_generated(quad, m=8, skew_max=0.5)
+
+    def test_requires_even_m(self):
+        prob = make_generated_problem(d=8)
+        with pytest.raises(ValueError):
+            heterogenize_generated(prob, m=7, skew_max=0.5)
+
+    def test_requires_nonnegative_skew(self):
+        prob = make_generated_problem(d=8)
+        with pytest.raises(ValueError):
+            heterogenize_generated(prob, m=8, skew_max=-0.1)
+
+    def test_zero_sum_bias(self):
+        prob = heterogenize_generated(make_generated_problem(d=8), m=8,
+                                      skew_max=0.5, seed=2)
+        # alternating ±1 signs: the fleet-sum of the bias is exactly zero,
+        # so the global optimum is unchanged
+        assert int(jnp.sum(prob.gen.het_sign)) == 0
+        assert prob.V > 1.0  # inflated by the realized skew
+
+
+def test_generated_problem_grad_consistency():
+    prob = make_generated_problem(d=16, sigma=1.0, L=8.0, V=1.0, seed=4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (16,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(prob.grad(x)),
+                               np.asarray(jax.grad(prob.f)(x)),
+                               rtol=1e-5, atol=1e-6)
+    assert float(prob.gen.noise_scale) == pytest.approx(
+        1.0 / np.sqrt(16.0))
