@@ -1,4 +1,16 @@
-"""repro.checkpoint — npz-based pytree checkpointing."""
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step
+"""repro.checkpoint — crash-safe npz-based pytree checkpointing."""
+from repro.checkpoint.ckpt import (
+    CheckpointCorruptError,
+    clean_stale_tmp,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "CheckpointCorruptError",
+    "clean_stale_tmp",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,9 +1,31 @@
-"""Minimal, dependency-free pytree checkpointing.
+"""Crash-safe, dependency-free pytree checkpointing (DESIGN.md §15).
 
 Leaves are stored in one ``.npz`` per step keyed by the flattened tree path
-(``a/b/0/c``), plus a tiny JSON manifest with the step and key order, so a
-checkpoint restores into an identical pytree structure (the template tree
-provides structure + dtypes; shapes are validated on restore).
+(``a/b/0/c``).  The manifest — step, key order, and a per-leaf SHA-256
+checksum — is embedded *inside* the same ``.npz`` as the ``__manifest__``
+entry, so arrays and manifest commit in a single ``os.replace``: a
+checkpoint either exists completely or not at all.  (The historical v1
+format wrote a sidecar ``ckpt_<step>.json`` *after* the ``os.replace``,
+leaving a crash window in which ``latest_step`` advertised a step
+``restore_checkpoint`` could not load; v1 checkpoints remain readable.)
+
+Fault-domain invariants (the chaos harness in ``scripts/chaos.py`` pins
+them end-to-end):
+
+* **atomic commit** — writes go to a ``.tmp-<pid>`` file and are renamed
+  into place; a crash mid-save leaves only a tmp file, never a partial
+  checkpoint under the canonical name;
+* **completeness** — :func:`latest_step` counts only steps whose unit is
+  complete (embedded manifest present, or the legacy npz+json pair);
+* **integrity + graceful degradation** — :func:`restore_checkpoint`
+  verifies the zip container and every leaf checksum; a truncated or
+  corrupt *latest* checkpoint is quarantined (renamed ``*.corrupt``, with
+  a warning) and restore falls back to the newest valid one instead of
+  raising.  Corruption is fatal only when the caller pinned an explicit
+  ``step``;
+* **hygiene** — stale ``*.tmp*`` files from crashed saves are removed on
+  the next save or restore in that directory (single-writer convention),
+  and ``keep_last`` bounds how many committed checkpoints are retained.
 
 This intentionally targets the single-host CPU harness — a real multi-pod
 deployment would swap in a tensor-store backend behind the same interface,
@@ -11,13 +33,30 @@ which is why the interface is (tree, step, dir) and nothing else.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
+import warnings
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
+
+CKPT_VERSION = 2
+_MANIFEST_KEY = "__manifest__"
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+_TMP_RE = re.compile(r"\.tmp[^/]*$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file failed container or checksum verification.
+
+    Raised to the caller only for an explicitly pinned ``step``; the
+    latest-valid fallback path catches it, quarantines the file, and
+    degrades to the previous checkpoint instead.
+    """
 
 
 def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -31,47 +70,189 @@ def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
     return out
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+def _leaf_sha256(arr: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _npz_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+
+
+def _json_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")
+
+
+def clean_stale_tmp(ckpt_dir: str) -> list[str]:
+    """Remove orphaned ``*.tmp*`` files a crashed save left behind.
+
+    Called on every save and restore (single-writer convention: no other
+    process is mid-save in this directory).  Returns the removed paths.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return []
+    removed = []
+    for f in os.listdir(ckpt_dir):
+        if _TMP_RE.search(f):
+            path = os.path.join(ckpt_dir, f)
+            try:
+                os.remove(path)
+                removed.append(path)
+            except OSError:  # pragma: no cover — racing delete
+                pass
+    return removed
+
+
+def _is_complete(ckpt_dir: str, fname: str, step: int) -> bool:
+    """A step is complete iff its manifest/arrays pair is one unit:
+    v2 = embedded manifest inside an intact zip container; v1 (legacy) =
+    the npz plus its sidecar json both present."""
+    path = os.path.join(ckpt_dir, fname)
+    try:
+        with zipfile.ZipFile(path) as zf:
+            if f"{_MANIFEST_KEY}.npy" in zf.namelist():
+                return True
+    except (zipfile.BadZipFile, OSError):
+        return False
+    return os.path.exists(_json_path(ckpt_dir, step))
+
+
+def _complete_steps(ckpt_dir: str) -> list[int]:
+    """Steps with a complete (restorable-in-principle) checkpoint unit,
+    ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        m = _CKPT_RE.match(f)
+        if m and _is_complete(ckpt_dir, f, int(m.group(1))):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def save_checkpoint(
+    ckpt_dir: str, step: int, tree: Any, keep_last: int | None = None,
+) -> str:
+    """Atomically write ``tree`` as the step-``step`` checkpoint.
+
+    Arrays and the checksummed manifest land in one ``.npz`` committed by a
+    single ``os.replace`` — there is no ordering hazard and no partial
+    state under the canonical name.  ``keep_last`` (optional) prunes all
+    but the newest N committed checkpoints after the write succeeds (the
+    new checkpoint is only counted once it is durable).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
+    clean_stale_tmp(ckpt_dir)
     items = _flatten_with_paths(tree)
     arrays = {f"leaf_{i}": np.asarray(v) for i, (k, v) in enumerate(items)}
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    np.savez(path + ".tmp.npz", **arrays)
-    os.replace(path + ".tmp.npz", path)
-    manifest = {"step": step, "keys": [k for k, _ in items]}
-    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f)
+    manifest = {
+        "version": CKPT_VERSION,
+        "step": int(step),
+        "keys": [k for k, _ in items],
+        "checksums": [_leaf_sha256(arrays[f"leaf_{i}"])
+                      for i in range(len(items))],
+    }
+    arrays[_MANIFEST_KEY] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8
+    )
+    path = _npz_path(ckpt_dir, step)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if keep_last is not None and keep_last > 0:
+        for old in _complete_steps(ckpt_dir)[:-keep_last]:
+            for stale in (_npz_path(ckpt_dir, old), _json_path(ckpt_dir, old)):
+                if os.path.exists(stale):
+                    os.remove(stale)
     return path
 
 
 def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
-        int(m.group(1))
-        for f in os.listdir(ckpt_dir)
-        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
-    ]
-    return max(steps) if steps else None
+    """Newest step with a *complete* checkpoint unit — never a step whose
+    manifest/arrays pair a crash left half-written (such a step would make
+    a ``resume``-style caller raise on a checkpoint this function itself
+    advertised)."""
+    steps = _complete_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
-def restore_checkpoint(ckpt_dir: str, template: Any, step: int | None = None) -> tuple[Any, int]:
-    """Restore into the structure (and dtypes) of ``template``."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+def _read_unit(ckpt_dir: str, step: int) -> tuple[dict, Any]:
+    """Load and integrity-check one checkpoint unit → (manifest, npz data).
 
+    Raises :class:`CheckpointCorruptError` on any container, manifest, or
+    checksum failure — the caller decides whether that is fatal (explicit
+    step) or a fallback trigger (latest-valid walk).
+    """
+    path = _npz_path(ckpt_dir, step)
+    try:
+        data = np.load(path, allow_pickle=False)
+        names = set(data.files)
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointCorruptError(f"{path}: unreadable container: {e}") from e
+    if _MANIFEST_KEY in names:
+        try:
+            manifest = json.loads(bytes(np.asarray(data[_MANIFEST_KEY])))
+        except (ValueError, KeyError) as e:
+            raise CheckpointCorruptError(f"{path}: bad manifest: {e}") from e
+    else:
+        # legacy v1: sidecar manifest, no checksums to verify
+        try:
+            with open(_json_path(ckpt_dir, step)) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"{path}: missing/bad legacy sidecar manifest: {e}") from e
+        manifest.setdefault("version", 1)
+    keys = manifest.get("keys")
+    if not isinstance(keys, list):
+        raise CheckpointCorruptError(f"{path}: manifest has no key list")
+    checksums = manifest.get("checksums")
+    for i, key in enumerate(keys):
+        name = f"leaf_{i}"
+        if name not in names:
+            raise CheckpointCorruptError(f"{path}: missing array {name} ({key})")
+        try:
+            arr = data[name]
+        except (zipfile.BadZipFile, OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"{path}: truncated array {name} ({key}): {e}") from e
+        if checksums is not None and _leaf_sha256(arr) != checksums[i]:
+            raise CheckpointCorruptError(
+                f"{path}: checksum mismatch on {name} ({key}) — silent "
+                "corruption (bit rot or a torn write)")
+    return manifest, data
+
+
+def _quarantine(ckpt_dir: str, step: int, reason: str) -> None:
+    """Move a failed checkpoint unit aside (``*.corrupt``) so the fallback
+    walk and future ``latest_step`` calls never see it again."""
+    warnings.warn(
+        f"checkpoint step {step} failed verification and was quarantined: "
+        f"{reason}", RuntimeWarning, stacklevel=3,
+    )
+    for path in (_npz_path(ckpt_dir, step), _json_path(ckpt_dir, step)):
+        if os.path.exists(path):
+            try:
+                os.replace(path, path + ".corrupt")
+            except OSError:  # pragma: no cover — racing delete
+                pass
+
+
+def _build_tree(manifest: dict, data, template: Any, path: str):
     tmpl_items = _flatten_with_paths(template)
     tmpl_keys = [k for k, _ in tmpl_items]
     if tmpl_keys != manifest["keys"]:
+        ckpt_keys = set(manifest["keys"])
         raise ValueError(
             "checkpoint structure mismatch:\n"
-            f"  missing: {set(manifest['keys']) - set(tmpl_keys)}\n"
-            f"  extra:   {set(tmpl_keys) - set(manifest['keys'])}"
+            f"  missing: {set(tmpl_keys) - ckpt_keys}\n"
+            f"  extra:   {ckpt_keys - set(tmpl_keys)}"
         )
     leaves = []
     for i, (k, t) in enumerate(tmpl_items):
@@ -80,4 +261,40 @@ def restore_checkpoint(ckpt_dir: str, template: Any, step: int | None = None) ->
             raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {np.shape(t)}")
         leaves.append(jax.numpy.asarray(arr, dtype=t.dtype))
     _, treedef = jax.tree_util.tree_flatten(template)
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_checkpoint(
+    ckpt_dir: str, template: Any, step: int | None = None
+) -> tuple[Any, int]:
+    """Restore into the structure (and dtypes) of ``template``.
+
+    With ``step=None`` (the default) the newest checkpoint is verified and
+    loaded; if it fails integrity checks it is quarantined with a warning
+    and restore *degrades gracefully* to the next-newest valid checkpoint —
+    a truncated or bit-rotted latest file costs progress since the previous
+    checkpoint, never the run.  An explicit ``step`` pins one checkpoint:
+    corruption there raises :class:`CheckpointCorruptError`.
+
+    Structure/shape mismatch against ``template`` is always a
+    ``ValueError`` (it is a caller bug, not file damage): ``missing`` lists
+    template keys the checkpoint lacks, ``extra`` lists checkpoint keys the
+    template does not expect.
+    """
+    clean_stale_tmp(ckpt_dir)
+    if step is not None:
+        manifest, data = _read_unit(ckpt_dir, step)
+        return _build_tree(manifest, data, template, _npz_path(ckpt_dir, step)), step
+    candidates = _complete_steps(ckpt_dir)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    for s in reversed(candidates):
+        try:
+            manifest, data = _read_unit(ckpt_dir, s)
+        except CheckpointCorruptError as e:
+            _quarantine(ckpt_dir, s, str(e))
+            continue
+        return _build_tree(manifest, data, template, _npz_path(ckpt_dir, s)), s
+    raise FileNotFoundError(
+        f"no valid checkpoints in {ckpt_dir} (all candidates quarantined)"
+    )

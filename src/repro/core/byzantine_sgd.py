@@ -314,10 +314,18 @@ class ByzantineGuard:
 
     def __init__(self, cfg: GuardConfig, use_fused: bool = False,
                  d_block: int = 2048, gram_resync_every: int = 64,
-                 stats_dtype: str = "f32", gen_spec=None):
+                 stats_dtype: str = "f32", gen_spec=None,
+                 sanitize: bool = False):
         self.cfg = cfg
         self.use_fused = use_fused
         self.d_block = d_block
+        # non-finite hygiene (DESIGN.md §15): when armed, NaN/Inf entries
+        # are zeroed before any statistic (keeping A/B/Gram finite forever)
+        # and rows containing them are removed from good_k — permanently,
+        # via the carried alive mask.  The dense path checks explicitly;
+        # the fused path folds the check into the one HBM sweep (the
+        # kernel zeroes in VMEM and emits per-row non-finite counts).
+        self.sanitize = bool(sanitize)
         # on-device generation (DESIGN.md §14): when a GenSpec rides along,
         # gen_step regenerates the gradient strips inside the sweep instead
         # of step reading a materialized (m, d) batch
@@ -365,13 +373,28 @@ class ByzantineGuard:
         k = state.k + 1
         delta = (x_k - x_1).astype(self.stats_dtype)
 
+        finite = None  # sanitize-off: no finite mask in the trace
+        if self.sanitize and not self.use_fused:
+            # dense sanitize: explicit elementwise zeroing ahead of every
+            # statistic; the fused path does the same inside its sweep
+            fin = jnp.isfinite(grads)
+            finite = jnp.all(fin, axis=1)
+            grads = jnp.where(fin, grads, jnp.zeros((), self.stats_dtype))
+
         if self.use_fused:
             # one HBM sweep: both Grams' raw terms + A-increments + B
             # (strips stream in stats dtype, accumulators f32)
             with jax.named_scope("guard/stats_sweep"):
-                gram_g, cross, a_inc, B = ops.fused_guard(
-                    grads, state.B, delta, d_block=self.d_block
-                )
+                if self.sanitize:
+                    gram_g, cross, a_inc, B, nf = ops.fused_guard(
+                        grads, state.B, delta, d_block=self.d_block,
+                        sanitize=True,
+                    )
+                    finite = nf == 0
+                else:
+                    gram_g, cross, a_inc, B = ops.fused_guard(
+                        grads, state.B, delta, d_block=self.d_block
+                    )
                 A = state.A + a_inc
                 gram_b = state.gram_B + cross + cross.T + gram_g
             if self.gram_resync_every > 0:
@@ -412,10 +435,23 @@ class ByzantineGuard:
             # by construction (that is what makes it the drift oracle)
             gram_drift = jnp.zeros((), jnp.float32)
 
+        # quarantine (DESIGN.md §15): a non-finite row must not be *scored*
+        # (its zeroed statistics are not the worker's report — feeding them
+        # to the medians would be scoring fabricated data), and it must not
+        # survive.  Routing `finite` through the reporting mask gets the
+        # not-scored half for free; the explicit &-kill closes the
+        # pass-through that mask grants non-reporters.
+        report_eff = report
+        if self.sanitize:
+            report_eff = finite if report is None else report & finite
         with jax.named_scope("guard/filter"):
             good_k, diag = filter_update(
-                A, gram_b, gram_g, state.alive, k, cfg, report
+                A, gram_b, gram_g, state.alive, k, cfg, report_eff
             )
+        if self.sanitize:
+            good_k = good_k & finite
+            diag["n_alive"] = jnp.sum(good_k)
+            diag["n_nonfinite"] = jnp.sum(~finite)
         diag["gram_drift"] = gram_drift
 
         # ξ averages the gradients that actually arrived: good ∩ reporting
@@ -429,7 +465,7 @@ class ByzantineGuard:
             if self.use_fused:
                 xi = ops.filtered_mean(
                     grads, contrib.astype(jnp.float32) / denom, 1.0,
-                    d_block=self.d_block,
+                    d_block=self.d_block, sanitize=self.sanitize,
                 )
             else:
                 xi = (contrib.astype(jnp.float32) @ grads.astype(jnp.float32)) / denom

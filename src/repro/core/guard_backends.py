@@ -185,7 +185,8 @@ def _dense_backend(problem, cfg, telemetry=None):
     # dtype (per-step re-derivation = gram_resync_every-style resync
     # taken to its limit)
     guard = ByzantineGuard(_guard_config(problem, cfg),
-                           stats_dtype=cfg.stats_dtype)
+                           stats_dtype=cfg.stats_dtype,
+                           sanitize=cfg.sanitize == "quarantine")
     return _wrap_byzantine_guard(guard, problem.d, telemetry)
 
 
@@ -222,6 +223,7 @@ def _fused_backend(problem, cfg, telemetry=None, d_block: int | None = None,
         gram_resync_every=gram_resync_every,
         stats_dtype=cfg.stats_dtype,
         gen_spec=problem.gen if gen_on else None,
+        sanitize=cfg.sanitize == "quarantine",
     )
     if gen_on:
         # generate="kernel" is NOT a separate registry entry: registered
@@ -270,9 +272,26 @@ def _dp_backend(problem, cfg, mode: str, *, telemetry=None,
     # worker pytree — worker_vdot/worker_pair_gram consume them unchanged
     state0 = init_guard_state(dcfg, jnp.zeros((problem.d,), jnp.float32))
     probe = telemetry_on(telemetry)
+    san = cfg.sanitize == "quarantine"
 
     def step(state, grads, x, x1, report=None):
+        if san:
+            # host-side sanitize stage (DESIGN.md §15) — the dp guard's
+            # einsum/sketch contractions are shared with the pytree mesh
+            # path, so the quarantine wraps the step instead of forking
+            # them: zero non-finite entries out of every streamed
+            # statistic, score poisoned rows as non-reporting (the
+            # pass-through keeps their filter state), then close the
+            # pass-through by killing them in the carried alive mask.
+            fin = jnp.isfinite(grads)
+            finite = jnp.all(fin, axis=1)
+            grads = jnp.where(fin, grads, jnp.zeros((), grads.dtype))
+            report = finite if report is None else report & finite
         state, xi, diag = guard_step(dcfg, state, grads, x, x1, report)
+        if san:
+            state = state._replace(alive=state.alive & finite)
+            diag["n_alive"] = jnp.sum(state.alive)
+            diag["n_nonfinite"] = jnp.sum(~finite)
         # ξ is an f32 accumulator output on the flat harness (the dense/
         # fused convention; the solver's scan carries f32 feedback) — the
         # pytree mesh path keeps gradient-dtype ξ, but here the low-

@@ -127,6 +127,17 @@ class SolverConfig(NamedTuple):
     #                             guard_backend="fused"; statically gated
     #                             so "off" traces the pre-gen program
     #                             byte-for-byte
+    sanitize: str = "off"       # "off" | "quarantine" (DESIGN.md §15):
+    #                             non-finite hygiene ahead of every
+    #                             aggregator.  "quarantine" zeroes NaN/Inf
+    #                             entries before any statistic and marks
+    #                             rows containing them dead (guards: via
+    #                             the carried alive mask, permanently;
+    #                             baselines: per-step), so every backend
+    #                             returns finite ξ under arbitrary
+    #                             contamination.  Statically gated: "off"
+    #                             traces the pre-sanitize program
+    #                             byte-for-byte
 
     @property
     def n_byzantine(self) -> int:
@@ -257,16 +268,41 @@ def make_aggregator(problem, cfg: SolverConfig, telemetry=None):
     _validate_agg_opts(opts)
     bucket_s, name = parse_aggregator_spec(cfg.aggregator)
     probe = telemetry_on(telemetry)
+    if cfg.sanitize not in ("off", "quarantine"):
+        raise ValueError(
+            f"sanitize must be 'off' or 'quarantine', got {cfg.sanitize!r}")
+    san_on = cfg.sanitize == "quarantine"
 
     def _probed(state0, step4):
-        # generic baseline probe: append a baseline_frame to a 4-tuple step
+        # generic baseline wrapping: the sanitize stage (DESIGN.md §15) in
+        # front of the rule, then the flight-recorder probe behind it
+        if san_on:
+            inner4 = step4
+
+            def step4(state, grads, x, x1, report=None):
+                # quarantine contract for baselines: non-finite entries are
+                # zeroed before the rule sees them (a zero row instead of a
+                # poisoned one — mean/median/krum all stay finite) and the
+                # offending rows are reported dead this step.  Baselines are
+                # memoryless about membership, so per-step alive is the
+                # whole contract; guards persist the kill via state.alive.
+                fin = jnp.isfinite(grads)
+                finite = jnp.all(fin, axis=1)
+                state, xi, n_alive, alive = inner4(
+                    state, jnp.where(fin, grads, 0), x, x1, report)
+                alive = alive & finite
+                return state, xi, jnp.sum(alive).astype(jnp.int32), alive
+
         if not probe:
             return state0, step4
 
         def step(state, grads, x, x1, report=None):
             state, xi, n_alive, alive = step4(state, grads, x, x1, report)
-            return (state, xi, n_alive, alive,
-                    baseline_frame(cfg.m, alive, n_alive))
+            frame = baseline_frame(cfg.m, alive, n_alive)
+            if san_on:
+                frame["n_nonfinite"] = jnp.sum(
+                    ~jnp.all(jnp.isfinite(grads), axis=1)).astype(jnp.float32)
+            return state, xi, n_alive, alive, frame
 
         return state0, step
 
@@ -386,6 +422,12 @@ def run_sgd(
     het_on = profile is not None and problem.het_grad is not None
     stale_on = profile is not None and cfg.max_delay > 0
     part_on = profile is not None and cfg.partial_participation
+    # fault-injection gate (DESIGN.md §15): static like the rest — no
+    # FaultPlan on the adversary, no fault machinery in the trace
+    fault_plan = getattr(adversary, "faults", None)
+    fault_on = fault_plan is not None
+    if fault_on:
+        from repro.scenarios import faults as faults_mod  # avoid import cycle
     # on-device generation gate (DESIGN.md §14): a static Python decision —
     # "off" leaves the materializing trace untouched byte-for-byte
     if cfg.generate not in ("off", "kernel"):
@@ -408,6 +450,10 @@ def run_sgd(
         if cfg.max_delay or cfg.partial_participation:
             raise ValueError("generate='kernel' does not compose with "
                              "staleness buffers or partial participation "
+                             "(both need the materialized batch)")
+        if fault_on or cfg.sanitize != "off":
+            raise ValueError("generate='kernel' does not compose with "
+                             "fault injection or sanitize='quarantine' "
                              "(both need the materialized batch)")
         if het_on and problem.gen.het_sign is None:
             raise ValueError("generate='kernel' with a heterogeneous "
@@ -515,6 +561,17 @@ def run_sgd(
             else:
                 mask_k = adversary.mask_at(rank, k)
                 grads = adversary.attack(akey, grads, mask_k, ctx, adv_state)
+            if fault_on:
+                # machine faults land AFTER the attack — they model the
+                # platform, not the adversary, and may hit honest workers
+                # (rank convention: faults take the TOP ranks, Byzantine
+                # the bottom).  fold_in keeps the gkey/akey streams
+                # untouched, so an armed mode-0 plan stays on the
+                # fault-free trajectory (pinned by test).
+                fkey = jax.random.fold_in(akey, faults_mod.FAULT_KEY_TAG)
+                grads = faults_mod.apply_fault_plan(
+                    fault_plan, fkey, grads, rank, k)
+                fault_rows_k = faults_mod.fault_rows(fault_plan, rank, k)
             if part_on:
                 # the reporting mask is *distinct* from the Byzantine mask:
                 # honest workers skip steps per p_report, Byzantine workers
@@ -548,6 +605,12 @@ def run_sgd(
         # ever_byz stays the pure schedule union: Byzantine workers always
         # report, so mask_k ∩ report = mask_k by construction
         ever_byz = ever_byz | mask_k
+        if fault_on:
+            # a machine emitting corrupted values is "arbitrary behavior" in
+            # the paper's sense: fault victims count toward the realized
+            # ever-Byzantine fraction (and thus are never flagged as
+            # wrongly-filtered good workers when the sanitizer kills them)
+            ever_byz = ever_byz | fault_rows_k
         any_good_filtered = any_good_filtered | jnp.any((~alive) & (~ever_byz))
         fb = (xi, alive, jnp.asarray(n_alive, jnp.int32))
         if tel_on:

@@ -70,14 +70,53 @@ def _fused_guard_kernel(g_ref, b_ref, delta_ref,
     b_new_ref[...] = (b + g).astype(b_new_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def _fused_guard_sanitize_kernel(g_ref, b_ref, delta_ref,
+                                 gram_g_ref, cross_ref, a_inc_ref, nf_ref,
+                                 b_new_ref):
+    """Sanitizing variant (DESIGN.md §15): identical products, but NaN/Inf
+    gradient entries are zeroed *in VMEM* before any contraction and the
+    per-row non-finite count accumulates across strips — the non-finite
+    check rides the one HBM sweep instead of costing its own (m, d) pass.
+    A separate kernel body (not a flag on the base kernel) so the off-state
+    pallas_call is byte-identical to the pre-sanitize build."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_g_ref[...] = jnp.zeros_like(gram_g_ref)
+        cross_ref[...] = jnp.zeros_like(cross_ref)
+        a_inc_ref[...] = jnp.zeros_like(a_inc_ref)
+        nf_ref[...] = jnp.zeros_like(nf_ref)
+
+    g = g_ref[...].astype(jnp.float32)        # (m, d_blk)
+    fin = jnp.isfinite(g)
+    nf_ref[...] += jnp.sum((~fin).astype(jnp.int32), axis=1)
+    g = jnp.where(fin, g, 0.0)
+    b = b_ref[...].astype(jnp.float32)        # (m, d_blk)
+    dlt = delta_ref[...].astype(jnp.float32)  # (d_blk,)
+
+    contract = (((1,), (1,)), ((), ()))
+    gram_g_ref[...] += jax.lax.dot_general(
+        g, g, contract, preferred_element_type=jnp.float32
+    )
+    cross_ref[...] += jax.lax.dot_general(
+        b, g, contract, preferred_element_type=jnp.float32
+    )
+    a_inc_ref[...] += jnp.sum(g * dlt[None, :], axis=1)
+    # B accumulates the *sanitized* gradient: the martingale stays finite
+    # forever (one NaN entry would otherwise poison B_i for the whole run)
+    b_new_ref[...] = (b + g).astype(b_new_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret", "sanitize"))
 def fused_guard_pallas(
     grads: jax.Array,   # (m, d) fresh per-worker gradients
     B: jax.Array,       # (m, d) martingale matrix B_{k-1}
     delta: jax.Array,   # (d,)   x_k − x_1
     d_block: int = 2048,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    sanitize: bool = False,
+) -> tuple[jax.Array, ...]:
     """One-pass guard statistics: ``(gram_g, cross, a_inc, B_new)`` with
 
     * ``gram_g[i, j] = ⟨∇_i, ∇_j⟩``            (m, m) f32
@@ -91,6 +130,12 @@ def fused_guard_pallas(
     ``cross`` into the incremental Gram ``G_B^k = G_B^{k-1} + cross +
     crossᵀ + gram_g``.  Padding (m → ×8, d → ×d_block) is with zeros,
     which is exact for all four outputs.
+
+    ``sanitize=True`` (static, DESIGN.md §15) zeroes NaN/Inf gradient
+    entries in VMEM before every product and appends a fifth output
+    ``nf`` — the (m,) int32 per-row non-finite entry count — so the
+    quarantine decision costs no extra HBM pass; matches
+    :func:`repro.kernels.ref.fused_guard_sanitize_ref`.
     """
     m, d = grads.shape
     if B.shape != (m, d):
@@ -104,32 +149,47 @@ def fused_guard_pallas(
         delta = jnp.pad(delta, (0, d_pad))
     mp, dp = grads.shape
 
+    out_specs = [
+        pl.BlockSpec((mp, mp), lambda i: (0, 0)),
+        pl.BlockSpec((mp, mp), lambda i: (0, 0)),
+        pl.BlockSpec((mp,), lambda i: (0,)),
+        pl.BlockSpec((mp, d_block), lambda i: (0, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+        jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+        jax.ShapeDtypeStruct((mp,), jnp.float32),
+        jax.ShapeDtypeStruct((mp, dp), B.dtype),
+    ]
+    kernel = _fused_guard_kernel
+    if sanitize:
+        kernel = _fused_guard_sanitize_kernel
+        # nf accumulator sits before the streamed B strip so the resident
+        # accumulators stay contiguous in the output list
+        out_specs.insert(3, pl.BlockSpec((mp,), lambda i: (0,)))
+        out_shape.insert(3, jax.ShapeDtypeStruct((mp,), jnp.int32))
+
     # named scope (DESIGN.md §12 span convention): XLA profiles attribute
     # the sweep's device time to guard/pallas_fused_guard instead of an
     # anonymous custom-call — metadata only, no ops
     with jax.named_scope("guard/pallas_fused_guard"):
-        gram_g, cross, a_inc, b_new = pl.pallas_call(
-            _fused_guard_kernel,
+        outs = pl.pallas_call(
+            kernel,
             grid=(dp // d_block,),
             in_specs=[
                 pl.BlockSpec((mp, d_block), lambda i: (0, i)),
                 pl.BlockSpec((mp, d_block), lambda i: (0, i)),
                 pl.BlockSpec((d_block,), lambda i: (i,)),
             ],
-            out_specs=[
-                pl.BlockSpec((mp, mp), lambda i: (0, 0)),
-                pl.BlockSpec((mp, mp), lambda i: (0, 0)),
-                pl.BlockSpec((mp,), lambda i: (0,)),
-                pl.BlockSpec((mp, d_block), lambda i: (0, i)),
-            ],
-            out_shape=[
-                jax.ShapeDtypeStruct((mp, mp), jnp.float32),
-                jax.ShapeDtypeStruct((mp, mp), jnp.float32),
-                jax.ShapeDtypeStruct((mp,), jnp.float32),
-                jax.ShapeDtypeStruct((mp, dp), B.dtype),
-            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
             interpret=interpret,
         )(grads, B, delta)
+    if sanitize:
+        gram_g, cross, a_inc, nf, b_new = outs
+        return (gram_g[:m, :m], cross[:m, :m], a_inc[:m], b_new[:m, :d],
+                nf[:m])
+    gram_g, cross, a_inc, b_new = outs
     return gram_g[:m, :m], cross[:m, :m], a_inc[:m], b_new[:m, :d]
 
 

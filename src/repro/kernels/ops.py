@@ -52,8 +52,10 @@ def trimmed_mean(x: jax.Array, n_trim: int, d_block: int = 4096) -> jax.Array:
     return trimmed_mean_pallas(x, n_trim, d_block=d_block, interpret=interpret_mode())
 
 
-def filtered_mean(x: jax.Array, mask: jax.Array, denom: float, d_block: int = 4096) -> jax.Array:
-    return filtered_mean_pallas(x, mask, denom, d_block=d_block, interpret=interpret_mode())
+def filtered_mean(x: jax.Array, mask: jax.Array, denom: float, d_block: int = 4096,
+                  sanitize: bool = False) -> jax.Array:
+    return filtered_mean_pallas(x, mask, denom, d_block=d_block,
+                                interpret=interpret_mode(), sanitize=sanitize)
 
 
 def countsketch(x: jax.Array, k: int, salt: int = 0, d_block: int = 8192) -> jax.Array:
@@ -61,14 +63,16 @@ def countsketch(x: jax.Array, k: int, salt: int = 0, d_block: int = 8192) -> jax
 
 
 def fused_guard(grads: jax.Array, B: jax.Array, delta: jax.Array,
-                d_block: int = 2048):
+                d_block: int = 2048, sanitize: bool = False):
     """(m, d), (m, d), (d,) → (gram_g, cross, a_inc, B_new) in one HBM
     sweep (see fused_guard.py); the streaming ByzantineGuard path.
     Strips stream in their storage dtype (bf16 halves the sweep's bytes —
     the ``stats_dtype`` axis); B_new comes back in ``B.dtype``, Grams and
-    A-increments always f32."""
+    A-increments always f32.  ``sanitize=True`` (DESIGN.md §15) zeroes
+    non-finite entries in-pass and appends a per-row non-finite count
+    ``nf`` as a fifth output."""
     return fused_guard_pallas(grads, B, delta, d_block=d_block,
-                              interpret=interpret_mode())
+                              interpret=interpret_mode(), sanitize=sanitize)
 
 
 def fused_guard_gen(B, delta, x, h, x_star, het_dir,
@@ -98,8 +102,10 @@ ORACLES = {
     "coordinate_median": ref.coordinate_median_ref,
     "trimmed_mean": ref.trimmed_mean_ref,
     "filtered_mean": ref.filtered_mean_ref,
+    "filtered_mean_sanitize": ref.filtered_mean_sanitize_ref,
     "countsketch": ref.countsketch_ref,
     "fused_guard": ref.fused_guard_ref,
+    "fused_guard_sanitize": ref.fused_guard_sanitize_ref,
     "fused_guard_gen": ref.fused_guard_gen_ref,
     "gen_xi": ref.gen_xi_ref,
 }

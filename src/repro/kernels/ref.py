@@ -35,6 +35,17 @@ def filtered_mean_ref(x: jax.Array, mask: jax.Array, denom: float) -> jax.Array:
     return w @ x.astype(jnp.float32)
 
 
+def filtered_mean_sanitize_ref(x: jax.Array, mask: jax.Array,
+                               denom: float) -> jax.Array:
+    """Sanitizing variant of :func:`filtered_mean_ref` (DESIGN.md §15):
+    non-finite entries are treated as zero, so a quarantined (zero-weight)
+    NaN/Inf row contributes nothing instead of poisoning the dot."""
+    x32 = x.astype(jnp.float32)
+    x32 = jnp.where(jnp.isfinite(x32), x32, 0.0)
+    w = mask.astype(jnp.float32) / denom
+    return w @ x32
+
+
 def fused_guard_ref(
     grads: jax.Array, B: jax.Array, delta: jax.Array
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -48,6 +59,23 @@ def fused_guard_ref(
     b = B.astype(jnp.float32)
     dlt = delta.astype(jnp.float32)
     return g @ g.T, b @ g.T, g @ dlt, (b + g).astype(B.dtype)
+
+
+def fused_guard_sanitize_ref(
+    grads: jax.Array, B: jax.Array, delta: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sanitizing variant of :func:`fused_guard_ref` (DESIGN.md §15):
+    non-finite gradient entries are zeroed before every product and the
+    fifth output ``nf[i]`` counts them per row, so the caller can
+    quarantine poisoned workers (``nf > 0``) while every accumulator —
+    including ``B_new`` — stays finite."""
+    g = grads.astype(jnp.float32)
+    fin = jnp.isfinite(g)
+    nf = jnp.sum(~fin, axis=1).astype(jnp.int32)
+    g = jnp.where(fin, g, 0.0)
+    b = B.astype(jnp.float32)
+    dlt = delta.astype(jnp.float32)
+    return g @ g.T, b @ g.T, g @ dlt, (b + g).astype(B.dtype), nf
 
 
 def gen_rows_ref(x, h, x_star, het_dir, keys, skewsign, slot, params):

@@ -54,8 +54,14 @@ def _trimmed_mean_kernel(x_ref, out_ref, *, n_trim: int):
     out_ref[...] = jnp.mean(s[n_trim : m - n_trim], axis=0)
 
 
-def _filtered_mean_kernel(x_ref, mask_ref, out_ref, *, denom: float):
+def _filtered_mean_kernel(x_ref, mask_ref, out_ref, *, denom: float,
+                          sanitize: bool = False):
     x = x_ref[...].astype(jnp.float32)
+    if sanitize:
+        # static gate (DESIGN.md §15): zeroed-weight rows must not poison
+        # the dot — 0 × Inf = NaN — so quarantined rows are zeroed in VMEM
+        # before the reduction; off-state kernel body is unchanged
+        x = jnp.where(jnp.isfinite(x), x, 0.0)
     w = mask_ref[...].astype(jnp.float32) / denom
     out_ref[...] = jnp.einsum("m,md->d", w, x)
 
@@ -97,15 +103,19 @@ def trimmed_mean_pallas(x: jax.Array, n_trim: int, d_block: int = 4096,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("denom", "d_block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("denom", "d_block", "interpret", "sanitize"))
 def filtered_mean_pallas(x: jax.Array, mask: jax.Array, denom: float,
-                         d_block: int = 4096, interpret: bool = False) -> jax.Array:
+                         d_block: int = 4096, interpret: bool = False,
+                         sanitize: bool = False) -> jax.Array:
     """(m, d), (m,) → (d,): the paper's ξ_k = Σ_{i∈good_k} x_i / denom,
-    fused mask-and-reduce (never materializes the masked copy)."""
+    fused mask-and-reduce (never materializes the masked copy).
+    ``sanitize=True`` zeroes non-finite entries in VMEM first, so a
+    quarantined (zero-weight) NaN/Inf row cannot poison the dot."""
     m = x.shape[0]
     mask_spec = pl.BlockSpec((m,), lambda i: (0,))
     return _reduce_call(
-        functools.partial(_filtered_mean_kernel, denom=denom),
+        functools.partial(_filtered_mean_kernel, denom=denom, sanitize=sanitize),
         x, extra_inputs=(mask.astype(jnp.float32),), extra_specs=(mask_spec,),
         d_block=d_block, interpret=interpret,
     )

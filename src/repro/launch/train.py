@@ -52,6 +52,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
 import time
 
 import jax
@@ -107,6 +108,7 @@ def run_training(
     seed: int = 0, ckpt_dir: str | None = None, resume: bool = False,
     stop_after: int | None = None, log_every: int = 10, d_model: int = 256,
     driver: str = "scan", trace: str | None = None,
+    ckpt_every: int | None = None, keep_last: int | None = None,
 ):
     """Train ``steps`` steps; returns (final TrainState, per-step history).
 
@@ -126,6 +128,14 @@ def run_training(
     full ``steps`` — with ``ckpt_dir`` set this checkpoints a resumable
     prefix, which is how the resume-equals-uninterrupted regression test
     simulates a preempted run.
+
+    ``ckpt_every`` (with ``ckpt_dir``) also checkpoints mid-run every that
+    many steps at segment boundaries — the periodic saves a SIGKILL-style
+    crash resumes from (the chaos harness's kill-resume matrix);
+    ``keep_last`` bounds retention to the newest K complete checkpoints.
+    A SIGTERM (preemption notice) is caught at the next segment boundary:
+    the loop exits early and the normal tail flushes a final checkpoint +
+    history within the grace budget (DESIGN.md §15).
     """
     cfg = get_config(arch)
     if reduced:
@@ -202,6 +212,27 @@ def run_training(
     n_prior = len(history)
     run_label = f"train/{arch}"
 
+    # preemption (DESIGN.md §15): SIGTERM flips a flag the drivers check at
+    # segment boundaries — the loop exits early and the normal tail below
+    # flushes a final checkpoint + history within the grace budget, instead
+    # of dying mid-scan with the newest progress only in device memory.
+    preempted = {"hit": False}
+    prev_sigterm = None
+    if ckpt_dir:
+        def _on_sigterm(signum, frame):
+            preempted["hit"] = True
+        try:
+            prev_sigterm = signal.signal(signal.SIGTERM, _on_sigterm)
+        except ValueError:
+            prev_sigterm = None  # not the main thread — no handler, no flush
+
+    def maybe_ckpt(state, lo):
+        """Periodic mid-run save at a segment boundary (the restart points
+        of the kill-resume chaos matrix)."""
+        if ckpt_dir and ckpt_every and lo < stop and lo % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, int(jax.device_get(state.step)), state,
+                            keep_last=keep_last)
+
     def flush_recs(ms, lo, hi, stacked=True):
         """Host-side split of one metrics transfer: ``tel/`` forensics
         (per-worker arrays included) go to the event log as guard_step
@@ -264,29 +295,40 @@ def run_training(
             state = run_segment(state, lo, lo + head)
             log(history[-1])
             lo += head
-        while lo < stop:
+            maybe_ckpt(state, lo)
+        while lo < stop and not preempted["hit"]:
             hi = min(lo + log_every, stop)
             state = run_segment(state, lo, hi)
             log(history[-1])
             lo = hi
+            maybe_ckpt(state, lo)
     elif driver == "loop":
         # historical baseline: one jitted call + one host transfer per
         # metric per step (what the scan driver replaces)
         step_fn = jax.jit(one_step)
         for i in range(start, stop):
+            if preempted["hit"]:
+                break
             state, metrics = step_fn(state, jnp.asarray(i))
             flush_recs(jax.device_get(metrics), i, i + 1, stacked=False)
             if i % log_every == 0 or i == stop - 1:
                 log(history[-1])
+            maybe_ckpt(state, i + 1)
     else:
         raise KeyError(f"unknown driver {driver!r}; have scan|loop")
 
+    if preempted["hit"]:
+        print(f"SIGTERM: preempted at step {int(jax.device_get(state.step))}"
+              " — flushing final checkpoint")
     if ckpt_dir:
         # label with the state's own counter — when a resume starts at or
         # past `stop` no steps ran and the label must not go backwards
-        save_checkpoint(ckpt_dir, int(jax.device_get(state.step)), state)
+        save_checkpoint(ckpt_dir, int(jax.device_get(state.step)), state,
+                        keep_last=keep_last)
         with open(f"{ckpt_dir}/history.json", "w") as f:
             json.dump(history, f)
+    if prev_sigterm is not None:
+        signal.signal(signal.SIGTERM, prev_sigterm)
     if elog is not None:
         elog.add_meta(wall_s=time.time() - t0,
                       steps_run=max(stop - start, 0))
@@ -327,12 +369,23 @@ def main():
                     help="Remark-2.3 scenario adversary built around "
                          "--attack (default: static attack path)")
     ap.add_argument("--driver", default="scan", choices=["scan", "loop"])
+    ap.add_argument("--d-model", type=int, default=256,
+                    help="reduced-config width cap (CPU harness sizing)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=None, metavar="N",
+                    help="also checkpoint every N steps mid-run (at segment "
+                         "boundaries) — the restart points a SIGKILL-style "
+                         "crash resumes from")
+    ap.add_argument("--keep-last", type=int, default=None, metavar="K",
+                    help="retain only the newest K complete checkpoints")
     ap.add_argument("--resume", action="store_true",
                     help="continue from the latest checkpoint in --ckpt-dir")
+    ap.add_argument("--stop-after", type=int, default=None, metavar="N",
+                    help="stop after N steps (schedules stay sized by "
+                         "--steps) — checkpoints a resumable prefix")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="arm the guard flight recorder (DESIGN.md §12) and "
                          "write the structured JSONL event log here; render "
@@ -347,6 +400,8 @@ def main():
         guard_v=args.guard_v, scenario=args.scenario, driver=args.driver,
         lr=args.lr, seed=args.seed, ckpt_dir=args.ckpt_dir,
         resume=args.resume, log_every=args.log_every, trace=args.trace,
+        ckpt_every=args.ckpt_every, keep_last=args.keep_last,
+        stop_after=args.stop_after, d_model=args.d_model,
     )
 
 

@@ -82,6 +82,9 @@ SCALAR_KEYS = (
     # no WorkerProfile (everyone reports, nothing is stale)
     "n_reporting", # |{workers delivering this step}| under partial participation
     "staleness",   # mean gradient age in steps under the delay schedule
+    # fault-domain axis (DESIGN.md §15) — appended last, same decodability
+    # rule; NaN when the sanitize gate is off
+    "n_nonfinite", # |{workers whose row held NaN/Inf this step}| under sanitize
 )
 FRAME_SCHEMA = PER_WORKER_KEYS + SCALAR_KEYS
 
@@ -118,7 +121,7 @@ def guard_frame(m: int, diag: dict, alive: jax.Array) -> dict:
     frame["thr_a"] = jnp.asarray(diag["threshold_A"], jnp.float32)
     frame["thr_b"] = jnp.asarray(diag["threshold_B"], jnp.float32)
     frame["thr_g"] = jnp.asarray(diag["threshold_grad"], jnp.float32)
-    for opt in ("v_est", "gram_drift"):
+    for opt in ("v_est", "gram_drift", "n_nonfinite"):
         if opt in diag:
             frame[opt] = jnp.asarray(diag[opt], jnp.float32)
     return frame

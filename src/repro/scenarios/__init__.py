@@ -26,6 +26,20 @@ from repro.scenarios.adversary import (
     ScenarioAdversary,
     attack_id,
 )
+from repro.scenarios.faults import (
+    FAULT_TABLE,
+    FaultPlan,
+    apply_fault_plan,
+    fault_bitflip,
+    fault_garbage,
+    fault_id,
+    fault_inf_rows,
+    fault_knobs,
+    fault_nan_rows,
+    fault_none,
+    fault_rows,
+    make_fault_plan,
+)
 from repro.scenarios.campaign import (
     GUARD_AGGREGATOR,
     CampaignResult,
@@ -75,6 +89,8 @@ __all__ = [
     "AdvState",
     "CampaignGrid",
     "CampaignResult",
+    "FAULT_TABLE",
+    "FaultPlan",
     "GUARD_AGGREGATOR",
     "GridEntry",
     "NEVER",
@@ -82,7 +98,17 @@ __all__ = [
     "Scenario",
     "ScenarioAdversary",
     "WorkerProfile",
+    "apply_fault_plan",
     "attack_id",
+    "fault_bitflip",
+    "fault_garbage",
+    "fault_id",
+    "fault_inf_rows",
+    "fault_knobs",
+    "fault_nan_rows",
+    "fault_none",
+    "fault_rows",
+    "make_fault_plan",
     "build_campaign_fn",
     "degraded_pairs",
     "expand_grid",

@@ -125,11 +125,19 @@ class ScenarioAdversary(NamedTuple):
     probability), while the Scenario keeps parameterizing the Byzantine
     side.  ``None`` (the default) is the homogeneous iid fleet — no extra
     pytree leaves, the pre-profile trace.
+
+    ``faults`` (optional :class:`repro.scenarios.faults.FaultPlan`) is the
+    machine-fault axis of DESIGN.md §15: NaN/Inf rows, garbage strips, and
+    bit flips injected after the attack on a schedule independent of the
+    Byzantine mask.  ``None`` (the default) keeps the fault machinery out
+    of the trace entirely (off-state jaxpr byte-identical, same static
+    gating as profiles).
     """
 
     scenario: "spec.Scenario"  # Scenario pytree of scalar leaves
     alpha: jax.Array           # () f32
     profile: "spec.WorkerProfile | None" = None  # (m,)-leaf pytree or None
+    faults: "faults_mod.FaultPlan | None" = None  # scalar-leaf pytree or None
 
     def n_byz(self, m: int) -> jax.Array:
         # match int(alpha * m): floor, with an epsilon against f32 round-down

@@ -227,15 +227,18 @@ def build_campaign_fn(
     def campaign(grid: CampaignGrid):
         # the grid is a registered pytree (spec.CampaignGrid) — the whole
         # object crosses the jit boundary; row metadata rides the treedef.
-        # grid.profiles is either None (homogeneous fleet, zero extra
-        # leaves) or a stacked WorkerProfile vmapped like every other axis.
-        axes = (grid.scenarios, grid.alpha, grid.seeds, grid.profiles)
+        # grid.profiles / grid.faults are either None (homogeneous /
+        # fault-free fleet, zero extra leaves) or a stacked
+        # WorkerProfile / FaultPlan vmapped like every other axis.
+        axes = (grid.scenarios, grid.alpha, grid.seeds, grid.profiles,
+                grid.faults)
         n = grid.alpha.shape[0]
         out = {}
         for name, cfg in cfgs.items():  # static unroll — one trace total
 
-            def one(scn, a, seed, prof, cfg=cfg):
-                adv = ScenarioAdversary(scenario=scn, alpha=a, profile=prof)
+            def one(scn, a, seed, prof, plan, cfg=cfg):
+                adv = ScenarioAdversary(scenario=scn, alpha=a, profile=prof,
+                                        faults=plan)
                 res = run_sgd(problem, cfg, jax.random.PRNGKey(seed),
                               adversary=adv, telemetry=telemetry)
                 return _summarize(problem, cfg, res, return_gaps)
@@ -326,8 +329,10 @@ def run_campaign_looped(
             scn = jax.tree.map(lambda x, i=i: x[i], grid.scenarios)
             prof = (None if grid.profiles is None
                     else jax.tree.map(lambda x, i=i: x[i], grid.profiles))
+            plan = (None if grid.faults is None
+                    else jax.tree.map(lambda x, i=i: x[i], grid.faults))
             adv = ScenarioAdversary(scenario=scn, alpha=grid.alpha[i],
-                                    profile=prof)
+                                    profile=prof, faults=plan)
             res = run_sgd(problem, cfg, jax.random.PRNGKey(grid.seeds[i]),
                           adversary=adv)
             gaps[name].append(float(problem.f(res.x_avg) - f_star))

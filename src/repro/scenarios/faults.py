@@ -1,0 +1,207 @@
+"""Fault plans — adversarial *values* as a first-class campaign axis.
+
+The paper's threat model lets Byzantine machines "behave arbitrarily", and
+arbitrary includes machine-level garbage the attack zoo never emits: NaN
+rows from a diverged replica, Inf rows from an overflow, huge-magnitude
+strips from a desynced parameter server, silent bit flips from faulty HBM
+(Chen, Su & Xu 2017 treat exactly these as the Byzantine baseline case).
+A :class:`FaultPlan` injects them into the worker gradient batch *after*
+the scenario attack, on a schedule, hitting workers independently of the
+Byzantine mask — i.e. mostly *honest* workers, which is what makes the
+sanitize gate (DESIGN.md §15) a separate mechanism from the filter: the
+filter bounds adversarial statistics, the sanitizer bounds non-finite
+poison that would otherwise NaN every median and Gram product regardless
+of which worker emitted it.
+
+Same stacking contract as :class:`repro.scenarios.spec.Scenario`: a plan
+is a pytree of **scalar leaves only**, so a campaign stacks a faults axis
+along the grid's leading dim and the whole sweep still lowers in one
+``jit(vmap)``.  Fault modes dispatch through one ``lax.switch`` over
+:data:`FAULT_TABLE` (append new modes at the END — plans store ids).
+
+Which rows, when::
+
+    faulty  = rank >= m - floor(frac · m)          # top ranks; the Byzantine
+                                                   # set is the BOTTOM ranks,
+                                                   # so faults land on honest
+                                                   # workers until the two
+                                                   # regions overlap
+    active  = (k >= start_step) and ((k - start_step) % period == 0)
+
+Note ``garbage`` is *finite* corruption — enormous but representable
+values that the Algorithm-1 filter itself must catch; only ``nan_rows``,
+``inf_rows``, and (probabilistically) ``bitflip`` produce the non-finite
+values the sanitize stage quarantines.  The chaos harness sweeps both
+kinds on purpose.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+FAULT_TABLE: tuple[str, ...] = (
+    "none", "nan_rows", "inf_rows", "garbage", "bitflip",
+)
+
+# deterministic sub-key tag for fault randomness (prime, same convention as
+# the participation fold-in 7919 in the solver)
+FAULT_KEY_TAG = 104729
+
+
+def fault_id(name: str) -> int:
+    try:
+        return FAULT_TABLE.index(name)
+    except ValueError:
+        raise KeyError(
+            f"fault mode {name!r} unknown; have {FAULT_TABLE}"
+        ) from None
+
+
+class FaultPlan(NamedTuple):
+    """One fault-injection schedule, as a pytree of scalar arrays."""
+
+    mode: jax.Array        # () int32 — id into FAULT_TABLE
+    frac: jax.Array        # () f32 — fraction of the fleet hit
+    start_step: jax.Array  # () int32 — first step faults can fire
+    period: jax.Array      # () int32 — fire every `period` steps (≥ 1)
+    magnitude: jax.Array   # () f32 — garbage amplitude (mode-specific)
+
+
+def make_fault_plan(
+    mode: str = "none",
+    *,
+    frac: float = 0.0,
+    start_step: int = 0,
+    period: int = 1,
+    magnitude: float = 1e30,
+) -> FaultPlan:
+    return FaultPlan(
+        mode=jnp.asarray(fault_id(mode), jnp.int32),
+        frac=jnp.asarray(frac, jnp.float32),
+        start_step=jnp.asarray(start_step, jnp.int32),
+        period=jnp.asarray(max(int(period), 1), jnp.int32),
+        magnitude=jnp.asarray(magnitude, jnp.float32),
+    )
+
+
+def fault_none() -> FaultPlan:
+    """Armed-but-inert plan: mode 0 leaves every gradient bit-identical
+    (pinned by test) — the control cell of a fault sweep."""
+    return make_fault_plan("none")
+
+
+def fault_nan_rows(frac: float, *, start_step: int = 0, period: int = 1) -> FaultPlan:
+    """Affected workers report all-NaN rows (diverged replica)."""
+    return make_fault_plan("nan_rows", frac=frac, start_step=start_step,
+                           period=period)
+
+
+def fault_inf_rows(frac: float, *, start_step: int = 0, period: int = 1) -> FaultPlan:
+    """Affected workers report ±Inf rows (overflowed accumulator)."""
+    return make_fault_plan("inf_rows", frac=frac, start_step=start_step,
+                           period=period)
+
+
+def fault_garbage(
+    frac: float, *, magnitude: float = 1e30, start_step: int = 0, period: int = 1,
+) -> FaultPlan:
+    """Affected workers report finite garbage of amplitude ``magnitude`` on
+    a coordinate strip — the filter's job, not the sanitizer's."""
+    return make_fault_plan("garbage", frac=frac, magnitude=magnitude,
+                           start_step=start_step, period=period)
+
+
+def fault_bitflip(frac: float, *, start_step: int = 0, period: int = 1) -> FaultPlan:
+    """One random bit of each affected element flips (faulty memory) —
+    silent corruption that is sometimes huge, sometimes non-finite,
+    sometimes a rounding-level nudge."""
+    return make_fault_plan("bitflip", frac=frac, start_step=start_step,
+                           period=period)
+
+
+def fault_knobs(plan: FaultPlan | None) -> dict:
+    """Human-readable summary knobs for grid ``entries`` rows (host-side
+    concrete plans only)."""
+    if plan is None:
+        return {"fault": "none", "fault_frac": 0.0}
+    return {
+        "fault": FAULT_TABLE[int(plan.mode)],
+        "fault_frac": float(plan.frac),
+    }
+
+
+def n_faulty(plan: FaultPlan, m: int) -> jax.Array:
+    # floor with the same epsilon convention as ScenarioAdversary.n_byz
+    return jnp.floor(plan.frac * m + 1e-6).astype(jnp.int32)
+
+
+def fault_rows(plan: FaultPlan, rank: jax.Array, k: jax.Array) -> jax.Array:
+    """(m,) bool — workers whose row is corrupted at step ``k``.  The
+    solver folds this into its ever-Byzantine accounting; mode 0 injects
+    nothing and contributes nothing."""
+    m = rank.shape[0]
+    faulty = rank >= (m - n_faulty(plan, m))
+    active = (k >= plan.start_step) & (
+        ((k - plan.start_step) % jnp.maximum(plan.period, 1)) == 0
+    )
+    return (plan.mode != 0) & faulty & active
+
+
+def _uint_dtype(dtype) -> jnp.dtype:
+    return jnp.dtype(f"uint{jnp.dtype(dtype).itemsize * 8}")
+
+
+def apply_fault_plan(
+    plan: FaultPlan, key: jax.Array, grads: jax.Array,
+    rank: jax.Array, k: jax.Array,
+) -> jax.Array:
+    """Corrupt ``grads`` (m, d) per the plan at step ``k``; pure and
+    vmappable.  Mode 0 (and any inactive step) returns the input values
+    unchanged."""
+    m, d = grads.shape
+    dtype = grads.dtype
+    faulty = rank >= (m - n_faulty(plan, m))
+    active = (k >= plan.start_step) & (
+        ((k - plan.start_step) % jnp.maximum(plan.period, 1)) == 0
+    )
+    row = (faulty & active)[:, None]
+
+    def _none(op):
+        key, grads, row, mag = op
+        return grads
+
+    def _nan(op):
+        key, grads, row, mag = op
+        return jnp.where(row, jnp.asarray(jnp.nan, dtype), grads)
+
+    def _inf(op):
+        key, grads, row, mag = op
+        # alternate ±Inf by coordinate parity so the row has no well-defined
+        # direction even before sanitization
+        sign = jnp.where(jnp.arange(d) % 2 == 0, jnp.inf, -jnp.inf)
+        return jnp.where(row, sign.astype(dtype)[None, :], grads)
+
+    def _garbage(op):
+        key, grads, row, mag = op
+        strip = (jnp.arange(d) % 4 == 0)[None, :]
+        noise = jax.random.uniform(
+            key, (m, d), jnp.float32, minval=-1.0, maxval=1.0
+        ) * mag
+        return jnp.where(row & strip, noise.astype(dtype), grads)
+
+    def _bitflip(op):
+        key, grads, row, mag = op
+        udt = _uint_dtype(dtype)
+        nbits = jnp.dtype(udt).itemsize * 8
+        bits = jax.lax.bitcast_convert_type(grads, udt)
+        which = jax.random.randint(key, (m, d), 0, nbits, jnp.int32)
+        flipped = bits ^ (jnp.asarray(1, udt) << which.astype(udt))
+        return jnp.where(row, jax.lax.bitcast_convert_type(flipped, dtype), grads)
+
+    return jax.lax.switch(
+        plan.mode,
+        (_none, _nan, _inf, _garbage, _bitflip),
+        (key, grads, row, plan.magnitude),
+    )

@@ -261,19 +261,23 @@ class GridEntry(NamedTuple):
     skew: float = 0.0
     max_delay: int = 0
     participation: float = 1.0
+    fault: str = "none"
+    fault_frac: float = 0.0
 
 
 @dataclasses.dataclass
 class CampaignGrid:
-    """A stacked cartesian product of (scenario × α × seed × profile) runs.
+    """A stacked cartesian product of (scenario × α × seed × profile ×
+    fault) runs.
 
-    ``scenarios``/``alpha``/``seeds``/``profiles`` are pytrees/arrays with
-    leading axis N = n_runs; ``rows`` keeps one hashable :class:`GridEntry`
-    per run for reporting.  Registered as a pytree — the array members are
-    children and ``rows`` is aux data, so a grid passes into jitted code
-    directly (``jit(campaign)(grid)``) and stacks/indexes under
-    ``jax.tree.map``.  ``profiles`` is ``None`` for a homogeneous grid
-    (no pytree leaves — the degenerate case adds nothing to the trace).
+    ``scenarios``/``alpha``/``seeds``/``profiles``/``faults`` are
+    pytrees/arrays with leading axis N = n_runs; ``rows`` keeps one hashable
+    :class:`GridEntry` per run for reporting.  Registered as a pytree — the
+    array members are children and ``rows`` is aux data, so a grid passes
+    into jitted code directly (``jit(campaign)(grid)``) and stacks/indexes
+    under ``jax.tree.map``.  ``profiles``/``faults`` are ``None`` for a
+    homogeneous / fault-free grid (no pytree leaves — the degenerate case
+    adds nothing to the trace).
     """
 
     scenarios: Scenario
@@ -281,9 +285,11 @@ class CampaignGrid:
     seeds: jax.Array
     rows: tuple
     profiles: WorkerProfile | None = None
+    faults: "faults_mod.FaultPlan | None" = None
 
     def __init__(self, scenarios: Scenario, alpha: jax.Array,
-                 seeds: jax.Array, entries, profiles: WorkerProfile | None = None):
+                 seeds: jax.Array, entries,
+                 profiles: WorkerProfile | None = None, faults=None):
         self.scenarios = scenarios
         self.alpha = alpha
         self.seeds = seeds
@@ -291,6 +297,7 @@ class CampaignGrid:
             e if isinstance(e, GridEntry) else GridEntry(**e) for e in entries
         )
         self.profiles = profiles
+        self.faults = faults
 
     @property
     def entries(self) -> list[dict]:
@@ -303,13 +310,14 @@ class CampaignGrid:
 
 
 def _grid_flatten(grid: CampaignGrid):
-    children = (grid.scenarios, grid.alpha, grid.seeds, grid.profiles)
+    children = (grid.scenarios, grid.alpha, grid.seeds, grid.profiles,
+                grid.faults)
     return children, grid.rows
 
 
 def _grid_unflatten(rows, children):
-    scenarios, alpha, seeds, profiles = children
-    return CampaignGrid(scenarios, alpha, seeds, rows, profiles)
+    scenarios, alpha, seeds, profiles, faults = children
+    return CampaignGrid(scenarios, alpha, seeds, rows, profiles, faults)
 
 
 jax.tree_util.register_pytree_node(CampaignGrid, _grid_flatten, _grid_unflatten)
@@ -348,23 +356,38 @@ def expand_grid(
     alphas: Sequence[float],
     seeds: Sequence[int],
     profiles: Sequence[tuple[str, WorkerProfile]] | None = None,
+    faults: Sequence[tuple[str, "faults_mod.FaultPlan"]] | None = None,
 ) -> CampaignGrid:
-    """Cartesian product (scenario × α × seed [× profile]) → one stacked
-    grid.  ``profiles`` is an optional named axis of :class:`WorkerProfile`
-    values; when given, every entry row records the profile's heterogeneity
-    knobs (max skew / max delay / min participation)."""
+    """Cartesian product (scenario × α × seed [× profile] [× fault]) → one
+    stacked grid.  ``profiles`` is an optional named axis of
+    :class:`WorkerProfile` values; when given, every entry row records the
+    profile's heterogeneity knobs (max skew / max delay / min
+    participation).  ``faults`` is an optional named axis of
+    :class:`repro.scenarios.faults.FaultPlan` values (DESIGN.md §15);
+    entry rows record the fault mode + fraction."""
+    from repro.scenarios import faults as faults_mod
+
     prof_axis: Sequence[tuple[str, WorkerProfile | None]]
     prof_axis = profiles if profiles is not None else [("iid", None)]
-    rows, entries, profs = [], [], []
+    # a None member of an explicit faults axis is the control cell — it
+    # canonicalizes to the inert plan so the axis stacks (every member of a
+    # stacked axis must share one pytree structure)
+    fault_axis = ([(n, p if p is not None else faults_mod.fault_none())
+                   for n, p in faults]
+                  if faults is not None else [("none", None)])
+    rows, entries, profs, plans = [], [], [], []
     for name, scn in named_scenarios:
         for alpha in alphas:
             for seed in seeds:
                 for pname, prof in prof_axis:
-                    rows.append((scn, float(alpha), int(seed)))
-                    profs.append(prof)
-                    entries.append(GridEntry(
-                        scenario=name, alpha=float(alpha), seed=int(seed),
-                        profile=pname, **profile_knobs(prof)))
+                    for fname, plan in fault_axis:
+                        rows.append((scn, float(alpha), int(seed)))
+                        profs.append(prof)
+                        plans.append(plan)
+                        entries.append(GridEntry(
+                            scenario=name, alpha=float(alpha), seed=int(seed),
+                            profile=pname, **profile_knobs(prof),
+                            **faults_mod.fault_knobs(plan)))
     if not rows:
         raise ValueError("empty grid")
     stacked = _stack_axis("scenarios", [r[0] for r in rows])
@@ -373,4 +396,8 @@ def expand_grid(
     stacked_prof = None
     if profiles is not None:
         stacked_prof = _stack_axis("profiles", profs)
-    return CampaignGrid(stacked, alpha, seed, entries, stacked_prof)
+    stacked_fault = None
+    if faults is not None:
+        stacked_fault = _stack_axis("faults", plans)
+    return CampaignGrid(stacked, alpha, seed, entries, stacked_prof,
+                        stacked_fault)

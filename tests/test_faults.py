@@ -1,0 +1,275 @@
+"""Fault-domain robustness (DESIGN.md §15): the FaultPlan axis, the
+sanitize stage, and the static off-state guarantees.
+
+Three contracts are pinned here:
+
+* **quarantine** — every registered baseline aggregator and every guard
+  backend, fed a batch with an all-NaN row under ``sanitize="quarantine"``,
+  returns a finite ξ and reports the poisoned row dead (``alive=False``,
+  excluded from ``n_alive``);
+* **fault plans** — schedule semantics (start/period), the top-rank victim
+  convention (faults hit honest workers while Byzantine take the bottom),
+  and per-mode corruption shapes, with mode 0 bit-identical to no plan;
+* **off-state gating** — ``sanitize="off"`` traces contain no finiteness
+  machinery (no-footprint jaxpr check), and an armed-but-inert plan /
+  sanitize-on-clean-data run reproduces the ungated results exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import aggregator_names
+from repro.core.solver import Problem, SolverConfig, make_aggregator, run_sgd
+from repro.data.problems import make_quadratic_problem
+from repro.scenarios import (
+    ScenarioAdversary,
+    apply_fault_plan,
+    expand_grid,
+    fault_bitflip,
+    fault_garbage,
+    fault_inf_rows,
+    fault_nan_rows,
+    fault_none,
+    fault_rows,
+    make_fault_plan,
+    run_campaign,
+    scenario_static,
+)
+from repro.scenarios.faults import FAULT_TABLE, fault_id
+
+GUARD_BACKENDS = ("dense", "fused", "dp_exact", "dp_sketch")
+M, D = 8, 12
+
+
+def _problem(d: int = D) -> Problem:
+    zero = jnp.zeros((d,))
+    return Problem(d=d, f=lambda x: 0.0, grad=lambda x: zero,
+                   stoch_grad=lambda k, x: zero, x1=zero, x_star=zero,
+                   D=10.0, V=1.0)
+
+
+def _step_once(cfg: SolverConfig, grads: jax.Array):
+    state0, step = make_aggregator(_problem(grads.shape[1]), cfg)
+    zero = jnp.zeros((grads.shape[1],))
+    _, xi, n_alive, alive = step(state0, grads, zero, zero)
+    return np.asarray(xi), int(n_alive), np.asarray(alive)
+
+
+def _nan_row_batch(poison: int = 2) -> jax.Array:
+    g = 0.1 + 0.05 * jax.random.normal(jax.random.PRNGKey(0), (M, D))
+    return g.at[poison].set(jnp.nan)
+
+
+class TestQuarantineContract:
+    """One all-NaN row: finite ξ, poisoned row dead — for *every* rule."""
+
+    @pytest.mark.parametrize("name", aggregator_names())
+    def test_baseline_aggregators(self, name):
+        cfg = SolverConfig(m=M, T=1, eta=0.1, alpha=0.25, aggregator=name,
+                           attack="none", sanitize="quarantine")
+        xi, n_alive, alive = _step_once(cfg, _nan_row_batch())
+        assert np.all(np.isfinite(xi)), name
+        assert not alive[2], name
+        assert n_alive == M - 1, name
+
+    @pytest.mark.parametrize("backend", GUARD_BACKENDS)
+    def test_guard_backends(self, backend):
+        cfg = SolverConfig(m=M, T=1, eta=0.1, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="none",
+                           guard_backend=backend, sanitize="quarantine")
+        xi, n_alive, alive = _step_once(cfg, _nan_row_batch())
+        assert np.all(np.isfinite(xi)), backend
+        assert not alive[2], backend
+        assert n_alive == M - 1, backend
+
+    @pytest.mark.parametrize("backend", GUARD_BACKENDS)
+    def test_guard_kill_is_permanent(self, backend):
+        """A quarantined worker stays dead on later clean steps — the
+        carried alive mask closes the reporting-mask pass-through."""
+        cfg = SolverConfig(m=M, T=4, eta=0.1, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="none",
+                           guard_backend=backend, sanitize="quarantine")
+        state, step = make_aggregator(_problem(), cfg)
+        zero = jnp.zeros((D,))
+        state, _, _, alive = step(state, _nan_row_batch(), zero, zero)
+        assert not np.asarray(alive)[2]
+        clean = 0.1 + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (M, D))
+        state, xi, n_alive, alive = step(state, clean, zero, zero)
+        assert not np.asarray(alive)[2], backend
+        assert int(n_alive) == M - 1, backend
+        assert np.all(np.isfinite(np.asarray(xi)))
+
+    def test_inf_row_and_partial_nan(self):
+        """±Inf rows and a single poisoned entry quarantine identically."""
+        for backend in ("dense", "fused"):
+            cfg = SolverConfig(m=M, T=1, eta=0.1, alpha=0.25,
+                               aggregator="byzantine_sgd", attack="none",
+                               guard_backend=backend, sanitize="quarantine")
+            g = 0.1 + jnp.zeros((M, D))
+            g = g.at[1].set(jnp.inf).at[5, 7].set(-jnp.inf)
+            xi, n_alive, alive = _step_once(cfg, g)
+            assert np.all(np.isfinite(xi))
+            assert not alive[1] and not alive[5]
+            assert n_alive == M - 2
+
+    def test_bad_sanitize_value_raises(self):
+        cfg = SolverConfig(m=M, T=1, eta=0.1, alpha=0.25, aggregator="mean",
+                           attack="none", sanitize="drop")
+        with pytest.raises(ValueError, match="sanitize"):
+            make_aggregator(_problem(), cfg)
+
+
+class TestFaultPlan:
+    def test_mode_table_and_ids(self):
+        assert FAULT_TABLE[0] == "none"
+        for i, name in enumerate(FAULT_TABLE):
+            assert fault_id(name) == i
+        with pytest.raises(KeyError, match="unknown"):
+            fault_id("rowhammer")
+
+    def test_schedule_and_top_rank_victims(self):
+        plan = fault_nan_rows(0.25, start_step=3, period=2)
+        rank = jnp.arange(M)
+        # before start: nobody; at start and every period after: top 2 ranks
+        assert not np.any(fault_rows(plan, rank, jnp.int32(2)))
+        hit = np.asarray(fault_rows(plan, rank, jnp.int32(3)))
+        assert hit.tolist() == [False] * 6 + [True] * 2
+        assert not np.any(fault_rows(plan, rank, jnp.int32(4)))
+        assert np.any(fault_rows(plan, rank, jnp.int32(5)))
+
+    def test_mode_none_is_bit_identical(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (M, D))
+        out = apply_fault_plan(fault_none(), jax.random.PRNGKey(1), g,
+                               jnp.arange(M), jnp.int32(0))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+
+    def test_corruption_shapes_per_mode(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (M, D))
+        rank, k = jnp.arange(M), jnp.int32(0)
+        key = jax.random.PRNGKey(1)
+
+        nan = np.asarray(apply_fault_plan(fault_nan_rows(0.25), key, g, rank, k))
+        assert np.all(np.isnan(nan[6:])) and np.all(np.isfinite(nan[:6]))
+
+        inf = np.asarray(apply_fault_plan(fault_inf_rows(0.25), key, g, rank, k))
+        assert np.all(np.isinf(inf[6:]))
+        assert np.any(inf[6:] > 0) and np.any(inf[6:] < 0)
+
+        mag = 1e20
+        garb = np.asarray(apply_fault_plan(
+            fault_garbage(0.25, magnitude=mag), key, g, rank, k))
+        assert np.all(np.isfinite(garb))  # garbage is the filter's job
+        assert np.max(np.abs(garb[6:])) > 1e10
+        np.testing.assert_array_equal(garb[:6], np.asarray(g)[:6])
+
+        flip = np.asarray(apply_fault_plan(fault_bitflip(0.25), key, g, rank, k))
+        np.testing.assert_array_equal(flip[:6], np.asarray(g)[:6])
+        assert np.all(flip[6:] != np.asarray(g)[6:])  # some bit changed
+
+    def test_faults_hit_honest_workers(self):
+        """Victim region (top ranks) is disjoint from the Byzantine set
+        (bottom ranks) until the fractions overlap."""
+        adv = ScenarioAdversary(scenario=scenario_static("sign_flip"),
+                                alpha=jnp.float32(0.25))
+        rank = jnp.arange(M)
+        byz = np.asarray(adv.mask_at(rank, jnp.int32(1)))
+        hit = np.asarray(fault_rows(fault_nan_rows(0.25), rank, jnp.int32(1)))
+        assert not np.any(byz & hit)
+
+
+class TestOffStateGating:
+    def test_sanitize_off_has_no_finiteness_footprint(self):
+        """The default trace must not contain the sanitize machinery."""
+        zero = jnp.zeros((D,))
+        for agg, backend in [("mean", "dense"), ("byzantine_sgd", "dense"),
+                             ("byzantine_sgd", "fused"),
+                             ("byzantine_sgd", "dp_exact"),
+                             ("byzantine_sgd", "dp_sketch")]:
+            cfg = SolverConfig(m=M, T=4, eta=0.1, alpha=0.25, aggregator=agg,
+                               attack="none", guard_backend=backend)
+            state0, step = make_aggregator(_problem(), cfg)
+            jaxpr = str(jax.make_jaxpr(step)(
+                state0, jnp.zeros((M, D)), zero, zero))
+            assert "is_finite" not in jaxpr, (agg, backend)
+
+    def test_no_plan_has_no_fault_footprint(self):
+        quad = make_quadratic_problem(d=D, sigma=1.0, L=8.0, V=1.0, seed=1)
+        cfg = SolverConfig(m=M, T=8, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip")
+        jaxpr = str(jax.make_jaxpr(
+            lambda k: run_sgd(quad, cfg, k).x_final)(jax.random.PRNGKey(0)))
+        assert "is_finite" not in jaxpr
+
+    def test_inert_plan_matches_no_plan(self):
+        """faults=fault_none() reproduces faults=None bit-for-bit."""
+        quad = make_quadratic_problem(d=D, sigma=1.0, L=8.0, V=1.0, seed=1)
+        cfg = SolverConfig(m=M, T=20, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip")
+        key = jax.random.PRNGKey(7)
+        adv = lambda plan: ScenarioAdversary(
+            scenario=scenario_static("sign_flip"), alpha=jnp.float32(0.25),
+            faults=plan)
+        ref = run_sgd(quad, cfg, key, adversary=adv(None))
+        armed = run_sgd(quad, cfg, key, adversary=adv(fault_none()))
+        np.testing.assert_array_equal(np.asarray(ref.x_final),
+                                      np.asarray(armed.x_final))
+
+    @pytest.mark.parametrize("backend", GUARD_BACKENDS)
+    def test_sanitize_on_clean_data_matches_off(self, backend):
+        """With all-finite inputs the quarantine changes nothing."""
+        quad = make_quadratic_problem(d=D, sigma=1.0, L=8.0, V=1.0, seed=1)
+        key = jax.random.PRNGKey(7)
+        res = {}
+        for mode in ("off", "quarantine"):
+            cfg = SolverConfig(m=M, T=20, eta=0.05, alpha=0.25,
+                               aggregator="byzantine_sgd",
+                               attack="sign_flip", guard_backend=backend,
+                               sanitize=mode)
+            res[mode] = np.asarray(run_sgd(quad, cfg, key).x_final)
+        np.testing.assert_allclose(res["quarantine"], res["off"],
+                                   rtol=1e-6, atol=1e-7)
+
+
+class TestCampaignFaultAxis:
+    def test_grid_stacks_and_records_fault_knobs(self):
+        grid = expand_grid(
+            [("static", scenario_static("sign_flip"))], [0.25], [0, 1],
+            faults=[("none", None), ("nan", fault_nan_rows(0.25))],
+        )
+        assert grid.n_runs == 4
+        assert grid.faults is not None
+        # entries record the plan's *mode*, not the axis label
+        assert [e.fault for e in grid.rows] == ["none", "nan_rows"] * 2
+        assert [e.fault_frac for e in grid.rows] == [0.0, 0.25] * 2
+        # no faults argument → no stacked axis, entries record "none"
+        plain = expand_grid([("static", scenario_static("sign_flip"))],
+                            [0.25], [0])
+        assert plain.faults is None
+        assert plain.rows[0].fault == "none"
+
+    def test_campaign_cell_finite_under_nan_attack(self):
+        """One jitted campaign over a fault axis: every leaderboard row
+        finite, realized α reflects the quarantined victims."""
+        quad = make_quadratic_problem(d=D, sigma=1.0, L=8.0, V=1.0, seed=1)
+        cfg = SolverConfig(m=M, T=20, eta=0.05, alpha=0.25,
+                           aggregator="byzantine_sgd", attack="sign_flip",
+                           sanitize="quarantine")
+        grid = expand_grid(
+            [("static", scenario_static("sign_flip"))], [0.125], [0],
+            faults=[("none", fault_none()),
+                    ("nan", fault_nan_rows(0.25)),
+                    ("inf", fault_inf_rows(0.25, period=2))],
+        )
+        result = run_campaign(quad, cfg, grid, ["byzantine_sgd", "mean"],
+                              backends=["dense", "fused"])
+        for name, stats in result.stats.items():
+            gaps = np.asarray(stats.gap_final)
+            assert np.all(np.isfinite(gaps)), name
+        # fault victims count toward the realized ever-Byzantine count
+        n_ever = np.asarray(result.stats["byzantine_sgd@dense"].n_byz_ever)
+        assert n_ever[1] > n_ever[0]
+        # ...so the sanitizer's kills never read as wrongly-filtered honest
+        # workers
+        efg = np.asarray(result.stats["byzantine_sgd@dense"].ever_filtered_good)
+        assert not np.any(efg)
